@@ -1,0 +1,50 @@
+"""Paper Fig 4: per-bitmap compression profiles (1 - C/N), k=4.
+
+Claim checked: after Lex/Gray sorting, leading bitmaps compress best and the
+compressibility decays monotonically across the concatenated bitmap list —
+while Random-sort shows no leading-bitmap advantage.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import BitmapIndex, lex_sort, random_sort
+from repro.core import synth
+
+from .common import emit
+
+
+def _profile(table, cards, perm, k=4):
+    idx = BitmapIndex.build(table[perm], k=k, cards=cards,
+                            apply_heuristic=False)
+    n_words = -(-len(table) // 32)
+    prof = np.concatenate([c.bitmap_sizes() / n_words for c in idx.columns])
+    return 1.0 - prof  # 1 - C/N per bitmap
+
+
+def _monotonicity(p):
+    """Fraction of adjacent pairs that do not increase (1.0 = monotone)."""
+    return float(np.mean(np.diff(p) <= 1e-9)) if len(p) > 1 else 1.0
+
+
+def run():
+    rng = np.random.default_rng(0)
+    t = synth.zipf_table(8449, 4, s=1.0, card=1400, rng=rng)
+    table, _ = synth.factorize(t)
+    cards = [int(table[:, c].max()) + 1 for c in range(table.shape[1])]
+
+    lex = _profile(table, cards, lex_sort(table))
+    rnd = _profile(table, cards, random_sort(table, rng))
+    emit("fig4_zipf_lex", 0.0,
+         f"first={lex[0]:.3f};last={lex[-1]:.3f};head_minus_tail="
+         f"{lex[:8].mean() - lex[-8:].mean():.3f}")
+    emit("fig4_zipf_randomsort", 0.0,
+         f"first={rnd[0]:.3f};last={rnd[-1]:.3f};head_minus_tail="
+         f"{rnd[:8].mean() - rnd[-8:].mean():.3f}")
+    emit("fig4_head_advantage_lex_over_randsort", 0.0,
+         f"lex_head={lex[:8].mean():.3f};rnd_head={rnd[:8].mean():.3f};"
+         f"lex_leads={bool(lex[:8].mean() > rnd[:8].mean())}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Paper Table 8 + Figs 6/7/8: block-wise sorting trade-off.
+
+Claims checked: block sort is faster to sort but yields bigger indexes and
+slower queries; the gap grows with the block count; k=1 vs k=2 flips the
+build-size/query-speed trade-off (paper: k=1→2 multiplies query time ~6x
+while halving size).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import BitmapIndex, block_sort, lex_sort
+from repro.core import synth
+
+from .common import emit
+
+
+def run(n: int = 200_000):
+    rng = np.random.default_rng(0)
+    t = np.stack([rng.integers(0, 7, n),
+                  (rng.pareto(1.5, n) * 40).astype(np.int64) % 2000,
+                  rng.integers(0, 40_000, n)], axis=1)
+    table, _ = synth.factorize(t)
+    table = table[rng.permutation(n)]
+
+    for k in (1, 2):
+        for label, nb in (("full", 1), ("5", 5), ("10", 10), ("500", 500),
+                          ("none", 0)):
+            t0 = time.perf_counter()
+            if nb == 0:
+                perm = np.arange(n)
+            else:
+                perm = block_sort(table, nb)
+            t_sort = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            idx = BitmapIndex.build(table[perm], k=k)
+            t_index = time.perf_counter() - t0
+
+            # Fig 8: 12 equality queries on the high-cardinality column
+            qvals = rng.integers(0, int(table[:, 2].max()) + 1, 12)
+            t0 = time.perf_counter()
+            hits = sum(len(idx.equality_rows(2, int(v))) for v in qvals)
+            t_query = (time.perf_counter() - t0) / 12
+
+            emit(f"tab8_blocks_{label}_k{k}", t_sort * 1e6,
+                 f"sort_s={t_sort:.2f};index_s={t_index:.2f};"
+                 f"size_words={idx.size_words};query_ms={t_query*1e3:.2f};hits={hits}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Paper Figs 2/3: sorting method × data distribution × dimensions.
+
+Reproduces, at 5k-fact scale (the paper's own synthetic scale):
+  * Fig 2a/b: Lex and Random-sort vs Random-shuffle, uniform & Zipf, d sweep;
+  * Fig 3a/b: Gray vs Lex (and Lex-Gray allocation), k=2.
+Claims checked: lex halves 1-D index size; benefit decays with d; Gray-vs-Lex
+gap is small (<~8% at d=1, <2% beyond 3 dims); random-sort only groups.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (BitmapIndex, ColumnEncoder, gray_sort, lex_sort,
+                        lex_sort_bits, random_shuffle, random_sort)
+from repro.core import synth
+
+from .common import emit, time_call
+
+
+def _index_size(table, k, perm=None, allocation="alpha"):
+    t = table if perm is None else table[perm]
+    return BitmapIndex.build(t, k=k, allocation=allocation,
+                             apply_heuristic=False).size_words
+
+
+def run(n: int = 5000, k: int = 2):
+    rng = np.random.default_rng(0)
+
+    # ---- Fig 2a/3a: uniform, d independent dims, r in {1, 2}
+    for r in (1, 2):
+        for d in (1, 2, 3, 4):
+            t = synth.uniform_table(n, d, r=r, rng=rng, permute_columns=False)
+            tb, _ = synth.factorize(t)
+            encs = [ColumnEncoder(int(tb[:, c].max()) + 1, k) for c in range(d)]
+            shuf = _index_size(tb, k, random_shuffle(tb, rng))
+            us = time_call(lex_sort, tb)
+            rows = {
+                "lex": _index_size(tb, k, lex_sort(tb)),
+                "randsort": _index_size(tb, k, random_sort(tb, rng)),
+                "gray": _index_size(tb, k, gray_sort(tb, encs)),
+                "lexgray": _index_size(tb, k, lex_sort_bits(tb, encs),
+                                       allocation="gray"),
+            }
+            for m, sz in rows.items():
+                emit(f"fig2a_uniform_r{r}_d{d}_{m}", us,
+                     f"rel_improvement={1 - sz / shuf:.3f}")
+
+    # ---- Fig 2b/3b: Zipf, skew sweep
+    for s in (0.5, 1.0, 1.5, 2.0):
+        for d in (1, 2, 3):
+            t = synth.zipf_table(n, d, s=s, card=300, rng=rng)
+            tb, _ = synth.factorize(t)
+            encs = [ColumnEncoder(int(tb[:, c].max()) + 1, k) for c in range(d)]
+            shuf = _index_size(tb, k, random_shuffle(tb, rng))
+            lex = _index_size(tb, k, lex_sort(tb))
+            gray = _index_size(tb, k, gray_sort(tb, encs))
+            rnds = _index_size(tb, k, random_sort(tb, rng))
+            us = time_call(lex_sort, tb)
+            emit(f"fig2b_zipf_s{s}_d{d}_lex", us, f"rel_improvement={1 - lex/shuf:.3f}")
+            emit(f"fig2b_zipf_s{s}_d{d}_randsort", us, f"rel_improvement={1 - rnds/shuf:.3f}")
+            emit(f"fig3b_zipf_s{s}_d{d}_gray_vs_lex", us,
+                 f"gray_gain_over_lex={1 - gray/max(lex,1):.4f}")
+
+
+if __name__ == "__main__":
+    run()

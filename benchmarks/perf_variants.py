@@ -1,0 +1,45 @@
+"""§Perf variant comparison table for the three hillclimbed cells."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results/dryrun"
+CELLS = [
+    ("qwen2-0.5b", "train_4k", "multi"),
+    ("arctic-480b", "train_4k", "multi"),
+    ("llama4-maverick-400b-a17b", "prefill_32k", "multi"),
+]
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+
+
+def run():
+    from .roofline import _param_counts, model_flops
+    counts = {}
+    print(f"{'cell':<46}{'tag':<22}{'comp_s':>8}{'mem_s':>8}{'coll_s':>8}"
+          f"{'dom':>6}{'args+temp':>10}{'roofl%':>8}")
+    for arch, shape, mesh in CELLS:
+        if arch not in counts:
+            counts[arch] = _param_counts(arch)
+        rows = []
+        for p in sorted(RESULTS.glob(f"{arch}__{shape}__{mesh}*.json")):
+            rec = json.loads(p.read_text())
+            if rec.get("status") != "ok":
+                continue
+            t = (rec["hlo"]["flops"] / PEAK, rec["hlo"]["bytes"] / HBM,
+                 rec["link_bytes"] / LINK)
+            mf = model_flops(arch, shape, rec["kind"], counts[arch]) / rec["n_devices"]
+            frac = (mf / PEAK) / max(t)
+            gib = (rec["memory_analysis"].get("argument_size_in_bytes", 0)
+                   + rec["memory_analysis"].get("temp_size_in_bytes", 0)) / 2**30
+            rows.append((rec.get("tag", "baseline"), t, gib, frac))
+        rows.sort(key=lambda r: (r[0] != "baseline", r[0]))
+        for tag, t, gib, frac in rows:
+            dom = ["comp", "mem", "coll"][t.index(max(t))]
+            print(f"{arch + '/' + shape + '/' + mesh:<46}{tag:<22}"
+                  f"{t[0]:>8.2f}{t[1]:>8.2f}{t[2]:>8.2f}{dom:>6}"
+                  f"{gib:>9.1f}G{100 * frac:>7.2f}%")
+
+
+if __name__ == "__main__":
+    run()

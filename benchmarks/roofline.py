@@ -1,0 +1,147 @@
+"""Roofline builder: dry-run JSONs -> per-cell three-term analysis.
+
+    compute term    = HLO_FLOPs_per_dev / peak_FLOPs        (197 TFLOP/s bf16)
+    memory term     = HLO_bytes_per_dev / HBM_bw            (819 GB/s)
+    collective term = link_bytes_per_dev / link_bw          (50 GB/s ICI)
+
+MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (prefill/decode); the
+ratio MODEL_FLOPS/HLO_FLOPs exposes remat/dispatch/padding waste.  The
+dominant term is the bottleneck the §Perf loop iterates on.
+
+Writes benchmarks/results/roofline.csv and prints the table.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+LINK_BW = 50e9             # B/s / link
+
+_REPO = Path(__file__).resolve().parent.parent
+RESULTS = _REPO / "benchmarks/results/dryrun"
+
+
+def _param_counts(arch: str) -> Dict[str, float]:
+    """Total and active param counts from the abstract param tree."""
+    import jax
+    from repro.configs import get_config
+    from repro.models.transformer import LM
+    cfg = get_config(arch)
+    model = LM(cfg)
+    aparams = model.abstract_params()
+    total = active = 0.0
+
+    def visit(path, leaf):
+        nonlocal total, active
+        n = float(np.prod(leaf.shape))
+        total += n
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", ""))) for p in path)
+        if "moe" in key and any(key.endswith(s) for s in ("wi", "wg", "wo")):
+            active += n * cfg.moe.top_k / cfg.moe.n_experts
+        else:
+            active += n
+    jax.tree_util.tree_map_with_path(visit, aparams)
+    return {"total": total, "active": active}
+
+
+def model_flops(arch: str, shape_name: str, kind: str, counts) -> float:
+    from repro.configs import SHAPES, get_config
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    if kind == "decode":
+        tokens = shape.global_batch  # one token per sequence
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    mult = 6.0 if kind == "train" else 2.0
+    # embedding rows are lookups, not matmuls: subtract the embed table from
+    # the active count, then add the unembed matmul (2·T·D·V) explicitly
+    n_embed = cfg.vocab * cfg.d_model
+    n = counts["active"] - n_embed * (1 if cfg.tie_embeddings else 2)
+    flops = mult * n * tokens
+    flops += (3.0 if kind == "train" else 1.0) * 2.0 * tokens * n_embed
+    return flops
+
+
+def load_cells(tag: Optional[str] = "baseline"):
+    cells = []
+    for p in sorted(RESULTS.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if tag is not None and rec.get("tag", "baseline") != tag:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def analyze(rec, counts_cache: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    arch = rec["arch"]
+    if arch not in counts_cache:
+        counts_cache[arch] = _param_counts(arch)
+    counts = counts_cache[arch]
+    t_comp = rec["hlo"]["flops"] / PEAK_FLOPS
+    t_mem = rec["hlo"]["bytes"] / HBM_BW
+    t_coll = rec["link_bytes"] / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(arch, rec["shape"], rec["kind"], counts)
+    mf_dev = mf / rec["n_devices"]
+    useful = mf_dev / max(rec["hlo"]["flops"], 1.0)
+    # roofline fraction: useful model flops per step / (peak x step time bound)
+    step_time = max(terms.values())
+    frac = (mf_dev / PEAK_FLOPS) / step_time if step_time > 0 else 0.0
+    return {
+        "arch": arch, "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"], "tag": rec.get("tag", "baseline"),
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dom, "model_flops_ratio": useful,
+        "roofline_fraction": frac,
+        "hbm_args_gib": rec["memory_analysis"].get("argument_size_in_bytes", 0) / 2**30,
+        "hbm_temp_gib": rec["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30,
+        "fits_16g": (rec["memory_analysis"].get("argument_size_in_bytes", 0)
+                     + rec["memory_analysis"].get("temp_size_in_bytes", 0)) < 16 * 2**30,
+    }
+
+
+def run(tag: Optional[str] = "baseline", csv_name: str = "roofline.csv"):
+    counts_cache: Dict = {}
+    rows = []
+    skips = []
+    for rec in load_cells(tag):
+        if rec.get("status") == "skipped":
+            skips.append(rec)
+            continue
+        row = analyze(rec, counts_cache)
+        if row:
+            rows.append(row)
+    out = _REPO / "benchmarks/results" / csv_name
+    if rows:
+        cols = list(rows[0].keys())
+        lines = [",".join(cols)]
+        for r in rows:
+            lines.append(",".join(
+                f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
+                for c in cols))
+        out.write_text("\n".join(lines) + "\n")
+    hdr = (f"{'arch':<26}{'shape':<12}{'mesh':<7}{'dom':<11}"
+           f"{'comp_s':>9}{'mem_s':>9}{'coll_s':>9}{'useful':>8}{'roofl%':>8}{'fits':>6}")
+    print(hdr)
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        print(f"{r['arch']:<26}{r['shape']:<12}{r['mesh']:<7}{r['dominant']:<11}"
+              f"{r['t_compute_s']:>9.4f}{r['t_memory_s']:>9.4f}"
+              f"{r['t_collective_s']:>9.4f}{r['model_flops_ratio']:>8.2f}"
+              f"{100*r['roofline_fraction']:>7.1f}%"
+              f"{'Y' if r['fits_16g'] else 'N':>6}")
+    for s in skips:
+        print(f"{s['arch']:<26}{s['shape']:<12}{s['mesh']:<7}SKIP: {s['reason'][:60]}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    run(tag=sys.argv[1] if len(sys.argv) > 1 else "baseline")

@@ -1,0 +1,68 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with the
+bitmap-indexed data pipeline, fault-tolerant supervision, checkpointing, and
+(optionally) EWAH gradient compression.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--compress 0.25]
+
+On this CPU container the default model is ~14M params (same qwen2 family,
+scaled) so a few hundred steps complete in minutes; pass --full-100m on a
+real machine for the 100M variant.
+"""
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import BitmapDataPipeline, Corpus
+from repro.models.transformer import LM
+from repro.train.loop import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--compress", type=float, default=None,
+                    help="gradient keep-ratio (e.g. 0.25); off by default")
+    ap.add_argument("--full-100m", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--inject-failure", type=int, default=None)
+    args = ap.parse_args()
+
+    base = get_config("qwen2-0.5b")
+    if args.full_100m:
+        cfg = dataclasses.replace(base, name="qwen2-100m", n_layers=12,
+                                  d_model=512, n_heads=8, n_kv_heads=2,
+                                  head_dim=64, d_ff=2048, vocab=32_000)
+    else:
+        cfg = dataclasses.replace(base, name="qwen2-14m", n_layers=4,
+                                  d_model=256, n_heads=4, n_kv_heads=2,
+                                  head_dim=64, d_ff=1024, vocab=8_000)
+    model = LM(cfg)
+
+    corpus = Corpus.synthetic(n_docs=2048, doc_len=256, vocab=cfg.vocab)
+    pipe = BitmapDataPipeline(corpus, sort=True)
+    stats = pipe.index_stats()
+    print(f"[data] bitmap index: {stats['index_words']:.0f} words "
+          f"(unsorted would be {stats['index_words_unsorted']:.0f}; "
+          f"sorting gain {stats['compression_gain']:.2f}x)")
+    n = pipe.select(conj={"quality": 2})          # bitmap-filtered training set
+    print(f"[data] selected {n} docs via bitmap predicate quality==2")
+
+    tcfg = TrainConfig(steps=args.steps, batch_size=8, seq_len=128,
+                       ckpt_dir=args.ckpt_dir, ckpt_every=100,
+                       grad_compression=args.compress, lr=3e-4)
+    t0 = time.time()
+    params, report = train(model, tcfg, pipe,
+                           inject_failure_at=args.inject_failure)
+    dt = time.time() - t0
+    losses = np.asarray(report.losses)
+    print(f"[train] {report.steps_run} steps in {dt:.0f}s "
+          f"({dt / max(report.steps_run, 1):.2f}s/step), "
+          f"restarts={report.restarts}, stragglers={len(report.straggler_events)}")
+    print(f"[train] loss {losses[:10].mean():.3f} -> {losses[-10:].mean():.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from .base import ModelConfig, ShapeConfig, SHAPES, shape_applicable
+from .archs import ARCHS, get_config
+from . import input_specs
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "shape_applicable",
+           "ARCHS", "get_config", "input_specs"]

@@ -1,0 +1,56 @@
+"""ShapeDtypeStruct input stand-ins per (arch × shape) — no allocation.
+
+train/prefill : {'tokens': (B, S_text) i32 [, 'frontend': (B, P, D) bf16]}
+decode        : serve_step inputs — cache spec (S_max = shape.seq_len) +
+                {'tokens': (B, 1) i32}
+Text length accounts for stub frontend positions so *total* model positions
+equal the assigned seq_len (vlm: patches + text; whisper enc positions are a
+separate 1500-frame encoder input, decoder gets the full seq_len).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode as dec
+from repro.models.transformer import LM
+
+from .base import ModelConfig, ShapeConfig
+
+
+def text_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if cfg.enc_dec:
+        return shape.seq_len
+    return shape.seq_len - cfg.n_frontend_positions
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B = shape.global_batch
+    S = text_len(cfg, shape)
+    out: Dict[str, Any] = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.n_frontend_positions:
+        out["frontend"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_frontend_positions, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def decode_specs(model: LM, shape: ShapeConfig) -> Tuple[Dict[str, Any], Any]:
+    B = shape.global_batch
+    cache = dec.cache_spec(model, B, shape.seq_len)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return cache, tokens
+
+
+def concrete_batch(cfg: ModelConfig, shape: ShapeConfig, rng=None):
+    """Real arrays matching batch_specs (smoke tests / examples)."""
+    import numpy as np
+    rng = rng or np.random.default_rng(0)
+    specs = batch_specs(cfg, shape)
+    out = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, size=specs["tokens"].shape), jnp.int32)}
+    if "frontend" in specs:
+        out["frontend"] = jnp.asarray(
+            rng.standard_normal(specs["frontend"].shape), jnp.bfloat16)
+    return out

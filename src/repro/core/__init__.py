@@ -1,0 +1,28 @@
+"""Core bitmap-index library: the paper's contribution.
+
+EWAH word-aligned compression, WAH baseline, k-of-N encoding with alphabetic
+(Algorithm 2) and Gray-code allocation, fact-table sorting (lexicographic,
+Gray-code, random-sort grouping, block-wise), index construction (Algorithm 3
+semantics) and the query engine.
+"""
+from .bitpack import pack_bits, unpack_bits, pack_matrix
+from .ewah import EWAH, binary_op, and_many, or_many
+from .wah import WAH
+from .encoding import ColumnEncoder, bitmaps_needed, choose_k, unrank_lex, revolving_door
+from .sorting import (
+    lex_sort, gray_sort, lex_sort_bits, random_sort, random_shuffle,
+    block_sort, order_columns, order_columns_freq_aware,
+)
+from .index import BitmapIndex, ColumnIndex, concat_bitmaps
+from . import query
+from . import synth
+
+__all__ = [
+    "pack_bits", "unpack_bits", "pack_matrix",
+    "EWAH", "binary_op", "and_many", "or_many", "WAH",
+    "ColumnEncoder", "bitmaps_needed", "choose_k", "unrank_lex", "revolving_door",
+    "lex_sort", "gray_sort", "lex_sort_bits", "random_sort", "random_shuffle",
+    "block_sort", "order_columns", "order_columns_freq_aware",
+    "BitmapIndex", "ColumnIndex", "concat_bitmaps",
+    "query", "synth",
+]

@@ -1,0 +1,423 @@
+"""EWAH (Enhanced Word-Aligned Hybrid) compressed bitmaps — faithful codec.
+
+Paper layout (Aouiche, Lemire & Kaser 2008, §2.3), 32-bit words:
+
+  * the stream is a sequence of segments, each = 1 *marker word* followed by
+    ``nlit`` verbatim ("dirty"/impropre) words;
+  * marker word bit layout (LSB first):
+      bit 0        : clean-word type of the run (0 = 0x00000000, 1 = 0xFFFFFFFF)
+      bits 1..16   : number of clean words in the run         (16 bits, max 65535)
+      bits 17..31  : number of literal words after the run    (15 bits, max 32767)
+  * a bitmap always starts with a marker word (paper footnote: purely technical).
+
+Logical ops run in O(runs_1 + runs_2) marker steps with vectorized literal
+overlaps, realizing Lemma 2: clean-zero runs skip literal payloads entirely.
+"""
+from __future__ import annotations
+
+import numpy as np
+from dataclasses import dataclass
+from typing import Iterator, List, Sequence, Tuple
+
+WORD_BITS = 32
+WORD_DTYPE = np.uint32
+ALL_ONES = np.uint32(0xFFFFFFFF)
+MAX_CLEAN = (1 << 16) - 1  # clean-run words per marker
+MAX_LIT = (1 << 15) - 1    # literal words per marker
+
+_CLEAN_SHIFT = 1
+_LIT_SHIFT = 17
+
+
+def make_marker(clean_bit: int, n_clean: int, n_lit: int) -> int:
+    assert 0 <= n_clean <= MAX_CLEAN and 0 <= n_lit <= MAX_LIT
+    return (clean_bit & 1) | (n_clean << _CLEAN_SHIFT) | (n_lit << _LIT_SHIFT)
+
+
+def parse_marker(word: int) -> Tuple[int, int, int]:
+    word = int(word)
+    return word & 1, (word >> _CLEAN_SHIFT) & MAX_CLEAN, (word >> _LIT_SHIFT) & MAX_LIT
+
+
+# ---------------------------------------------------------------------------
+# Segment streams.  A segment is ('run', bit, count) or ('lit', words-array).
+# Canonical EWAH emission happens in one place: ``_emit``.
+# ---------------------------------------------------------------------------
+
+Run = Tuple[str, int, int]          # ('run', bit, count)
+Lit = Tuple[str, np.ndarray]        # ('lit', words)
+
+
+def _split_literal(words: np.ndarray) -> Iterator:
+    """Split a word array into maximal clean runs / literal stretches."""
+    n = len(words)
+    if n == 0:
+        return
+    is_clean = (words == 0) | (words == ALL_ONES)
+    # group key: -1 literal, 0 clean-zero, 1 clean-one
+    key = np.where(is_clean, (words == ALL_ONES).astype(np.int8), np.int8(-1))
+    bounds = np.flatnonzero(key[1:] != key[:-1]) + 1
+    starts = np.concatenate(([0], bounds))
+    ends = np.concatenate((bounds, [n]))
+    for s, e in zip(starts, ends):
+        if key[s] < 0:
+            yield ("lit", words[s:e])
+        else:
+            yield ("run", int(key[s]), int(e - s))
+
+
+class EWAH:
+    """An EWAH-compressed bitmap over ``n_bits`` bits."""
+
+    __slots__ = ("words", "n_bits")
+
+    def __init__(self, words: np.ndarray, n_bits: int):
+        self.words = np.asarray(words, dtype=WORD_DTYPE)
+        self.n_bits = int(n_bits)
+
+    # -- stats ------------------------------------------------------------
+    @property
+    def size_words(self) -> int:
+        """Compressed size in 32-bit words (the paper's size unit)."""
+        return int(len(self.words))
+
+    @property
+    def size_bytes(self) -> int:
+        return self.size_words * 4
+
+    @property
+    def n_words_uncompressed(self) -> int:
+        return -(-self.n_bits // WORD_BITS)
+
+    def compression_factor(self) -> float:
+        """1 - C/N as plotted in the paper's Fig. 4 (→1 == well compressed)."""
+        n = max(self.n_words_uncompressed, 1)
+        return 1.0 - self.size_words / n
+
+    # -- construction -----------------------------------------------------
+    @classmethod
+    def from_words(cls, words: np.ndarray, n_bits: int) -> "EWAH":
+        """Compress a dense uint32 word array."""
+        words = np.asarray(words, dtype=WORD_DTYPE)
+        return cls(_emit(_split_literal(words)), n_bits)
+
+    @classmethod
+    def from_bool(cls, bits: np.ndarray) -> "EWAH":
+        from .bitpack import pack_bits
+        bits = np.asarray(bits, dtype=bool)
+        return cls.from_words(pack_bits(bits), len(bits))
+
+    @classmethod
+    def from_positions(cls, positions: np.ndarray, n_bits: int) -> "EWAH":
+        """Build directly from sorted set-bit positions — O(set bits)."""
+        positions = np.asarray(positions, dtype=np.int64)
+        if positions.size == 0:
+            return cls(_emit(iter([("run", 0, -(-n_bits // WORD_BITS))])), n_bits)
+        word_idx = positions >> 5
+        bit_val = np.uint32(1) << (positions & 31).astype(np.uint32)
+        # or-reduce duplicate word indices
+        uniq, inv = np.unique(word_idx, return_inverse=True)
+        vals = np.zeros(len(uniq), dtype=np.uint64)
+        np.bitwise_or.at(vals, inv, bit_val.astype(np.uint64))
+        vals = vals.astype(WORD_DTYPE)
+        n_words = -(-n_bits // WORD_BITS)
+
+        def segs():
+            prev_end = 0
+            # group consecutive word indices into stretches
+            brk = np.flatnonzero(np.diff(uniq) != 1) + 1
+            starts = np.concatenate(([0], brk))
+            ends = np.concatenate((brk, [len(uniq)]))
+            for s, e in zip(starts, ends):
+                gap = int(uniq[s]) - prev_end
+                if gap:
+                    yield ("run", 0, gap)
+                yield from _split_literal(vals[s:e])
+                prev_end = int(uniq[e - 1]) + 1
+            if prev_end < n_words:
+                yield ("run", 0, n_words - prev_end)
+
+        return cls(_emit(segs()), n_bits)
+
+    # -- decompression ----------------------------------------------------
+    def segments(self) -> Iterator:
+        """Yield canonical ('run', bit, count) / ('lit', words) segments."""
+        w = self.words
+        i = 0
+        n = len(w)
+        while i < n:
+            bit, n_clean, n_lit = parse_marker(w[i])
+            i += 1
+            if n_clean:
+                yield ("run", bit, n_clean)
+            if n_lit:
+                yield ("lit", w[i : i + n_lit])
+                i += n_lit
+
+    def to_words(self) -> np.ndarray:
+        out = np.empty(self.n_words_uncompressed, dtype=WORD_DTYPE)
+        pos = 0
+        for seg in self.segments():
+            if seg[0] == "run":
+                _, bit, cnt = seg
+                out[pos : pos + cnt] = ALL_ONES if bit else 0
+                pos += cnt
+            else:
+                lit = seg[1]
+                out[pos : pos + len(lit)] = lit
+                pos += len(lit)
+        assert pos == self.n_words_uncompressed, (pos, self.n_words_uncompressed)
+        return out
+
+    def to_bool(self) -> np.ndarray:
+        from .bitpack import unpack_bits
+        return unpack_bits(self.to_words(), self.n_bits)
+
+    def set_bits(self) -> np.ndarray:
+        """Sorted positions of true bits (query result row ids)."""
+        words = self.to_words()
+        nz = np.flatnonzero(words)
+        if nz.size == 0:
+            return np.empty(0, dtype=np.int64)
+        bits = ((words[nz, None] >> np.arange(32, dtype=np.uint32)) & 1).astype(bool)
+        offs = (nz[:, None] << 5) + np.arange(32)
+        pos = offs[bits]
+        return pos[pos < self.n_bits]
+
+    def count(self) -> int:
+        """Number of set bits (popcount), ignoring padding bits."""
+        if self.n_bits == 0:
+            return 0
+        words = self.to_words().copy()
+        pad = self.n_words_uncompressed * WORD_BITS - self.n_bits
+        if pad:
+            words[-1] &= np.uint32((1 << (32 - pad)) - 1)
+        return int(np.unpackbits(words.view(np.uint8)).sum())
+
+    # -- logical ops (compressed domain, Lemma 2) --------------------------
+    def __and__(self, other: "EWAH") -> "EWAH":
+        return binary_op(self, other, "and")
+
+    def __or__(self, other: "EWAH") -> "EWAH":
+        return binary_op(self, other, "or")
+
+    def __xor__(self, other: "EWAH") -> "EWAH":
+        return binary_op(self, other, "xor")
+
+    def andnot(self, other: "EWAH") -> "EWAH":
+        return binary_op(self, other, "andnot")
+
+    def __eq__(self, other) -> bool:
+        return (
+            isinstance(other, EWAH)
+            and self.n_bits == other.n_bits
+            and np.array_equal(self.to_words(), other.to_words())
+        )
+
+    def __repr__(self) -> str:
+        return f"EWAH(n_bits={self.n_bits}, words={self.size_words}/{self.n_words_uncompressed})"
+
+
+# ---------------------------------------------------------------------------
+# Canonical emitter: segment stream -> EWAH word stream.
+# ---------------------------------------------------------------------------
+
+def _emit(segs: Iterator) -> np.ndarray:
+    """Encode a (possibly non-canonical) segment stream into EWAH words.
+
+    Merges adjacent same-bit runs, re-splits literal arrays containing clean
+    words, and honours the MAX_CLEAN / MAX_LIT marker limits.
+    """
+    out: List[np.ndarray] = []
+    # pending state
+    run_bit, run_cnt = 0, 0
+    lits: List[np.ndarray] = []
+
+    def flush(next_run_bit=0):
+        nonlocal run_bit, run_cnt, lits
+        if run_cnt == 0 and not lits:
+            return
+        nlit_total = sum(len(a) for a in lits)
+        lit_cat = np.concatenate(lits) if lits else np.empty(0, WORD_DTYPE)
+        c, l = run_cnt, 0
+        # first marker carries as much of the run as fits, then literals
+        pos = 0
+        while True:
+            take_c = min(c, MAX_CLEAN)
+            c -= take_c
+            if c > 0:
+                out.append(np.array([make_marker(run_bit, take_c, 0)], WORD_DTYPE))
+                continue
+            take_l = min(nlit_total - pos, MAX_LIT)
+            out.append(np.array([make_marker(run_bit, take_c, take_l)], WORD_DTYPE))
+            if take_l:
+                out.append(lit_cat[pos : pos + take_l])
+                pos += take_l
+            if pos >= nlit_total:
+                break
+            # more literals: continue with empty run markers
+            run_bit = 0
+            c = 0
+        run_bit, run_cnt, lits = next_run_bit, 0, []
+
+    started = False
+    pending_run_open = True  # can still extend the run (no literals yet)
+    for seg in segs:
+        if seg[0] == "run":
+            _, bit, cnt = seg
+            if cnt <= 0:
+                continue
+            if pending_run_open and (run_cnt == 0 or bit == run_bit):
+                run_bit = bit if run_cnt == 0 else run_bit
+                run_cnt += cnt
+            else:
+                flush()
+                pending_run_open = True
+                run_bit, run_cnt = bit, cnt
+            started = True
+        else:
+            arr = np.asarray(seg[1], dtype=WORD_DTYPE)
+            if len(arr) == 0:
+                continue
+            # re-split: literal arrays may contain clean words
+            for sub in _split_literal(arr):
+                if sub[0] == "run":
+                    if pending_run_open and (run_cnt == 0 or sub[1] == run_bit):
+                        run_bit = sub[1] if run_cnt == 0 else run_bit
+                        run_cnt += sub[2]
+                    else:
+                        flush()
+                        pending_run_open = True
+                        run_bit, run_cnt = sub[1], sub[2]
+                else:
+                    lits.append(sub[1])
+                    pending_run_open = False
+            started = True
+    flush()
+    if not out or not started:
+        out = [np.array([make_marker(0, 0, 0)], WORD_DTYPE)]
+    return np.concatenate(out)
+
+
+# ---------------------------------------------------------------------------
+# Compressed-domain binary ops.
+# ---------------------------------------------------------------------------
+
+class _SegCursor:
+    """Cursor over a bitmap's canonical segments supporting partial takes."""
+
+    def __init__(self, bm: EWAH):
+        self._it = bm.segments()
+        self.kind = None   # 'run' | 'lit' | None (exhausted)
+        self.bit = 0
+        self.remaining = 0
+        self.lit: np.ndarray | None = None
+        self.lit_pos = 0
+        self._advance()
+
+    def _advance(self):
+        for seg in self._it:
+            if seg[0] == "run":
+                if seg[2] <= 0:
+                    continue
+                self.kind, self.bit, self.remaining = "run", seg[1], seg[2]
+                self.lit = None
+                return
+            else:
+                if len(seg[1]) == 0:
+                    continue
+                self.kind, self.lit, self.lit_pos = "lit", seg[1], 0
+                self.remaining = len(seg[1])
+                return
+        self.kind = None
+        self.remaining = 0
+
+    def take(self, n: int):
+        """Consume n words; return ('run', bit) or ('lit', words)."""
+        assert self.kind is not None and n <= self.remaining
+        if self.kind == "run":
+            res = ("run", self.bit, n)
+        else:
+            res = ("lit", self.lit[self.lit_pos : self.lit_pos + n])
+            self.lit_pos += n
+        self.remaining -= n
+        if self.remaining == 0:
+            self._advance()
+        return res
+
+
+_NPOP = {
+    "and": np.bitwise_and,
+    "or": np.bitwise_or,
+    "xor": np.bitwise_xor,
+    "andnot": lambda a, b: np.bitwise_and(a, np.bitwise_not(b)),
+}
+
+
+def _op_run_run(op: str, a: int, b: int) -> int:
+    if op == "and":
+        return a & b
+    if op == "or":
+        return a | b
+    if op == "xor":
+        return a ^ b
+    return a & (1 - b)
+
+
+def _op_run_lit(op: str, bit: int, lit: np.ndarray, lit_is_b: bool):
+    """Combine a clean run (value=bit) against literal words."""
+    if op == "and":
+        return ("lit", lit) if bit else ("run", 0)
+    if op == "or":
+        return ("run", 1) if bit else ("lit", lit)
+    if op == "xor":
+        return ("lit", np.bitwise_not(lit)) if bit else ("lit", lit)
+    # andnot: A & ~B
+    if lit_is_b:  # run is A
+        return ("lit", np.bitwise_not(lit)) if bit else ("run", 0)
+    else:         # run is B, lit is A
+        return ("run", 0) if bit else ("lit", lit)
+
+
+def binary_op(a: EWAH, b: EWAH, op: str) -> EWAH:
+    """Compressed-domain logical op in O(runs_a + runs_b) merge steps."""
+    assert a.n_bits == b.n_bits, (a.n_bits, b.n_bits)
+    ca, cb = _SegCursor(a), _SegCursor(b)
+
+    def segs():
+        while ca.kind is not None and cb.kind is not None:
+            n = min(ca.remaining, cb.remaining)
+            sa = ca.take(n)
+            sb = cb.take(n)
+            if sa[0] == "run" and sb[0] == "run":
+                yield ("run", _op_run_run(op, sa[1], sb[1]), n)
+            elif sa[0] == "run":
+                kind, val = _op_run_lit(op, sa[1], sb[1], lit_is_b=True)
+                yield (kind, val, n) if kind == "run" else (kind, val)
+            elif sb[0] == "run":
+                kind, val = _op_run_lit(op, sb[1], sa[1], lit_is_b=False)
+                yield (kind, val, n) if kind == "run" else (kind, val)
+            else:
+                yield ("lit", _NPOP[op](sa[1], sb[1]))
+
+    return EWAH(_emit(segs()), a.n_bits)
+
+
+def or_many(bitmaps: Sequence[EWAH]) -> EWAH:
+    """OR-reduce many bitmaps (tree order keeps intermediate results small)."""
+    assert bitmaps
+    items = list(bitmaps)
+    while len(items) > 1:
+        items = [
+            items[i] | items[i + 1] if i + 1 < len(items) else items[i]
+            for i in range(0, len(items), 2)
+        ]
+    return items[0]
+
+
+def and_many(bitmaps: Sequence[EWAH]) -> EWAH:
+    assert bitmaps
+    res = bitmaps[0]
+    for bm in bitmaps[1:]:
+        res = res & bm
+    return res

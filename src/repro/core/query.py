@@ -1,0 +1,57 @@
+"""Query engine over a BitmapIndex: equality / conjunction / disjunction.
+
+Queries translate to AND/OR over EWAH bitmaps (paper §2.1); for a k-of-N
+encoded column an equality predicate loads k bitmaps and ANDs them.
+A naive row-scan oracle is provided for tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import numpy as np
+
+from .ewah import EWAH, and_many, or_many
+from .index import BitmapIndex
+
+
+def equality(index: BitmapIndex, col: int, value_rank: int) -> EWAH:
+    return index.equality_bitmap(col, value_rank)
+
+
+def conjunction(index: BitmapIndex, predicates: Dict[int, int]) -> EWAH:
+    """AND of column == value predicates."""
+    bms = [index.equality_bitmap(c, v) for c, v in predicates.items()]
+    return and_many(bms)
+
+
+def disjunction(index: BitmapIndex, predicates: Dict[int, int]) -> EWAH:
+    bms = [index.equality_bitmap(c, v) for c, v in predicates.items()]
+    return or_many(bms)
+
+
+def in_set(index: BitmapIndex, col: int, value_ranks: Sequence[int]) -> EWAH:
+    """column IN (v1, v2, ...) as an OR of equality bitmaps."""
+    bms = [index.equality_bitmap(col, v) for v in value_ranks]
+    return or_many(bms)
+
+
+# -- oracles ---------------------------------------------------------------
+
+def naive_equality(table: np.ndarray, col: int, value_rank: int) -> np.ndarray:
+    return np.flatnonzero(np.asarray(table)[:, col] == value_rank)
+
+
+def naive_conjunction(table: np.ndarray, predicates: Dict[int, int]) -> np.ndarray:
+    table = np.asarray(table)
+    mask = np.ones(len(table), dtype=bool)
+    for c, v in predicates.items():
+        mask &= table[:, c] == v
+    return np.flatnonzero(mask)
+
+
+def naive_disjunction(table: np.ndarray, predicates: Dict[int, int]) -> np.ndarray:
+    table = np.asarray(table)
+    mask = np.zeros(len(table), dtype=bool)
+    for c, v in predicates.items():
+        mask |= table[:, c] == v
+    return np.flatnonzero(mask)

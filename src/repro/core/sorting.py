@@ -1,0 +1,135 @@
+"""Fact-table sorting methods (paper §3.2, §4.3, §4.4).
+
+A fact table here is an (n_rows, n_cols) integer array of *value ranks*
+(column values factorized in alphabetical order), so sorting by rank is
+sorting alphabetically, and — with Algorithm 2's alphabetic bitmap
+allocation — lexicographic table sort == lexicographic sort of index rows.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .encoding import ColumnEncoder
+
+MAX_GRAY_BITS = 8192  # guard: Gray sort materializes the row-bit matrix
+
+
+def lex_sort(table: np.ndarray, col_order: Optional[Sequence[int]] = None) -> np.ndarray:
+    """Return the row permutation of a lexicographic sort.
+
+    ``col_order[0]`` is the *primary* sort column (paper: d3d2d1 == highest-
+    cardinality column first when col_order = [2, 1, 0]).
+    """
+    table = np.asarray(table)
+    n, d = table.shape
+    order = list(range(d)) if col_order is None else list(col_order)
+    # np.lexsort: last key is primary
+    keys = tuple(table[:, c] for c in reversed(order))
+    return np.lexsort(keys)
+
+
+def _bit_matrix(table: np.ndarray, encoders: Sequence[ColumnEncoder],
+                col_order: Optional[Sequence[int]] = None) -> np.ndarray:
+    """(n, L_total) uint8 bit rows of the index under the given encoders."""
+    table = np.asarray(table)
+    n, d = table.shape
+    order = list(range(d)) if col_order is None else list(col_order)
+    L_total = sum(encoders[c].L for c in order)
+    if L_total > MAX_GRAY_BITS:
+        raise ValueError(
+            f"Gray sort materializes {L_total} bit columns > {MAX_GRAY_BITS}; "
+            "the paper likewise restricts Gray sorting to small indexes")
+    bits = np.zeros((n, L_total), dtype=np.uint8)
+    off = 0
+    for c in order:
+        enc = encoders[c]
+        codes = enc.codes(table[:, c])  # (n, k)
+        rows = np.repeat(np.arange(n), enc.k)
+        bits[rows, (codes + off).reshape(-1)] = 1
+        off += enc.L
+    return bits
+
+
+def _argsort_bit_rows(bits: np.ndarray) -> np.ndarray:
+    """Stable lexicographic argsort of 0/1 rows (MSB = column 0)."""
+    packed = np.packbits(bits, axis=1, bitorder="big")
+    keys = tuple(packed[:, i] for i in reversed(range(packed.shape[1])))
+    return np.lexsort(keys)
+
+
+def gray_sort(table: np.ndarray, encoders: Sequence[ColumnEncoder],
+              col_order: Optional[Sequence[int]] = None) -> np.ndarray:
+    """Row permutation of the Gray-code sort of index bit rows (paper §3.2).
+
+    Key identity: treating rows as Gray codes and ordering them equals the
+    lexicographic order of their prefix-XOR transforms u_j = b_1 ^ ... ^ b_j
+    (the paper's ``impair`` condition), so no B-tree is needed.
+    """
+    bits = _bit_matrix(table, encoders, col_order)
+    u = np.bitwise_xor.accumulate(bits, axis=1)
+    return _argsort_bit_rows(u)
+
+
+def lex_sort_bits(table: np.ndarray, encoders: Sequence[ColumnEncoder],
+                  col_order: Optional[Sequence[int]] = None) -> np.ndarray:
+    """Row permutation of the plain lexicographic sort of index bit rows."""
+    return _argsort_bit_rows(_bit_matrix(table, encoders, col_order))
+
+
+def random_sort(table: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """`sort --random-sort`: groups identical rows, random group order (O(n))."""
+    table = np.asarray(table)
+    _, inverse = np.unique(table, axis=0, return_inverse=True)
+    n_groups = int(inverse.max()) + 1 if len(inverse) else 0
+    group_key = rng.permutation(n_groups)
+    return np.argsort(group_key[inverse], kind="stable")
+
+
+def random_shuffle(table: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    return rng.permutation(len(table))
+
+
+def block_sort(table: np.ndarray, n_blocks: int,
+               col_order: Optional[Sequence[int]] = None) -> np.ndarray:
+    """Block-wise sort without merging (paper §4.4: split + sort + cat)."""
+    n = len(table)
+    perm = np.empty(n, dtype=np.int64)
+    bounds = np.linspace(0, n, n_blocks + 1).astype(np.int64)
+    for s, e in zip(bounds[:-1], bounds[1:]):
+        perm[s:e] = s + lex_sort(table[s:e], col_order)
+    return perm
+
+
+def order_columns(cards: Sequence[int], strategy: str = "card_desc") -> list:
+    """Column ordering strategies of §4.3.
+
+    'card_desc' — highest cardinality first (paper's d3d2d1);
+    'card_asc'  — lowest first (d1d2d3);
+    'freq_aware'— beyond-paper §4.3 remark: lead with the highest-cardinality
+                  column whose mean value frequency is >= one word (32), so the
+                  leading runs are at least word-long; ties by cardinality.
+    """
+    cards = list(cards)
+    idx = list(range(len(cards)))
+    if strategy == "card_desc":
+        return sorted(idx, key=lambda c: -cards[c])
+    if strategy == "card_asc":
+        return sorted(idx, key=lambda c: cards[c])
+    raise ValueError(strategy)
+
+
+def order_columns_freq_aware(table: np.ndarray, cards: Sequence[int],
+                             word_bits: int = 32) -> list:
+    """Put first the big-cardinality columns whose values still repeat >= w times.
+
+    Implements the paper's §4.3 closing remark ("une dimension n'ayant que des
+    valeurs avec une fréquence inférieure à 32 ne devrait sans doute pas servir
+    de base au tri") as an executable strategy.
+    """
+    n = len(table)
+    mean_freq = [n / max(c, 1) for c in cards]
+    eligible = [c for c in range(len(cards)) if mean_freq[c] >= word_bits]
+    rest = [c for c in range(len(cards)) if mean_freq[c] < word_bits]
+    return sorted(eligible, key=lambda c: -cards[c]) + sorted(rest, key=lambda c: cards[c])

@@ -1,0 +1,294 @@
+"""Sharding rules: logical param/activation axes -> mesh PartitionSpecs.
+
+Mesh axes (launch/mesh.py): ('pod',) 'data', 'model'.
+  * data  — FSDP parameter sharding + batch data-parallelism
+  * model — tensor parallelism (heads / d_ff / vocab) and expert parallelism
+  * pod   — extra data-parallel axis across pods (multi-pod mesh); FSDP
+            shards over ('pod','data') combined so 400-480B MoE archs fit.
+
+Param rules are (path-regex -> PartitionSpec) with the *first* match winning.
+Stacked-layer params get their leading scan axis unsharded automatically
+(specs are shifted by one dim for paths under 'blocks'/'groups'/'rest').
+
+Activation constraints are applied through ``constrain(x, kind)`` which
+no-ops unless a mesh context was installed via ``use_mesh_rules`` — model
+code stays distribution-agnostic.
+"""
+from __future__ import annotations
+
+import re
+import threading
+from typing import List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+def fsdp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules.  D = d_model axis (FSDP), M = model/TP axis.
+# ---------------------------------------------------------------------------
+
+def param_rules(mesh: Mesh, variant: str = "baseline") -> List[Tuple[str, P]]:
+    """variant: 'baseline' | 'opt' (attn-SP + EP×TP MoE) | 'opt_attn'
+    (attn-SP only, baseline MoE weight sharding — §Perf iteration 6)."""
+    F = fsdp_axes(mesh)  # FSDP axis group
+    if variant in ("opt", "opt_ep"):
+        # EP×TP MoE (§Perf iteration 2): expert dim over 'model' (EP); the
+        # FSDP axes move to the FFN dim (wi/wg) / contracting dim (wo) so the
+        # grouped einsums need only one reduce-scatter over F per layer
+        # instead of full expert-weight gathers.
+        moe_rules = [
+            (r".*moe.*router$", P(F, None)),
+            (r".*moe.*w(i|g)$", P("model", None, F)),
+            (r".*moe.*wo$", P("model", F, None)),
+        ]
+    else:
+        moe_rules = [
+            (r".*moe.*router$", P(F, None)),
+            (r".*moe.*w(i|g)$", P("model", F, None)),
+            (r".*moe.*wo$", P("model", None, F)),
+        ]
+    return moe_rules + [
+        # embeddings / unembeddings: vocab over model, d_model over FSDP
+        (r".*embed.*", P("model", F)),
+        (r".*pos_enc.*|.*pos_dec.*", P(None, F)),
+        # attention
+        (r".*attn.*w(q|k|v)$", P(F, "model")),
+        (r".*attn.*wo$", P("model", F)),
+        (r".*attn.*b(q|k|v)$", P("model")),
+        # dense MLPs: d_ff over model, d_model over FSDP
+        (r".*mlp.*w(i|g)$", P(F, "model")),
+        (r".*mlp.*wo$", P("model", F)),
+        (r".*mlp.*b(i)$", P("model")),
+        (r".*mlp.*b(o)$", P(None)),
+        # SSM: project d_inner-ish dims over model, d_model over FSDP
+        (r".*ssm.*in_proj$", P(F, "model")),
+        (r".*ssm.*out_proj$", P("model", F)),
+        (r".*ssm.*conv_w$", P(None, "model")),
+        (r".*ssm.*conv_b$", P("model")),
+        (r".*ssm.*(A_log|D|dt_bias)$", P(None)),
+        # norms and everything else: replicated
+        (r".*", P(None)),
+    ]
+
+
+_STACK_RE = re.compile(r"(^|/)(blocks|groups|rest|enc_blocks|dec_blocks)(/|$)")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _shift_for_stack(spec: P, ndim: int, n_stack: int) -> P:
+    return P(*([None] * n_stack + list(spec) + [None] * max(
+        0, ndim - n_stack - len(spec))))
+
+
+def spec_for(path: str, shape: Tuple[int, ...], mesh: Mesh,
+             variant: str = "baseline") -> P:
+    """PartitionSpec for a param path; disables axes that don't divide."""
+    n_stack = 0
+    m = _STACK_RE.search(path)
+    if m:
+        # leading scan axes: blocks/rest stack once; groups stack twice (G, 6)
+        n_stack = 2 if m.group(2) == "groups" else 1
+    for pat, spec in param_rules(mesh, variant):
+        if re.fullmatch(pat, path):
+            out = _shift_for_stack(spec, len(shape), n_stack) if n_stack else spec
+            return _sanitize(out, shape, mesh)
+    return P()
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _sanitize(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop sharding on dims the axis size does not divide."""
+    out = []
+    for d, axis in enumerate(list(spec)[: len(shape)] + [None] * (len(shape) - len(spec))):
+        if axis is not None and shape[d] % _axis_size(mesh, axis) == 0:
+            out.append(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_shardings(params_tree, mesh: Mesh, variant: str = "baseline"):
+    """Pytree of NamedShardings matching a (possibly abstract) param tree."""
+    def fn(path, leaf):
+        return NamedSharding(mesh, spec_for(_path_str(path), leaf.shape, mesh,
+                                            variant))
+    return jax.tree_util.tree_map_with_path(fn, params_tree)
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints (opt-in context).
+# ---------------------------------------------------------------------------
+
+ACT_SPECS = {
+    # (batch, seq, d_model): batch over DP axes
+    "activation": lambda F: P(F, None, None),
+    # (batch, seq, heads, head_dim): shard heads over model
+    "heads": lambda F: P(F, None, "model", None),
+    # logits (batch, seq, vocab): vocab over model
+    "logits": lambda F: P(F, None, "model"),
+    # KV cache (B, S, KV, hd)
+    "kvcache": lambda F: P(F, None, "model", None),
+}
+
+
+def use_mesh_rules(mesh: Optional[Mesh], variant: str = "baseline", *,
+                   bf16_scores: bool = False, moe_buf: bool = True):
+    _ctx.mesh = mesh
+    _ctx.variant = variant
+    _ctx.bf16_scores = bf16_scores
+    _ctx.moe_buf = moe_buf
+    return mesh
+
+
+def want_bf16_scores() -> bool:
+    return getattr(_ctx, "bf16_scores", False)
+
+
+def want_moe_buf_constraint() -> bool:
+    return getattr(_ctx, "moe_buf", True)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_ctx, "mesh", None)
+
+
+def current_variant() -> str:
+    return getattr(_ctx, "variant", "baseline")
+
+
+def constrain(x, kind: str):
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    F = fsdp_axes(mesh)
+    spec = _sanitize(ACT_SPECS[kind](F), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_qkv(q, k, v):
+    """Attention input sharding (§Perf iteration 1, 'opt' variant only).
+
+    Baseline lets GSPMD propagate the wq output sharding through the head
+    reshape, which lands the model axis on head_dim and turns the score
+    einsum into a partial-sum + attention-score-sized all-reduce (measured:
+    7.5 GiB per op on qwen2).  Fix:
+      * heads divide TP       -> head-parallel attention (q/k/v heads over
+                                 'model'): zero score collectives;
+      * heads don't divide    -> sequence-parallel attention (q's seq dim
+                                 over 'model', k/v replicated over model):
+                                 collectives shrink to k/v all-gathers.
+    """
+    mesh = current_mesh()
+    if mesh is None or current_variant() not in ("opt", "opt_attn", "opt_ep"):
+        return q, k, v
+    M = mesh.shape["model"]
+    F = fsdp_axes(mesh)
+    KV = k.shape[2]
+    S = q.shape[1]
+    if KV % M == 0:
+        spec = P(F, None, "model", None)
+        qs = _sanitize(spec, q.shape, mesh)
+        ks = _sanitize(spec, k.shape, mesh)
+        q = jax.lax.with_sharding_constraint(q, NamedSharding(mesh, qs))
+        k = jax.lax.with_sharding_constraint(k, NamedSharding(mesh, ks))
+        v = jax.lax.with_sharding_constraint(v, NamedSharding(mesh, ks))
+    elif S % M == 0:
+        qs = _sanitize(P(F, "model", None, None), q.shape, mesh)
+        ks = _sanitize(P(F, None, None, None), k.shape, mesh)
+        q = jax.lax.with_sharding_constraint(q, NamedSharding(mesh, qs))
+        k = jax.lax.with_sharding_constraint(k, NamedSharding(mesh, ks))
+        v = jax.lax.with_sharding_constraint(v, NamedSharding(mesh, ks))
+    return q, k, v
+
+
+def constrain_moe_buf(buf):
+    """Expert-buffer sharding for the EP×TP MoE variant: experts over
+    'model', capacity over F.  (Iteration 2 tried replicating over F — the
+    resulting E×cap×D all-gathers made collectives 4x WORSE on arctic;
+    sharding capacity keeps the dispatch scatter local and trades it for
+    per-layer wi/wg gathers, measured in iteration 3.)"""
+    mesh = current_mesh()
+    if mesh is None or current_variant() != "opt" or not want_moe_buf_constraint():
+        return buf
+    F = fsdp_axes(mesh)
+    spec = _sanitize(P("model", F, None), buf.shape, mesh)
+    return jax.lax.with_sharding_constraint(buf, NamedSharding(mesh, spec))
+
+
+def cache_shardings(cache_tree, mesh: Mesh):
+    """Decode-cache shardings.
+
+    k/v/xk/xv (..., B, S, KV, hd): batch over DP when divisible, else the
+    sequence axis (long-context: sequence-parallel attention — GSPMD inserts
+    the softmax-reduction collectives); KV heads over 'model' when divisible,
+    else head_dim.  SSM states (..., B, H, P, N): heads over 'model'.
+    """
+    F = fsdp_axes(mesh)
+    Fsize = _axis_size(mesh, F)
+    Msize = mesh.shape["model"]
+
+    def fn(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        shape = leaf.shape
+        if name in ("k", "v", "xk", "xv") and len(shape) >= 4:
+            nd = len(shape)
+            B, S, KV, hd = shape[nd - 4], shape[nd - 3], shape[nd - 2], shape[nd - 1]
+            spec = [None] * nd
+            if B % Fsize == 0:
+                spec[nd - 4] = F
+            elif S % Fsize == 0:
+                spec[nd - 3] = F
+            if KV % Msize == 0:
+                spec[nd - 2] = "model"
+            elif hd % Msize == 0:
+                spec[nd - 1] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if name in ("h", "conv", "rest_h", "rest_conv") and len(shape) >= 3:
+            nd = len(shape)
+            # h: (..., B, H, P, N); conv: (..., B, K-1, C)
+            spec = [None] * nd
+            b_ax = nd - 4 if name.endswith("h") else nd - 3
+            m_ax = nd - 3 if name.endswith("h") else nd - 1
+            if shape[b_ax] % Fsize == 0:
+                spec[b_ax] = F
+            if shape[m_ax] % Msize == 0:
+                spec[m_ax] = "model"
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(fn, cache_tree)
+
+
+def batch_shardings(batch_tree, mesh: Mesh):
+    """Inputs: shard leading (batch) dim over the DP axes when divisible."""
+    F = fsdp_axes(mesh)
+
+    def fn(leaf):
+        spec = _sanitize(P(F), leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map(fn, batch_tree)

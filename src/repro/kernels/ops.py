@@ -1,0 +1,81 @@
+"""Jit'd public wrappers around the Pallas kernels (+ padding glue).
+
+`interpret=True` by default: this container is CPU-only; on TPU pass
+``interpret=False`` (the kernels are written against TPU tiling rules:
+multiples of (8, 128) for 32-bit types).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import word_logical as _wl
+from . import popcount as _pc
+from . import bitpack_kernel as _bp
+from . import grad_compress as _gc
+
+
+def _pad2(a: jax.Array, br: int, bc: int, fill=0) -> Tuple[jax.Array, Tuple[int, int]]:
+    R, C = a.shape
+    Rp = -(-R // br) * br
+    Cp = -(-C // bc) * bc
+    if (Rp, Cp) != (R, C):
+        a = jnp.pad(a, ((0, Rp - R), (0, Cp - C)), constant_values=fill)
+    return a, (R, C)
+
+
+def word_logical(a, b, op: str = "and", interpret: bool = True,
+                 block_rows: int = 8, block_cols: int = 1024) -> jax.Array:
+    """Word-aligned logical op over (L, n_words) uint32 arrays.
+
+    Computes the clean-tile sideband and dispatches the skipping kernel —
+    the device-side equivalent of EWAH's Lemma 2.
+    """
+    a = jnp.asarray(a, jnp.uint32)
+    b = jnp.asarray(b, jnp.uint32)
+    ap, orig = _pad2(a, block_rows, block_cols)
+    bp_, _ = _pad2(b, block_rows, block_cols)
+    fa = _wl.tile_flags(ap, block_rows, block_cols)
+    fb = _wl.tile_flags(bp_, block_rows, block_cols)
+    out = _wl.word_logical(ap, bp_, fa, fb, op=op, block_rows=block_rows,
+                           block_cols=block_cols, interpret=interpret)
+    return out[: orig[0], : orig[1]]
+
+
+def popcount_total(a, interpret: bool = True) -> jax.Array:
+    a = jnp.asarray(a, jnp.uint32)
+    ap, _ = _pad2(a, 8, 1024)
+    return _pc.popcount_total(ap, interpret=interpret)
+
+
+def popcount_rows(a, interpret: bool = True) -> jax.Array:
+    a = jnp.asarray(a, jnp.uint32)
+    ap, (R, _) = _pad2(a, 8, 1024)
+    return _pc.popcount_rows(ap, interpret=interpret)[:R]
+
+
+def bitpack(bits, interpret: bool = True) -> jax.Array:
+    """(N, L) bools -> (ceil(N/32), L) uint32 words."""
+    bits = jnp.asarray(bits, jnp.bool_)
+    N, L = bits.shape
+    bp2, (_, _) = _pad2(bits, 1024, 128, fill=False)
+    out = _bp.bitpack(bp2, interpret=interpret)
+    return out[: -(-N // 32), :L]
+
+
+def block_sqnorms(grad_flat, values_per_block: int = 256, interpret: bool = True) -> jax.Array:
+    grad_flat = jnp.asarray(grad_flat, jnp.float32)
+    n = grad_flat.shape[0]
+    npad = -(-n // values_per_block) * values_per_block
+    if npad != n:
+        grad_flat = jnp.pad(grad_flat, (0, npad - n))
+    return _gc.block_sqnorms(grad_flat, values_per_block, interpret=interpret)
+
+
+def topk_block_mask(grad_flat, keep_ratio: float, values_per_block: int = 256,
+                    interpret: bool = True) -> jax.Array:
+    return _gc.topk_block_mask(jnp.asarray(grad_flat, jnp.float32), keep_ratio,
+                               values_per_block, interpret=interpret)

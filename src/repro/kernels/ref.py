@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (sweep-tested with allclose)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def word_logical(a, b, op: str):
+    if op == "and":
+        return a & b
+    if op == "or":
+        return a | b
+    if op == "xor":
+        return a ^ b
+    if op == "andnot":
+        return a & ~b
+    raise ValueError(op)
+
+
+def popcount_total(a):
+    bits = ((a[..., None] >> jnp.arange(32, dtype=jnp.uint32)) & 1)
+    return jnp.sum(bits.astype(jnp.int32))
+
+
+def popcount_rows(a):
+    bits = ((a[..., None] >> jnp.arange(32, dtype=jnp.uint32)) & 1)
+    return jnp.sum(bits.astype(jnp.int32), axis=(1, 2))
+
+
+def bitpack(bits):
+    n, L = bits.shape
+    w = n // 32
+    b = bits.astype(jnp.uint32).reshape(w, 32, L)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(b * weights[None, :, None], axis=1, dtype=jnp.uint32)
+
+
+def block_sqnorms(grad_flat, values_per_block: int):
+    g = grad_flat.reshape(-1, values_per_block).astype(jnp.float32)
+    return jnp.sum(g * g, axis=1)

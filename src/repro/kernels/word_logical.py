@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: word-aligned logical ops with clean-tile skipping.
+
+TPU adaptation of EWAH's Lemma 2 (DESIGN.md §3): bitmaps live on device as
+dense uint32 word arrays tiled into VMEM blocks; a per-tile *flag* sideband
+says whether a tile is clean (all-0 / all-1).  The kernel resolves clean×any
+tiles from flag algebra alone (``@pl.when`` branches write the constant or
+pass the other operand through) and only runs the elementwise word op on
+dirty×dirty tiles — recovering "only touch non-zero words" at VMEM-tile
+granularity, which is the granularity a TPU can actually skip at.
+
+Tiling: (SUBLANES=8, LANES=128) words per VREG op for 32-bit types; default
+block (8, 1024) = 32 KiB/operand in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# flag values for a tile
+DIRTY = 0
+CLEAN0 = 1
+CLEAN1 = 2
+
+OPS = ("and", "or", "xor", "andnot")
+
+BLOCK_ROWS = 8
+BLOCK_COLS = 1024
+
+
+def _apply(op: str, a, b):
+    if op == "and":
+        return a & b
+    if op == "or":
+        return a | b
+    if op == "xor":
+        return a ^ b
+    return a & ~b  # andnot
+
+
+def _kernel(op: str, fa_ref, fb_ref, a_ref, b_ref, o_ref):
+    fa = fa_ref[0, 0]
+    fb = fb_ref[0, 0]
+    both_dirty = (fa == DIRTY) & (fb == DIRTY)
+
+    @pl.when(both_dirty)
+    def _():
+        o_ref[...] = _apply(op, a_ref[...], b_ref[...])
+
+    @pl.when(~both_dirty)
+    def _():
+        # resolve from flag algebra: substitute clean tiles by their constant
+        av = jnp.where(fa == DIRTY, a_ref[...],
+                       jnp.where(fa == CLEAN1, jnp.uint32(0xFFFFFFFF), jnp.uint32(0)))
+        bv = jnp.where(fb == DIRTY, b_ref[...],
+                       jnp.where(fb == CLEAN1, jnp.uint32(0xFFFFFFFF), jnp.uint32(0)))
+        o_ref[...] = _apply(op, av, bv)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "block_rows", "block_cols", "interpret"))
+def word_logical(
+    a: jax.Array,
+    b: jax.Array,
+    flags_a: jax.Array,
+    flags_b: jax.Array,
+    op: str = "and",
+    block_rows: int = BLOCK_ROWS,
+    block_cols: int = BLOCK_COLS,
+    interpret: bool = True,
+) -> jax.Array:
+    """op(a, b) over (R, C) uint32 word arrays with (R/br, C/bc) tile flags."""
+    assert op in OPS
+    R, C = a.shape
+    assert a.shape == b.shape
+    gr, gc = R // block_rows, C // block_cols
+    assert gr * block_rows == R and gc * block_cols == C, (a.shape, block_rows, block_cols)
+    assert flags_a.shape == (gr, gc) == flags_b.shape
+
+    return pl.pallas_call(
+        functools.partial(_kernel, op),
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.uint32),
+        grid=(gr, gc),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+            pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(flags_a, flags_b, a, b)
+
+
+def tile_flags(words: jax.Array, block_rows: int = BLOCK_ROWS,
+               block_cols: int = BLOCK_COLS) -> jax.Array:
+    """Compute the clean-tile sideband (DIRTY/CLEAN0/CLEAN1) for a word array."""
+    R, C = words.shape
+    gr, gc = R // block_rows, C // block_cols
+    t = words.reshape(gr, block_rows, gc, block_cols)
+    all0 = jnp.all(t == 0, axis=(1, 3))
+    all1 = jnp.all(t == jnp.uint32(0xFFFFFFFF), axis=(1, 3))
+    return jnp.where(all0, CLEAN0, jnp.where(all1, CLEAN1, DIRTY)).astype(jnp.int32)

@@ -1,0 +1,87 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ first lines, before jax import (see dryrun.py)
+
+"""Per-op traffic/flops breakdown for one dry-run cell: what dominates?
+
+    PYTHONPATH=src python -m repro.launch.breakdown --arch qwen2-0.5b \
+        --shape train_4k --mesh multi --variant opt --top 15
+"""
+import argparse
+from collections import Counter
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="multi")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+    args.tag = "breakdown"
+    args.no_act_constraints = False
+    args.capacity_factor = None
+    args.bf16_scores = False
+    args.moe_buf = "on"
+    args.remat_policy = None
+
+    # reuse run_cell's lowering path but keep the compiled text
+    import repro.launch.dryrun as dr
+    import repro.launch.hlo_analysis as H
+
+    real_analyze = H.analyze_text
+    captured = {}
+
+    def capture(text):
+        captured["text"] = text
+        return real_analyze(text)
+    H.analyze_text = capture
+    dr.run_cell(args.arch, args.shape, args.mesh, args)
+    text = captured["text"]
+
+    a = H.HloAnalysis(text)
+    # per-instruction bytes and flops, weighted by trip counts: walk entry
+    weights = {a.entry: 1.0}
+    order = [a.entry]
+    # propagate trip weights through while ops
+    import re
+    for name in order:
+        w = weights[name]
+        for line in a.computations.get(name, []):
+            if " while(" in line:
+                tm = H._TRIP_RE.search(line)
+                trips = float(tm.group(1)) if tm else 1.0
+                for pat in (H._BODY_RE, H._COND_RE):
+                    m = pat.search(line)
+                    if m and m.group(1) in a.computations:
+                        weights[m.group(1)] = weights.get(m.group(1), 0) + w * trips
+                        order.append(m.group(1))
+            for m in H._CALLS_RE.finditer(line):
+                if m.group(1) in a.computations and m.group(1) not in weights:
+                    weights[m.group(1)] = w
+                    order.append(m.group(1))
+
+    by_bytes = Counter()
+    by_flops = Counter()
+    for name, w in weights.items():
+        for line in a.computations.get(name, []):
+            c = a._instr_cost(name, line)
+            if c.bytes or c.flops:
+                meta = re.search(r'op_name="([^"]+)"', line)
+                op = re.search(r"\s([a-z][a-z0-9\-]*)\(", line)
+                key = (op.group(1) if op else "?",
+                       (meta.group(1)[:90] if meta else line.strip()[:60]))
+                by_bytes[key] += c.bytes * w
+                by_flops[key] += c.flops * w
+    print("\n==== TOP BYTES ====")
+    for (op, key), v in by_bytes.most_common(args.top):
+        print(f"{v:.3e}  {op:<12} {key}")
+    print("\n==== TOP FLOPS ====")
+    for (op, key), v in by_flops.most_common(args.top):
+        print(f"{v:.3e}  {op:<12} {key}")
+
+
+if __name__ == "__main__":
+    main()

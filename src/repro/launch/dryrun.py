@@ -1,0 +1,199 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+# The 512 placeholder host devices exist ONLY for this dry-run driver.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod);
+  2. builds abstract params / optimizer state / inputs (ShapeDtypeStructs —
+     no allocation anywhere);
+  3. jits the right step (train_step / prefill_step / serve_step) with full
+     in/out shardings and donation, lowers and compiles it;
+  4. records memory_analysis(), cost_analysis(), and the trip-count-aware
+     HLO roofline terms (launch/hlo_analysis.py) to a JSON file.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out-dir benchmarks/results
+Optional perf knobs (hillclimbing levers — see EXPERIMENTS.md §Perf):
+  --no-remat            disable activation checkpointing
+  --no-act-constraints  drop activation sharding constraints
+  --capacity-factor F   MoE capacity factor override
+  --tag NAME            suffix for the result file (variant bookkeeping)
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, args) -> dict:
+    import jax
+    from repro.configs import SHAPES, get_config, shape_applicable
+    from repro.configs import input_specs as ispec
+    from repro.distributed import sharding as shd
+    from repro.launch import hlo_analysis
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import decode as dec
+    from repro.models.transformer import LM
+    from repro.train.optimizer import AdamW
+    from repro.train.step import make_prefill_step, make_serve_step, make_train_step
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "kind": shape.kind, "tag": args.tag}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    if args.no_remat:
+        cfg = dataclasses.replace(cfg, remat=False)
+    if getattr(args, "remat_policy", None):
+        cfg = dataclasses.replace(cfg, remat_policy=args.remat_policy)
+    if args.capacity_factor and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=cfg.moe._replace(capacity_factor=args.capacity_factor))
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    variant = getattr(args, "variant", "baseline")
+    if args.no_act_constraints:
+        shd.use_mesh_rules(None)
+    else:
+        shd.use_mesh_rules(mesh, variant,
+                           bf16_scores=getattr(args, "bf16_scores", False),
+                           moe_buf=getattr(args, "moe_buf", "on") != "off")
+    model = LM(cfg)
+    aparams = model.abstract_params()
+    p_shard = shd.param_shardings(aparams, mesh, variant)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        from repro.train.optimizer import AdamWConfig
+        opt = AdamW(AdamWConfig(
+            moment_dtype=getattr(args, "opt_dtype", "f32")))
+        if getattr(args, "param_dtype", "f32") == "bf16":
+            import jax.numpy as jnp
+            aparams = jax.tree.map(
+                lambda s_: jax.ShapeDtypeStruct(s_.shape, jnp.bfloat16)
+                if s_.dtype == jnp.float32 else s_, aparams)
+            p_shard = shd.param_shardings(aparams, mesh, variant)
+        aopt = jax.eval_shape(opt.init, aparams)
+        o_shard = shd.param_shardings(aopt, mesh, variant)
+        batch = ispec.batch_specs(cfg, shape)
+        b_shard = shd.batch_shardings(batch, mesh)
+        fn = make_train_step(model, opt, n_micro=getattr(args, 'microbatches', 1) or 1)
+        jitted = jax.jit(fn, in_shardings=(p_shard, o_shard, b_shard),
+                         out_shardings=(p_shard, o_shard, None),
+                         donate_argnums=(0, 1))
+        with mesh:
+            lowered = jitted.lower(aparams, aopt, batch)
+    elif shape.kind == "prefill":
+        batch = ispec.batch_specs(cfg, shape)
+        b_shard = shd.batch_shardings(batch, mesh)
+        fn = make_prefill_step(model)
+        jitted = jax.jit(fn, in_shardings=(p_shard, b_shard))
+        with mesh:
+            lowered = jitted.lower(aparams, batch)
+    else:  # decode
+        cache, tokens = ispec.decode_specs(model, shape)
+        c_shard = shd.cache_shardings(cache, mesh)
+        fn = make_serve_step(model)
+        jitted = jax.jit(fn, in_shardings=(p_shard, c_shard, None),
+                         out_shardings=(None, c_shard),
+                         donate_argnums=(1,))
+        with mesh:
+            lowered = jitted.lower(aparams, cache, tokens)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    mem = {k: getattr(ma, k) for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes") if hasattr(ma, k)}
+    ca = compiled.cost_analysis() or {}
+    cost = {k: float(v) for k, v in ca.items()
+            if k in ("flops", "bytes accessed", "transcendentals")}
+
+    t0 = time.time()
+    hlo = hlo_analysis.analyze_text(compiled.as_text())
+    t_parse = time.time() - t0
+
+    rec.update(
+        status="ok",
+        n_devices=mesh.devices.size,
+        mesh_shape={k: int(v) for k, v in mesh.shape.items()},
+        memory_analysis=mem,
+        xla_cost_analysis=cost,
+        hlo=hlo,
+        link_bytes=hlo_analysis.link_bytes(hlo["collectives"]),
+        seconds={"lower": t_lower, "compile": t_compile, "parse": t_parse},
+    )
+    print(f"[dryrun] {arch} {shape_name} {mesh_kind}: "
+          f"flops/dev={hlo['flops']:.3e} bytes/dev={hlo['bytes']:.3e} "
+          f"link_bytes/dev={rec['link_bytes']:.3e} "
+          f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+          f"args={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+          f"compile={t_compile:.1f}s")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="benchmarks/results/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-act-constraints", action="store_true")
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--variant", default="baseline", choices=["baseline", "opt", "opt_attn", "opt_ep"])
+    ap.add_argument("--bf16-scores", action="store_true")
+    ap.add_argument("--moe-buf", default="on", choices=["on", "off"])
+    ap.add_argument("--remat-policy", default=None,
+                    choices=["full", "dots_nb", "none"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--opt-dtype", default="f32", choices=["f32", "bf16"])
+    ap.add_argument("--param-dtype", default="f32", choices=["f32", "bf16"])
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS, SHAPES
+    cells = []
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m))
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for a, s, m in cells:
+        name = f"{a}__{s}__{m}" + ("" if args.tag == "baseline" else f"__{args.tag}")
+        path = out_dir / f"{name}.json"
+        try:
+            rec = run_cell(a, s, m, args)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            traceback.print_exc()
+            rec = {"arch": a, "shape": s, "mesh": m, "tag": args.tag,
+                   "status": "error", "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        path.write_text(json.dumps(rec, indent=1))
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,325 @@
+"""Trip-count-aware roofline terms from compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified on this
+backend: a 5-iteration scan reports ~1/5 the analytic FLOPs), and large
+modules print operands without inline types.  This parser therefore:
+
+  * splits the HLO module into computations and builds a per-computation
+    symbol table (instruction name -> result dtype/dims) so operand shapes
+    resolve even in compact printing;
+  * costs ``dot`` ops exactly (2 × prod(result) × prod(contracted lhs dims)),
+    convolutions approximately, fusions as 1 FLOP/output element (VPU proxy);
+  * recurses through fusion/call/while, multiplying while bodies by the
+    ``backend_config={"known_trip_count":{"n":N}}`` XLA records for scans;
+  * accumulates collective bytes by kind (all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute) with replica-group
+    sizes, weighted by trip counts;
+  * models HBM traffic as Σ (result + operand bytes) over compute-bearing
+    top-level ops (fusion internals stay in registers/VMEM).
+
+All numbers are per-device (the module is the per-partition SPMD program).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f4e2m1fn": 1, "f8e8m0fnu": 1,
+}
+
+_TYPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=")
+_OP_RE = re.compile(r"\)?\s([a-z][a-z0-9\-]*)\(")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[\\"={:]+n[\\"]*:?[\\"]*(\d+)')
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "add-dependency",
+    "copy-start", "copy-done", "partition-id", "replica-id", "domain",
+    "opt-barrier", "reshape",
+}
+
+
+def _dims_bytes(dtype: str, dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES.get(dtype, 0)
+
+
+def _parse_types(seg: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _TYPE_RE.findall(seg):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    coll_count: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    group_sizes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Cost", scale: float = 1.0):
+        self.flops += other.flops * scale
+        self.bytes += other.bytes * scale
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] += v * scale
+        for k, v in other.coll_count.items():
+            self.coll_count[k] += v * scale
+        for k, v in other.group_sizes.items():
+            self.group_sizes[k] = max(self.group_sizes[k], v)
+
+
+class HloAnalysis:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[str]] = {}
+        self.symbols: Dict[str, Dict[str, Tuple[str, List[int]]]] = {}
+        self._parse(text)
+        self._memo: Dict[str, Cost] = {}
+        self.entry = self._find_entry(text)
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            s = line.strip()
+            if line.endswith("{") and "->" in line and not s.startswith("//"):
+                head = s.split()[0]
+                if head == "ENTRY":
+                    head = s.split()[1]
+                cur = head.lstrip("%").split("(")[0].rstrip(" ")
+                self.computations[cur] = []
+                self.symbols[cur] = {}
+                # computation parameters are declared in the header, typed
+                continue
+            if cur is None:
+                continue
+            if s == "}":
+                cur = None
+                continue
+            if "=" not in s:
+                continue
+            self.computations[cur].append(s)
+            nm = _NAME_RE.match(s)
+            if nm:
+                rest = s[nm.end():]
+                ts = self._result_types(rest)
+                if ts:
+                    self.symbols[cur][nm.group(1).lstrip("%")] = ts
+
+    @staticmethod
+    def _result_types(rest: str):
+        """Types of the result segment: everything before the opcode token."""
+        om = _OP_RE.search(" " + rest)
+        seg = rest[: om.start()] if om else rest
+        return _parse_types(seg)
+
+    def _find_entry(self, text: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+        if m:
+            return m.group(1).split("(")[0]
+        return max(self.computations, key=lambda k: len(self.computations[k]))
+
+    # -- operand resolution -------------------------------------------------
+    def _operand_types(self, comp: str, operand_seg: str):
+        """Resolve operand types: inline if printed, else symbol lookup."""
+        out = []
+        depth = 0
+        token = []
+        tokens = []
+        for ch in operand_seg:
+            if ch == "," and depth == 0:
+                tokens.append("".join(token))
+                token = []
+            else:
+                if ch in "([{":
+                    depth += 1
+                elif ch in ")]}":
+                    depth -= 1
+                token.append(ch)
+        if token:
+            tokens.append("".join(token))
+        table = self.symbols.get(comp, {})
+        for t in tokens:
+            t = t.strip()
+            if not t:
+                continue
+            inline = _parse_types(t)
+            if inline:
+                out.append(inline[0])
+                continue
+            name = t.split()[-1].lstrip("%")
+            if name in table:
+                out.extend(table[name])
+        return out
+
+    # -- per-instruction costing ---------------------------------------------
+    def _instr_cost(self, comp: str, line: str) -> Cost:
+        c = Cost()
+        nm = _NAME_RE.match(line)
+        if not nm:
+            return c
+        rest = line[nm.end():]
+        om = _OP_RE.search(" " + rest)
+        if not om:
+            return c
+        op = om.group(1)
+        # segment boundaries: om matched in ' '+rest, so '(' is at om.end()-2
+        # in rest coordinates
+        paren_at = om.end() - 2
+        args_attrs = rest[paren_at:]
+        assert args_attrs[:1] == "(", (op, args_attrs[:20])
+        depth, end = 0, len(args_attrs)
+        for i, ch in enumerate(args_attrs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_seg = args_attrs[1:end]
+        attrs = args_attrs[end:]
+
+        if op == "while":
+            trips = 1.0
+            tm = _TRIP_RE.search(rest)
+            if tm:
+                trips = float(tm.group(1))
+            b = _BODY_RE.search(rest)
+            cd = _COND_RE.search(rest)
+            if b and b.group(1) in self.computations:
+                c.add(self.comp_cost(b.group(1)), trips)
+            if cd and cd.group(1) in self.computations:
+                c.add(self.comp_cost(cd.group(1)), trips)
+            return c
+
+        if op in ("call", "conditional"):
+            for cm in _CALLS_RE.finditer(rest):
+                if cm.group(1) in self.computations:
+                    c.add(self.comp_cost(cm.group(1)))
+            return c
+
+        result_types = self._result_types(rest)
+        result_bytes = sum(_dims_bytes(dt, dims) for dt, dims in result_types)
+        operand_types = self._operand_types(comp, operand_seg)
+        operand_bytes = sum(_dims_bytes(dt, dims) for dt, dims in operand_types)
+
+        if op == "dot":
+            out_el = 1
+            if result_types:
+                for d in result_types[0][1]:
+                    out_el *= d
+            k = 1
+            cd = _LHS_CDIMS_RE.search(attrs)
+            if cd and cd.group(1) and operand_types:
+                lhs_dims = operand_types[0][1]
+                for i in (int(x) for x in cd.group(1).split(",")):
+                    if i < len(lhs_dims):
+                        k *= lhs_dims[i]
+            c.flops += 2.0 * out_el * k
+        elif op == "convolution":
+            out_el = 1
+            if result_types:
+                for d in result_types[0][1]:
+                    out_el *= d
+            wm = re.search(r"window=\{size=([0-9x]+)", attrs)
+            k = 1
+            if wm:
+                for d in wm.group(1).split("x"):
+                    k *= int(d)
+            c.flops += 2.0 * out_el * k
+        elif op == "fusion":
+            out_el = 1
+            if result_types:
+                for d in result_types[0][1]:
+                    out_el *= d
+            c.flops += float(out_el)  # elementwise VPU proxy
+            cm = _CALLS_RE.search(rest)
+            if cm and cm.group(1) in self.computations:
+                sub = self.comp_cost(cm.group(1))
+                c.flops += sub.flops
+                for k2, v in sub.coll_bytes.items():
+                    c.coll_bytes[k2] += v
+        elif op in COLLECTIVES:
+            gsz = 0
+            gm = _GROUPS_RE.search(attrs)
+            if gm:
+                gsz = len(gm.group(1).split(","))
+            else:
+                gm2 = _GROUPS_V2_RE.search(attrs)
+                if gm2:
+                    gsz = int(gm2.group(2))
+            c.coll_bytes[op] += float(max(result_bytes, operand_bytes))
+            c.coll_count[op] += 1
+            c.group_sizes[op] = max(c.group_sizes[op], float(gsz))
+
+        if op not in _SKIP_BYTES_OPS:
+            c.bytes += float(result_bytes + operand_bytes)
+        return c
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()  # cycle guard
+        total = Cost()
+        for line in self.computations.get(name, []):
+            total.add(self._instr_cost(name, line))
+        self._memo[name] = total
+        return total
+
+    def totals(self) -> Dict:
+        c = self.comp_cost(self.entry)
+        coll = dict(c.coll_bytes)
+        for k, v in c.group_sizes.items():
+            coll[k + ":group"] = v
+        return {
+            "flops": c.flops,
+            "bytes": c.bytes,
+            "collectives": {k: float(v) for k, v in sorted(coll.items())},
+            "collective_counts": {k: float(v) for k, v in
+                                  sorted(c.coll_count.items())},
+        }
+
+
+def analyze_text(text: str) -> Dict:
+    return HloAnalysis(text).totals()
+
+
+def link_bytes(collectives: Dict[str, float]) -> float:
+    """Effective per-device bytes crossing ICI links:
+    all-reduce 2×(g-1)/g (ring), all-gather/reduce-scatter/all-to-all
+    (g-1)/g × size, collective-permute 1× — g = replica-group size."""
+    total = 0.0
+    for kind in COLLECTIVES:
+        size = collectives.get(kind, 0.0)
+        if not size:
+            continue
+        g = max(collectives.get(kind + ":group", 0.0), 2.0)
+        eff = (g - 1.0) / g
+        if kind == "all-reduce":
+            total += 2.0 * eff * size
+        elif kind == "collective-permute":
+            total += size
+        else:
+            total += eff * size
+    return total

@@ -1,0 +1,35 @@
+"""Production meshes.  Importing this module never touches jax device state.
+
+Single pod: v5e 16x16 = 256 chips, axes (data, model).
+Multi-pod : 2 pods  = 512 chips, axes (pod, data, model); 'pod' is a pure
+data-parallel axis (gradient all-reduce crosses pod links once per step)
+that also joins the FSDP axis group so 400-480B-param archs fit in HBM.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 (dry-run only)")
+    try:
+        return jax.make_mesh(shape, axes, devices=devices)
+    except TypeError:  # older signature without devices kwarg
+        from jax.sharding import Mesh
+        return Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over the real host devices (tests on CPU)."""
+    import jax
+    from jax.sharding import Mesh
+    devices = np.asarray(jax.devices()[: data * model]).reshape(data, model)
+    return Mesh(devices, ("data", "model"))

@@ -1,0 +1,82 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ first lines, before any jax import (see dryrun.py)
+
+"""Resumable driver for the full (arch × shape × mesh) baseline sweep.
+
+Cells are ordered cheapest-first (decode < prefill < train; small archs
+first) so results accumulate early.  Existing JSONs are skipped, making the
+sweep restartable after interruption — run it in the background:
+
+    PYTHONPATH=src python -m repro.launch.sweep --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+# rough cost rank: params ~ layers * d_model^2 scaled
+_ARCH_COST = {
+    "qwen2-0.5b": 1, "whisper-small": 1, "mamba2-780m": 2, "zamba2-1.2b": 3,
+    "gemma2-9b": 30, "codeqwen1.5-7b": 25, "internvl2-26b": 60,
+    "command-r-35b": 90, "llama4-maverick-400b-a17b": 150, "arctic-480b": 200,
+}
+_KIND_COST = {"decode": 1, "prefill": 3, "train": 10}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out-dir", default="benchmarks/results/dryrun")
+    ap.add_argument("--only-arch", default=None)
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS, SHAPES
+    from repro.launch.dryrun import run_cell
+
+    class A:  # default knobs (baseline variant)
+        tag = "baseline"
+        no_remat = False
+        no_act_constraints = False
+        capacity_factor = None
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    for a in ARCHS:
+        if args.only_arch and a != args.only_arch:
+            continue
+        for s, sc in SHAPES.items():
+            for m in meshes:
+                cost = _ARCH_COST.get(a, 50) * _KIND_COST.get(sc.kind, 5)
+                cells.append((cost, a, s, m))
+    cells.sort()
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    t_start = time.time()
+    done = failed = skipped = 0
+    for cost, a, s, m in cells:
+        path = out_dir / f"{a}__{s}__{m}.json"
+        if path.exists() and json.loads(path.read_text()).get("status") in ("ok", "skipped"):
+            skipped += 1
+            continue
+        t0 = time.time()
+        try:
+            rec = run_cell(a, s, m, A)
+            done += 1
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            rec = {"arch": a, "shape": s, "mesh": m, "tag": "baseline",
+                   "status": "error", "error": f"{type(e).__name__}: {e}"}
+            failed += 1
+        path.write_text(json.dumps(rec, indent=1))
+        print(f"[sweep] {a}/{s}/{m} -> {rec['status']} "
+              f"({time.time()-t0:.0f}s; total {time.time()-t_start:.0f}s; "
+              f"done={done} failed={failed} cached={skipped})", flush=True)
+    print(f"[sweep] COMPLETE done={done} failed={failed} cached={skipped} "
+          f"in {time.time()-t_start:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

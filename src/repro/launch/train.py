@@ -1,0 +1,55 @@
+"""Training launcher: arch selection + bitmap data pipeline + supervision.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --steps 100 \
+        [--reduced] [--compress 0.25] [--ckpt-dir DIR]
+
+On the real cluster this process runs once per host under the production
+mesh (launch/mesh.py); on this CPU container use --reduced (default) to run
+the same code path on the arch's reduced config.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--compress", type=float, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.data.pipeline import BitmapDataPipeline, Corpus
+    from repro.models.transformer import LM
+    from repro.train.loop import TrainConfig, train
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = LM(cfg)
+    corpus = Corpus.synthetic(n_docs=1024, doc_len=max(args.seq_len, 64),
+                              vocab=cfg.vocab)
+    pipe = BitmapDataPipeline(corpus, sort=True)
+    print(f"[launch.train] {cfg.name}: index stats {pipe.index_stats()}")
+    tcfg = TrainConfig(steps=args.steps, batch_size=args.batch_size,
+                       seq_len=args.seq_len, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=args.ckpt_every,
+                       grad_compression=args.compress, lr=args.lr)
+    params, report = train(model, tcfg, pipe)
+    losses = np.asarray(report.losses)
+    print(f"[launch.train] {report.steps_run} steps; restarts={report.restarts}; "
+          f"loss {losses[:5].mean():.3f} -> {losses[-5:].mean():.3f}")
+
+
+if __name__ == "__main__":
+    main()

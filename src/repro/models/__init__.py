@@ -1,0 +1,3 @@
+from .transformer import LM
+from . import attention, decode, layers, moe, ssm
+__all__ = ["LM", "attention", "decode", "layers", "moe", "ssm"]

@@ -1,0 +1,224 @@
+"""Single-token decode (serve_step) with per-family caches.
+
+Cache layouts (stacked along the scan axis so decode is also a lax.scan):
+  dense/moe/vlm : k/v (n_blocks, period, B, S_max, KV, hd) + length scalar
+  ssm           : h (L, B, H, P, N) fp32, conv (L, B, K-1, C)
+  hybrid        : ssm states per group + one KV cache per shared-block app
+  enc-dec       : decoder self k/v + precomputed cross k/v (from prefill)
+
+``serve_step`` is the function the decode_* and long_* dry-run shapes lower.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+
+from .attention import KVCache, decode_attention, _project_qkv, _sdpa
+from .layers import cast, gated_mlp, gelu_mlp, layer_norm, rms_norm
+from .moe import moe_block
+from .ssm import SSMCache, ssm_decode
+from .transformer import LM, Plan
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+def _kv_shape(model: LM, lead, B, S):
+    s = model.attn_spec
+    return tuple(lead) + (B, S, s.n_kv_heads, s.head_dim)
+
+
+def cache_spec(model: LM, B: int, S_max: int) -> Dict[str, Any]:
+    """ShapeDtypeStruct cache pytree (for dry-run lowering)."""
+    cfg = model.cfg
+    f32 = jnp.float32
+    bf16 = jnp.bfloat16
+    out: Dict[str, Any] = {"length": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.enc_dec:
+        L = cfg.n_layers
+        M = cfg.n_frontend_positions
+        out["k"] = jax.ShapeDtypeStruct(_kv_shape(model, (L,), B, S_max), bf16)
+        out["v"] = jax.ShapeDtypeStruct(_kv_shape(model, (L,), B, S_max), bf16)
+        out["xk"] = jax.ShapeDtypeStruct(_kv_shape(model, (L,), B, M), bf16)
+        out["xv"] = jax.ShapeDtypeStruct(_kv_shape(model, (L,), B, M), bf16)
+        return out
+    if cfg.family == "ssm":
+        sp = cfg.ssm
+        conv_ch = sp.d_inner + 2 * sp.n_groups * sp.state_dim
+        L = cfg.n_layers
+        out["h"] = jax.ShapeDtypeStruct((L, B, sp.n_heads, sp.head_dim, sp.state_dim), f32)
+        out["conv"] = jax.ShapeDtypeStruct((L, B, sp.d_conv - 1, conv_ch), bf16)
+        return out
+    if cfg.family == "hybrid":
+        sp = cfg.ssm
+        conv_ch = sp.d_inner + 2 * sp.n_groups * sp.state_dim
+        G = cfg.n_layers // cfg.hybrid_period
+        per = cfg.hybrid_period
+        rest = cfg.n_layers - G * per
+        out["h"] = jax.ShapeDtypeStruct((G, per, B, sp.n_heads, sp.head_dim, sp.state_dim), f32)
+        out["conv"] = jax.ShapeDtypeStruct((G, per, B, sp.d_conv - 1, conv_ch), bf16)
+        if rest:
+            out["rest_h"] = jax.ShapeDtypeStruct((rest, B, sp.n_heads, sp.head_dim, sp.state_dim), f32)
+            out["rest_conv"] = jax.ShapeDtypeStruct((rest, B, sp.d_conv - 1, conv_ch), bf16)
+        out["k"] = jax.ShapeDtypeStruct(_kv_shape(model, (G,), B, S_max), bf16)
+        out["v"] = jax.ShapeDtypeStruct(_kv_shape(model, (G,), B, S_max), bf16)
+        return out
+    nb, per = model.n_blocks, model.period
+    out["k"] = jax.ShapeDtypeStruct(_kv_shape(model, (nb, per), B, S_max), bf16)
+    out["v"] = jax.ShapeDtypeStruct(_kv_shape(model, (nb, per), B, S_max), bf16)
+    return out
+
+
+def init_cache(model: LM, B: int, S_max: int) -> Dict[str, Any]:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(model, B, S_max))
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+def _decode_layer(model: LM, lp, plan: Plan, x, kv: KVCache, ssm_c: SSMCache):
+    """Returns (x, new_kv_or_None, new_ssm_or_None)."""
+    cfg = model.cfg
+    if plan.kind == "ssm":
+        y, new_c = ssm_decode(lp["ssm"], cfg.ssm, model._norm(lp, x), ssm_c)
+        return x + y, None, new_c
+    h = model._norm(lp, x)
+    a, new_kv = decode_attention(lp["attn"], model.attn_spec, h, kv,
+                                 window=plan.window)
+    if cfg.post_norms:
+        a = rms_norm(lp["ln1_post"], a)
+    if cfg.parallel_block:
+        return x + a + gated_mlp(lp["mlp"], h), new_kv, None
+    x = x + a
+    h2 = model._norm(lp, x, "ln2")
+    if plan.ffn == "moe":
+        # decode: drop-free capacity (a handful of tokens; no dispatch drops)
+        f, _ = moe_block(lp["moe"], cfg.moe, h2,
+                         capacity=h2.shape[0] * cfg.moe.top_k)
+        if cfg.moe.dense_residual:
+            f = f + gated_mlp(lp["mlp"], h2)
+    elif cfg.enc_dec:
+        f = gelu_mlp(lp["mlp"], h2)
+    else:
+        f = gated_mlp(lp["mlp"], h2)
+    if cfg.post_norms:
+        f = rms_norm(lp["ln2_post"], f)
+    return x + f, new_kv, None
+
+
+def serve_step(model: LM, params, cache: Dict[str, Any], tokens):
+    """tokens (B, 1) -> (logits (B, 1, V), updated cache)."""
+    cfg = model.cfg
+    x = model._embed_tokens(params, tokens)
+    if cfg.learned_pos:
+        x = x + cast(params["pos_dec"])[cache["length"]][None, None, :]
+    x = shd.constrain(x, "activation")
+    length = cache["length"]
+    new_cache = dict(cache)
+
+    if cfg.enc_dec:
+        def step(x, inp):
+            lp, k, v, xk, xv = inp
+            h = layer_norm(lp["ln1"], lp["ln1_b"], x)
+            a, nkv = decode_attention(lp["attn"], model.attn_spec, h,
+                                      KVCache(k, v, length))
+            x = x + a
+            h2 = layer_norm(lp["ln2"], lp["ln2_b"], x)
+            q, _, _ = _project_qkv(lp["xattn"], model.attn_spec, h2, h2)
+            ca = _sdpa(q, xk, xv, None, model.attn_spec)
+            x = x + jnp.einsum("bsh,hd->bsd", ca, cast(lp["xattn"]["wo"]))
+            h3 = layer_norm(lp["ln3"], lp["ln3_b"], x)
+            x = x + gelu_mlp(lp["mlp"], h3)
+            return x, (nkv.k, nkv.v)
+
+        x, (nk, nv) = jax.lax.scan(
+            step, x, (params["dec_blocks"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        new_cache.update(k=nk, v=nv, length=length + 1)
+
+    elif cfg.family == "ssm":
+        def step(x, inp):
+            bp, h, conv = inp
+            x, _, nc = _decode_layer(model, bp["layers"][0], Plan("ssm", "none"),
+                                     x, None, SSMCache(h, conv))
+            return x, (nc.h, nc.conv)
+
+        x, (nh, nconv) = jax.lax.scan(step, x, (params["blocks"], cache["h"],
+                                                cache["conv"]))
+        new_cache.update(h=nh, conv=nconv, length=length + 1)
+
+    elif cfg.family == "hybrid":
+        def group(x, inp):
+            gp, hs, convs, k, v = inp
+
+            def layer(x, li):
+                lp, h, conv = li
+                x, _, nc = _decode_layer(model, lp, Plan("ssm", "none"), x,
+                                         None, SSMCache(h, conv))
+                return x, (nc.h, nc.conv)
+
+            x, (nh, nconv) = jax.lax.scan(layer, x, (gp, hs, convs))
+            # shared attention block (own KV cache per application)
+            sp = params["shared"]
+            h = rms_norm(sp["ln1"], x)
+            a, nkv = decode_attention(sp["attn"], model.attn_spec, h,
+                                      KVCache(k, v, length))
+            x = x + a
+            x = x + gated_mlp(sp["mlp"], rms_norm(sp["ln2"], x))
+            return x, (nh, nconv, nkv.k, nkv.v)
+
+        x, (nh, nconv, nk, nv) = jax.lax.scan(
+            group, x, (params["groups"], cache["h"], cache["conv"],
+                       cache["k"], cache["v"]))
+        new_cache.update(h=nh, conv=nconv, k=nk, v=nv)
+        if "rest" in params:
+            def layer(x, li):
+                lp, h, conv = li
+                x, _, nc = _decode_layer(model, lp, Plan("ssm", "none"), x,
+                                         None, SSMCache(h, conv))
+                return x, (nc.h, nc.conv)
+            x, (rh, rconv) = jax.lax.scan(layer, x, (params["rest"],
+                                                     cache["rest_h"],
+                                                     cache["rest_conv"]))
+            new_cache.update(rest_h=rh, rest_conv=rconv)
+        new_cache["length"] = length + 1
+
+    else:
+        def block(x, inp):
+            bp, ks, vs = inp
+            nks, nvs = [], []
+            for i, plan in enumerate(model.plans):
+                kv = KVCache(ks[i], vs[i], length)
+                x, nkv, _ = _decode_layer(model, bp["layers"][i], plan, x, kv, None)
+                nks.append(nkv.k)
+                nvs.append(nkv.v)
+            return x, (jnp.stack(nks), jnp.stack(nvs))
+
+        x, (nk, nv) = jax.lax.scan(block, x, (params["blocks"], cache["k"],
+                                              cache["v"]))
+        new_cache.update(k=nk, v=nv, length=length + 1)
+
+    x = model._norm(params, x, "ln_f")
+    return model._logits(params, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# enc-dec prefill: build the cross-attention cache from frames
+# ---------------------------------------------------------------------------
+
+def encdec_prefill_cross(model: LM, params, frames):
+    """Compute encoder memory and per-decoder-layer cross K/V."""
+    memory = model._encoder(params, frames)
+
+    def per_layer(lp):
+        _, k, v = _project_qkv(lp["xattn"], model.attn_spec, memory, memory)
+        return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+
+    return jax.vmap(per_layer, in_axes=0)(params["dec_blocks"])

@@ -1,0 +1,122 @@
+"""Shared building blocks: norms, RoPE, MLPs, softcap, initializers.
+
+Pure JAX (no flax): params are nested dicts of arrays; every block is a
+function (params, x, ...) -> y.  Weights are stored fp32 and cast to the
+compute dtype (bf16) at use ("fp32 master + bf16 compute").
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cast(x):
+    return x.astype(COMPUTE_DTYPE)
+
+
+# -- initializers -----------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = 0):
+    fan_in = shape[in_axis]
+    return jax.random.normal(key, shape, jnp.float32) * (fan_in ** -0.5)
+
+
+def embed_init(key, shape):
+    # scaled so tied-unembedding logits start O(1)
+    return jax.random.normal(key, shape, jnp.float32) * (shape[-1] ** -0.5)
+
+
+# -- norms -------------------------------------------------------------------
+
+def rms_norm(scale, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return cast(y * (1.0 + scale.astype(jnp.float32)))
+
+
+def layer_norm(scale, bias, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return cast(y * scale.astype(jnp.float32) + bias.astype(jnp.float32))
+
+
+def softcap(x, cap: Optional[float]):
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (jnp.tanh(x.astype(jnp.float32) / cap) * cap).astype(x.dtype)
+
+
+# -- RoPE ---------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, head_dim); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+def gated_mlp(params, x):
+    """SwiGLU: (x @ Wg) * silu(x @ Wi) @ Wo — llama/qwen/gemma family."""
+    h = jnp.einsum("...d,df->...f", x, cast(params["wi"]))
+    g = jnp.einsum("...d,df->...f", x, cast(params["wg"]))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    return jnp.einsum("...f,fd->...d", h, cast(params["wo"]))
+
+
+def gelu_mlp(params, x):
+    """Plain GELU MLP with biases — whisper family."""
+    h = jnp.einsum("...d,df->...f", x, cast(params["wi"])) + cast(params["bi"])
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    return jnp.einsum("...f,fd->...d", h, cast(params["wo"])) + cast(params["bo"])
+
+
+def init_gated_mlp(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, (d_model, d_ff)),
+        "wg": dense_init(k2, (d_model, d_ff)),
+        "wo": dense_init(k3, (d_ff, d_model)),
+    }
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": dense_init(k1, (d_model, d_ff)),
+        "bi": jnp.zeros((d_ff,), jnp.float32),
+        "wo": dense_init(k2, (d_ff, d_model)),
+        "bo": jnp.zeros((d_model,), jnp.float32),
+    }
+
+
+# -- losses -------------------------------------------------------------------
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean next-token CE; logits (..., V) fp32-safe."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

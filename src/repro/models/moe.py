@@ -1,0 +1,257 @@
+"""Mixture-of-Experts with top-k routing and capacity-based sort dispatch.
+
+Dispatch is sort/scatter based (no (T, E, C) one-hot tensor): tokens are
+argsorted by expert id, positioned within their expert's buffer by a rank
+subtraction, dropped past capacity, processed with a single grouped einsum
+over the expert dimension, and scattered back weighted by router probs.
+This keeps compiled FLOPs proportional to *active* experts (6·N_active·D)
+and shards over the 'model' (expert) axis with one all-to-all pair.
+
+Supports a parallel dense residual branch (Snowflake Arctic) / shared expert
+(Llama-4) via ``dense_residual``.
+
+Bitmap hook: ``dispatch_bitmap_words`` exposes the (token x expert) routing
+mask as packed words for EWAH telemetry (DESIGN.md §4.3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import cast, dense_init
+
+
+class MoESpec(NamedTuple):
+    n_experts: int
+    top_k: int
+    d_ff: int
+    capacity_factor: float = 1.25
+    dense_residual: bool = False  # parallel dense/shared-expert branch
+
+
+def init_moe(key, d_model: int, spec: MoESpec):
+    kg, k1, k2, k3 = jax.random.split(key, 4)
+    E, F = spec.n_experts, spec.d_ff
+    p = {
+        "router": dense_init(kg, (d_model, E)),
+        "wi": dense_init(k1, (E, d_model, F), in_axis=1),
+        "wg": dense_init(k2, (E, d_model, F), in_axis=1),
+        "wo": dense_init(k3, (E, F, d_model), in_axis=1),
+    }
+    return p
+
+
+def route(params, spec: MoESpec, xf):
+    """xf (T, D) -> (probs (T,k), experts (T,k), router logits)."""
+    logits = jnp.einsum("td,de->te", xf, cast(params["router"])).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, spec.top_k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    return topv, topi, logits
+
+
+def moe_block(params, spec: MoESpec, x, *, capacity: Optional[int] = None):
+    """x (B, S, D) -> (y, aux) with load-balance auxiliary loss."""
+    B, S, D = x.shape
+    T = B * S
+    xf = x.reshape(T, D)
+    topv, topi, logits = route(params, spec, xf)
+    E, k = spec.n_experts, spec.top_k
+    if capacity is None:
+        capacity = max(int(spec.capacity_factor * k * T / E), 1)
+
+    # flatten (token, expert-slot) pairs and sort by expert
+    expert_flat = topi.reshape(-1)                         # (kT,)
+    token_flat = jnp.repeat(jnp.arange(T), k)              # (kT,)
+    weight_flat = topv.reshape(-1).astype(x.dtype)         # (kT,)
+    order = jnp.argsort(expert_flat)
+    es, ts, ws = expert_flat[order], token_flat[order], weight_flat[order]
+
+    counts = jnp.bincount(es, length=E)                    # (E,)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(k * T) - starts[es]
+    keep = pos < capacity
+    pos_c = jnp.clip(pos, 0, capacity - 1)
+
+    # gather tokens into (E, capacity, D) expert buffers
+    buf = jnp.zeros((E, capacity, D), x.dtype)
+    contrib = jnp.where(keep[:, None], xf[ts], 0).astype(x.dtype)
+    buf = buf.at[es, pos_c].add(contrib, mode="drop")
+    from repro.distributed import sharding as _shd
+    buf = _shd.constrain_moe_buf(buf)
+
+    # grouped expert FFN (SwiGLU)
+    h = jnp.einsum("ecd,edf->ecf", buf, cast(params["wi"]))
+    g = jnp.einsum("ecd,edf->ecf", buf, cast(params["wg"]))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    y_e = jnp.einsum("ecf,efd->ecd", h, cast(params["wo"]))
+
+    # scatter back, weighted
+    y_tok = y_e[es, pos_c] * (ws * keep)[:, None]
+    yf = jnp.zeros((T, D), x.dtype).at[ts].add(y_tok, mode="drop")
+
+    # auxiliary load-balance loss (Switch-style)
+    me = jax.nn.softmax(logits, axis=-1).mean(0)           # (E,)
+    ce = jnp.zeros(E, jnp.float32).at[expert_flat].add(1.0 / (k * T))
+    aux = E * jnp.sum(me * ce)
+    return yf.reshape(B, S, D), aux
+
+
+def moe_block_ep(params, spec: MoESpec, x, mesh):
+    """Expert-parallel MoE with explicit all-to-all dispatch (shard_map).
+
+    §Perf iteration 7.  The GSPMD-autosharded dispatch (global argsort +
+    scatter) lowers to (E, cap, D)-sized all-gathers — measured 4x worse
+    than baseline on arctic.  This version expresses the production pattern
+    (GShard/DeepSeek) directly:
+
+      tokens local per device (sharded over F = DP/FSDP axes)
+        -> route locally -> per-destination send buffers
+        -> all_to_all over 'model' (payload = activations, not weights)
+        -> local dispatch to the shard's E/M experts
+        -> all_gather tokens over F (expert FFN dim is F-sharded: each
+           F-row computes its F_ff slice for the whole column)
+        -> grouped einsum -> psum_scatter the partial outputs back over F
+        -> reverse all_to_all -> weighted combine.
+
+    Per-layer link payload ~ O(k x T x D / M) + O(T_col x D) instead of
+    O(params): turns the FSDP weight-gather wall into activation exchange.
+    Expert weights: wi/wg P('model', None, F), wo P('model', F, None) —
+    resident, never gathered.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axes = mesh.axis_names
+    F_axes = tuple(a for a in axes if a != "model")
+    M = mesh.shape["model"]
+    Fsz = 1
+    for a in F_axes:
+        Fsz *= mesh.shape[a]
+    E, k = spec.n_experts, spec.top_k
+    assert E % M == 0, (E, M)
+    E_loc = E // M
+    B, S, D = x.shape
+    # tokens sharded over BOTH F (batch) and 'model' (sequence) — leaving the
+    # model axis unsplit replicates every token's dispatch 16x (iteration 7a
+    # measured an 8x FLOP blowup from exactly this)
+    seq_shard = M if S % M == 0 else 1
+    T_l = (B * S) // (Fsz * seq_shard)        # tokens per device
+    cf = spec.capacity_factor
+    C_send = max(int(cf * k * T_l / M), 1)    # per-destination send slots
+    cap_loc = max(int(cf * k * T_l / E_loc), 1)
+
+    def local(x_l, router, wi, wg, wo):
+        # x_l: (B/F?, S, D) local block; weights local shards
+        Tl = x_l.shape[0] * x_l.shape[1]
+        xf = x_l.reshape(Tl, D)
+        logits = jnp.einsum("td,de->te", xf, cast(router)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        topv, topi = jax.lax.top_k(probs, k)
+        topv = (topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)).astype(x_l.dtype)
+
+        e_flat = topi.reshape(-1)                        # (kTl,)
+        t_flat = jnp.repeat(jnp.arange(Tl), k)
+        w_flat = topv.reshape(-1)
+        m_dest = e_flat // E_loc
+        e_loc = e_flat % E_loc
+
+        # position within destination bucket
+        order = jnp.argsort(m_dest)
+        md_s, slot_s = m_dest[order], jnp.arange(k * Tl)[order]
+        counts = jnp.bincount(md_s, length=M)
+        starts = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+        pos = jnp.arange(k * Tl) - starts[md_s]
+        keep = pos < C_send
+        pos_c = jnp.clip(pos, 0, C_send - 1)
+
+        send_x = jnp.zeros((M, C_send, D), x_l.dtype)
+        send_e = jnp.full((M, C_send), -1, jnp.int32)    # local expert id
+        payload = jnp.where(keep[:, None], xf[t_flat[slot_s]], 0)
+        send_x = send_x.at[md_s, pos_c].add(payload.astype(x_l.dtype), mode="drop")
+        send_e = send_e.at[md_s, pos_c].set(
+            jnp.where(keep, e_loc[slot_s], -1), mode="drop")
+
+        # exchange: row m goes to model-column m
+        recv_x = jax.lax.all_to_all(send_x, "model", 0, 0, tiled=False)
+        recv_e = jax.lax.all_to_all(send_e, "model", 0, 0, tiled=False)
+        Tr = M * C_send
+        rx = recv_x.reshape(Tr, D)
+        re = recv_e.reshape(Tr)
+
+        # local dispatch to E_loc expert buffers
+        valid = re >= 0
+        re_c = jnp.where(valid, re, 0)
+        order2 = jnp.argsort(jnp.where(valid, re_c, E_loc))
+        re_s = re_c[order2]
+        counts2 = jnp.bincount(jnp.where(valid, re_c, E_loc)[order2],
+                               length=E_loc + 1)[:E_loc]
+        starts2 = jnp.concatenate([jnp.zeros(1, counts2.dtype),
+                                   jnp.cumsum(counts2)[:-1]])
+        pos2 = jnp.arange(Tr) - starts2[jnp.clip(re_s, 0, E_loc - 1)]
+        keep2 = (pos2 < cap_loc) & valid[order2]
+        pos2_c = jnp.clip(pos2, 0, cap_loc - 1)
+        buf = jnp.zeros((E_loc, cap_loc, D), x_l.dtype)
+        buf = buf.at[re_s, pos2_c].add(
+            jnp.where(keep2[:, None], rx[order2], 0).astype(x_l.dtype), mode="drop")
+
+        # column-wide tokens: gather over F, compute the local F_ff slice
+        bufF = jax.lax.all_gather(buf, F_axes)            # (F, E_loc, cap, D)
+        bufF = jnp.moveaxis(bufF, 0, 1).reshape(E_loc, Fsz * cap_loc, D)
+        h = jnp.einsum("ecd,edf->ecf", bufF, cast(wi))
+        g = jnp.einsum("ecd,edf->ecf", bufF, cast(wg))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+        y_part = jnp.einsum("ecf,efd->ecd", h, cast(wo))  # partial over F_ff
+        y_part = jnp.moveaxis(y_part.reshape(E_loc, Fsz, cap_loc, D), 1, 0)
+        y_loc = jax.lax.psum_scatter(y_part, F_axes, scatter_dimension=0,
+                                     tiled=False)         # (E_loc, cap, D)
+
+        # return trip: un-dispatch, reverse all_to_all, combine
+        y_r = jnp.zeros((Tr, D), x_l.dtype)
+        y_r = y_r.at[order2].set(
+            jnp.where(keep2[:, None], y_loc[re_s, pos2_c], 0).astype(x_l.dtype))
+        back = jax.lax.all_to_all(y_r.reshape(M, C_send, D), "model", 0, 0,
+                                  tiled=False)
+        # scatter to original token slots
+        y_tok = jnp.zeros((k * Tl, D), x_l.dtype)
+        y_tok = y_tok.at[slot_s].set(
+            jnp.where(keep[:, None], back[md_s, pos_c], 0).astype(x_l.dtype))
+        yf = jnp.zeros((Tl, D), x_l.dtype)
+        yf = yf.at[t_flat].add(y_tok * w_flat[:, None], mode="drop")
+
+        # load-balance aux (global mean)
+        me = probs.mean(0)
+        ce = jnp.zeros(E, jnp.float32).at[e_flat].add(1.0 / (k * Tl))
+        aux = E * jnp.sum(me * ce)
+        aux = jax.lax.pmean(aux, F_axes + ("model",))
+        return yf.reshape(x_l.shape), aux
+
+    Fspec = P(F_axes, "model" if seq_shard > 1 else None, None)
+    out = shard_map(
+        local, mesh=mesh,
+        in_specs=(Fspec, P(None, None), P("model", None, F_axes),
+                  P("model", None, F_axes), P("model", F_axes, None)),
+        out_specs=(Fspec, P()),
+        check_rep=False,
+    )(x, params["router"], params["wi"], params["wg"], params["wo"])
+    return out
+
+
+def dispatch_bitmap_words(topi, n_experts: int):
+    """(T, k) expert ids -> (E, ceil(T/32)) packed uint32 routing bitmaps.
+
+    Rows of the (token x expert) boolean matrix, word-packed on device (the
+    EWAH encode itself happens host-side); used for routing telemetry and
+    capacity planning.  Sorting tokens by router argmax before packing makes
+    these bitmaps dramatically more compressible — the paper's fact-sorting
+    effect on a training-time data structure.
+    """
+    T, k = topi.shape
+    Tp = -(-T // 32) * 32
+    onehot = jnp.zeros((Tp, n_experts), jnp.uint32)
+    onehot = onehot.at[jnp.repeat(jnp.arange(T), k), topi.reshape(-1)].set(1)
+    w = onehot.reshape(Tp // 32, 32, n_experts)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(w * weights[None, :, None], axis=1, dtype=jnp.uint32).T

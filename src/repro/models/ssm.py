@@ -1,0 +1,192 @@
+"""Mamba-2 (SSD, state-space duality) block — chunked scan + O(1) decode.
+
+Recurrence (per head, state (P, N)):
+    h_t = exp(dt_t * A) h_{t-1} + B_t ⊗ (dt_t * x_t)
+    y_t = C_t · h_t + D * x_t
+Training/prefill uses the chunked SSD algorithm (arXiv:2405.21060): intra-
+chunk attention-like einsum with a causal decay matrix + inter-chunk state
+scan (`lax.scan` over chunks keeps the HLO O(1) in sequence length).
+Decode updates the recurrent state directly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import cast, dense_init
+
+
+class SSMSpec(NamedTuple):
+    d_inner: int
+    state_dim: int          # N
+    head_dim: int = 64      # P
+    n_groups: int = 1       # G (B/C groups)
+    d_conv: int = 4
+    chunk: int = 256
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_ssm(key, d_model: int, spec: SSMSpec):
+    k1, k2, k3 = jax.random.split(key, 3)
+    H, N, G = spec.n_heads, spec.state_dim, spec.n_groups
+    conv_ch = spec.d_inner + 2 * G * N
+    proj_out = 2 * spec.d_inner + 2 * G * N + H  # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(k1, (d_model, proj_out)),
+        "conv_w": jax.random.normal(k2, (spec.d_conv, conv_ch), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_proj": dense_init(k3, (spec.d_inner, d_model)),
+    }
+
+
+def _split_proj(proj, spec: SSMSpec):
+    di, gn, H = spec.d_inner, spec.n_groups * spec.state_dim, spec.n_heads
+    z, xc, Bc, Cc, dt = jnp.split(proj, [di, 2 * di, 2 * di + gn, 2 * di + 2 * gn], axis=-1)
+    return z, xc, Bc, Cc, dt
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv1d: u (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        up, w[:, None, :].astype(u.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=u.shape[-1],
+    )
+    return out + b.astype(u.dtype)
+
+
+def ssd_scan(xbar, dA, Bm, Cm, spec: SSMSpec, h0=None):
+    """Chunked SSD.  xbar (B,S,H,P) = dt*x;  dA (B,S,H);  Bm/Cm (B,S,G,N).
+
+    Returns (y (B,S,H,P), final state (B,H,P,N))."""
+    b, S, H, P = xbar.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Lc = min(spec.chunk, S)
+    assert S % Lc == 0, (S, Lc)
+    nc = S // Lc
+    rep = H // G
+
+    def csh(t, extra):  # (B,S,...) -> (B,nc,Lc,...)
+        return t.reshape((b, nc, Lc) + extra)
+
+    xbar_c = csh(xbar, (H, P))
+    dA_c = csh(dA, (H,))
+    B_c = jnp.repeat(csh(Bm, (G, N)), rep, axis=3)          # (b,nc,Lc,H,N)
+    C_c = jnp.repeat(csh(Cm, (G, N)), rep, axis=3)
+
+    cum = jnp.cumsum(dA_c, axis=2)                          # inclusive, (b,nc,Lc,H)
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i>=j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (b,nc,Lc,Lc,H)
+    ii = jnp.arange(Lc)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    # mask BEFORE exp: exp of the (positive) non-causal diffs overflows and
+    # poisons the backward pass through where (inf * 0 = nan)
+    Lmat = jnp.exp(jnp.where(causal, diff, -1e30)).astype(xbar.dtype)
+    CB = jnp.einsum("bclhn,bcshn->bclsh", C_c, B_c)          # (b,nc,Lc,Lc,H)
+    y_intra = jnp.einsum("bclsh,bclsh,bcshp->bclhp", CB, Lmat, xbar_c)
+
+    # chunk state contributions: sum_j exp(cum_last - cum_j) B_j (x_j)
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)             # (b,nc,Lc,H)
+    contrib = jnp.einsum("bcshn,bcsh,bcshp->bchpn", B_c, decay_out.astype(xbar.dtype), xbar_c)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (b,nc,H)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        cd, ct = inp                                         # (b,H), (b,H,P,N)
+        h_prev = h
+        h = cd[:, :, None, None] * h + ct.astype(jnp.float32)
+        return h, h_prev
+
+    hT, h_prevs = jax.lax.scan(step, h0,
+                               (jnp.moveaxis(chunk_decay, 1, 0),
+                                jnp.moveaxis(contrib, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                    # (b,nc,H,P,N)
+
+    # inter-chunk: y_i += exp(cum_i) C_i · h_prev(chunk)
+    y_inter = jnp.einsum("bclhn,bclh,bchpn->bclhp",
+                         C_c, jnp.exp(cum).astype(xbar.dtype),
+                         h_prevs.astype(xbar.dtype))
+    y = (y_intra + y_inter).reshape(b, S, H, P)
+    return y, hT
+
+
+def ssm_block(params, spec: SSMSpec, x):
+    """Full-sequence Mamba-2 block: x (B,S,D) -> (B,S,D)."""
+    Bsz, S, Dm = x.shape
+    H, P, N, G = spec.n_heads, spec.head_dim, spec.state_dim, spec.n_groups
+    proj = jnp.einsum("bsd,dp->bsp", x, cast(params["in_proj"]))
+    z, xc, Bc, Cc, dt = _split_proj(proj, spec)
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"], params["conv_b"])
+                           .astype(jnp.float32)).astype(x.dtype)
+    xc, Bc, Cc = jnp.split(conv_out, [spec.d_inner, spec.d_inner + G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(params["A_log"])                                       # (H,)
+    xh = xc.reshape(Bsz, S, H, P)
+    xbar = xh * dt[..., None].astype(x.dtype)
+    dA = dt * A                                                          # (B,S,H)
+    Bm = Bc.reshape(Bsz, S, G, N)
+    Cm = Cc.reshape(Bsz, S, G, N)
+    y, _ = ssd_scan(xbar, dA, Bm, Cm, spec)
+    y = y + xh * cast(params["D"])[None, None, :, None]
+    y = y.reshape(Bsz, S, spec.d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsi,id->bsd", y, cast(params["out_proj"]))
+
+
+class SSMCache(NamedTuple):
+    h: jax.Array         # (B, H, P, N) fp32 recurrent state
+    conv: jax.Array      # (B, d_conv-1, conv_ch) rolling conv inputs
+
+    @classmethod
+    def zeros(cls, Bsz, spec: SSMSpec, dtype=jnp.bfloat16):
+        conv_ch = spec.d_inner + 2 * spec.n_groups * spec.state_dim
+        return cls(jnp.zeros((Bsz, spec.n_heads, spec.head_dim, spec.state_dim), jnp.float32),
+                   jnp.zeros((Bsz, spec.d_conv - 1, conv_ch), dtype))
+
+    @classmethod
+    def spec(cls, Bsz, spec: SSMSpec, dtype=jnp.bfloat16):
+        conv_ch = spec.d_inner + 2 * spec.n_groups * spec.state_dim
+        return cls(jax.ShapeDtypeStruct((Bsz, spec.n_heads, spec.head_dim, spec.state_dim), jnp.float32),
+                   jax.ShapeDtypeStruct((Bsz, spec.d_conv - 1, conv_ch), dtype))
+
+
+def ssm_decode(params, spec: SSMSpec, x, cache: SSMCache):
+    """One-token decode: x (B,1,D) -> (y (B,1,D), new cache).  O(1) in seq."""
+    Bsz = x.shape[0]
+    H, P, N, G = spec.n_heads, spec.head_dim, spec.state_dim, spec.n_groups
+    proj = jnp.einsum("bsd,dp->bsp", x, cast(params["in_proj"]))[:, 0]
+    z, xc, Bc, Cc, dt = _split_proj(proj, spec)
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)          # (B, C)
+    window = jnp.concatenate([cache.conv, conv_in[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          params["conv_w"]) + params["conv_b"]
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)
+    xc, Bc, Cc = jnp.split(conv_out, [spec.d_inner, spec.d_inner + G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])     # (B,H)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A)                                                  # (B,H)
+    x_raw = xc.reshape(Bsz, H, P).astype(jnp.float32)
+    xh = x_raw * dt[..., None]
+    Bm = jnp.repeat(Bc.reshape(Bsz, G, N), H // G, axis=1).astype(jnp.float32)
+    Cm = jnp.repeat(Cc.reshape(Bsz, G, N), H // G, axis=1).astype(jnp.float32)
+    h = dA[:, :, None, None] * cache.h + xh[..., None] * Bm[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", h, Cm)
+    y = y + x_raw * params["D"][None, :, None]
+    y = y.reshape(Bsz, spec.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bi,id->bd", y, cast(params["out_proj"]))[:, None, :]
+    return out, SSMCache(h, window[:, 1:, :])

@@ -1,0 +1,402 @@
+"""Unified LM covering all assigned families.
+
+One ``LM`` class builds, from a ModelConfig:
+  * dense / vlm decoders (GQA, bias, softcaps, local/global alternation,
+    parallel blocks, sandwich norms);
+  * MoE decoders (every layer or every ``moe_period``-th layer, optional
+    dense-residual / shared-expert branch);
+  * attention-free SSM stacks (Mamba-2 SSD);
+  * hybrid stacks (Mamba-2 backbone + shared attention block — Zamba-2);
+  * encoder-decoder (whisper) with stub frame embeddings.
+
+Layers are stacked and scanned (`lax.scan`) so HLO size is O(1) in depth —
+required to compile 512-way SPMD programs for 40+ dry-run cells on CPU.
+Params are plain nested dicts; ``init`` builds real arrays, ``abstract_params``
+builds ShapeDtypeStructs for allocation-free dry-runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+
+from .attention import (AttnSpec, KVCache, attention, causal_mask,
+                        cross_attention, decode_attention, init_attention,
+                        _project_qkv, _sdpa)
+from .layers import (COMPUTE_DTYPE, cast, cross_entropy, dense_init,
+                     embed_init, gated_mlp, gelu_mlp, init_gated_mlp,
+                     init_gelu_mlp, layer_norm, rms_norm, softcap)
+from .moe import init_moe, moe_block
+from .ssm import SSMCache, init_ssm, ssm_block, ssm_decode
+
+
+class Plan(NamedTuple):
+    kind: str                 # 'attn' | 'ssm'
+    ffn: str = "mlp"          # 'mlp' | 'moe' | 'none'
+    window: Optional[int] = None
+
+
+def _tree_stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _tree_specs(tree):
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+
+class LM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.attn_spec = AttnSpec(
+            n_heads=cfg.n_heads or 1,
+            n_kv_heads=cfg.n_kv_heads or (cfg.n_heads or 1),
+            head_dim=cfg.resolved_head_dim,
+            qkv_bias=cfg.qkv_bias,
+            attn_softcap=cfg.attn_softcap,
+            rope_theta=cfg.rope_theta,
+            use_rope=not cfg.learned_pos,
+        )
+        self.plans = self._layer_plans()
+
+    # ------------------------------------------------------------------
+    # layer plans: the repeating pattern inside one scanned block
+    # ------------------------------------------------------------------
+    def _layer_plans(self):
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return [Plan("ssm", "none")]
+        if cfg.family == "hybrid":
+            return [Plan("ssm", "none")]  # shared attn handled separately
+        if cfg.local_global_period:
+            return [Plan("attn", "mlp", cfg.sliding_window), Plan("attn", "mlp", None)]
+        if cfg.moe is not None and cfg.moe_period > 1:
+            return [Plan("attn", "mlp", None), Plan("attn", "moe", None)]
+        if cfg.moe is not None:
+            return [Plan("attn", "moe", None)]
+        return [Plan("attn", "mlp", cfg.sliding_window)]
+
+    @property
+    def period(self) -> int:
+        return len(self.plans)
+
+    @property
+    def n_blocks(self) -> int:
+        assert self.cfg.n_layers % self.period == 0, (self.cfg.n_layers, self.period)
+        return self.cfg.n_layers // self.period
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def _init_layer(self, key, plan: Plan) -> Dict[str, Any]:
+        cfg = self.cfg
+        keys = jax.random.split(key, 6)
+        p: Dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32)}
+        if cfg.norm == "layer":
+            p["ln1_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if plan.kind == "ssm":
+            p["ssm"] = init_ssm(keys[0], cfg.d_model, cfg.ssm)
+            return p
+        p["attn"] = init_attention(keys[0], cfg.d_model, self.attn_spec)
+        if cfg.post_norms:
+            p["ln1_post"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if cfg.parallel_block:
+            p["mlp"] = init_gated_mlp(keys[1], cfg.d_model, cfg.d_ff)
+            return p
+        p["ln2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if cfg.norm == "layer":
+            p["ln2_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if plan.ffn == "moe":
+            p["moe"] = init_moe(keys[2], cfg.d_model, cfg.moe)
+            if cfg.moe.dense_residual:
+                p["mlp"] = init_gated_mlp(keys[3], cfg.d_model, cfg.d_ff)
+        elif cfg.norm == "layer" and cfg.enc_dec:
+            p["mlp"] = init_gelu_mlp(keys[2], cfg.d_model, cfg.d_ff)
+        else:
+            p["mlp"] = init_gated_mlp(keys[2], cfg.d_model, cfg.d_ff)
+        if cfg.post_norms:
+            p["ln2_post"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        return p
+
+    def _init_block(self, key) -> Dict[str, Any]:
+        keys = jax.random.split(key, self.period)
+        return {"layers": [self._init_layer(k, pl) for k, pl in zip(keys, self.plans)]}
+
+    def init(self, rng) -> Dict[str, Any]:
+        cfg = self.cfg
+        r_embed, r_blocks, r_extra = jax.random.split(rng, 3)
+        params: Dict[str, Any] = {
+            "embed": embed_init(r_embed, (cfg.vocab, cfg.d_model)),
+            "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        if cfg.norm == "layer":
+            params["ln_f_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if not cfg.tie_embeddings:
+            params["unembed"] = dense_init(jax.random.fold_in(r_embed, 1),
+                                           (cfg.d_model, cfg.vocab))
+        if cfg.enc_dec:
+            return self._init_encdec(params, r_blocks, r_extra)
+        if cfg.family == "hybrid":
+            return self._init_hybrid(params, r_blocks, r_extra)
+        bkeys = jax.random.split(r_blocks, self.n_blocks)
+        params["blocks"] = _tree_stack([self._init_block(k) for k in bkeys])
+        if cfg.learned_pos:
+            params["pos_dec"] = embed_init(r_extra, (cfg.max_positions, cfg.d_model))
+        return params
+
+    def _init_hybrid(self, params, r_blocks, r_extra):
+        cfg = self.cfg
+        per = cfg.hybrid_period
+        n_groups = cfg.n_layers // per
+        rest = cfg.n_layers - n_groups * per
+        gkeys = jax.random.split(r_blocks, max(n_groups, 1))
+        params["groups"] = _tree_stack([
+            _tree_stack([self._init_layer(k2, Plan("ssm", "none"))
+                         for k2 in jax.random.split(k, per)])
+            for k in gkeys])
+        if rest:
+            params["rest"] = _tree_stack([
+                self._init_layer(k, Plan("ssm", "none"))
+                for k in jax.random.split(r_extra, rest)])
+        sk = jax.random.split(jax.random.fold_in(r_extra, 7), 3)
+        params["shared"] = {
+            "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+            "attn": init_attention(sk[0], cfg.d_model, self.attn_spec),
+            "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+            "mlp": init_gated_mlp(sk[1], cfg.d_model, cfg.d_ff),
+        }
+        return params
+
+    def _init_encdec(self, params, r_blocks, r_extra):
+        cfg = self.cfg
+        ekeys = jax.random.split(r_blocks, cfg.n_enc_layers)
+        dkeys = jax.random.split(jax.random.fold_in(r_blocks, 1), cfg.n_layers)
+
+        def enc_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+                "ln1_b": jnp.zeros((cfg.d_model,), jnp.float32),
+                "attn": init_attention(k1, cfg.d_model, self.attn_spec),
+                "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+                "ln2_b": jnp.zeros((cfg.d_model,), jnp.float32),
+                "mlp": init_gelu_mlp(k2, cfg.d_model, cfg.d_ff),
+            }
+
+        def dec_layer(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {
+                "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+                "ln1_b": jnp.zeros((cfg.d_model,), jnp.float32),
+                "attn": init_attention(k1, cfg.d_model, self.attn_spec),
+                "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+                "ln2_b": jnp.zeros((cfg.d_model,), jnp.float32),
+                "xattn": init_attention(k2, cfg.d_model, self.attn_spec),
+                "ln3": jnp.zeros((cfg.d_model,), jnp.float32),
+                "ln3_b": jnp.zeros((cfg.d_model,), jnp.float32),
+                "mlp": init_gelu_mlp(k3, cfg.d_model, cfg.d_ff),
+            }
+
+        params["enc_blocks"] = _tree_stack([enc_layer(k) for k in ekeys])
+        params["dec_blocks"] = _tree_stack([dec_layer(k) for k in dkeys])
+        params["pos_enc"] = embed_init(r_extra, (cfg.n_frontend_positions, cfg.d_model))
+        params["pos_dec"] = embed_init(jax.random.fold_in(r_extra, 1),
+                                       (cfg.max_positions, cfg.d_model))
+        params["ln_enc"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        params["ln_enc_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        return params
+
+    def abstract_params(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ------------------------------------------------------------------
+    # norms / embeds / logits
+    # ------------------------------------------------------------------
+    def _norm(self, p, x, name="ln1"):
+        if self.cfg.norm == "layer":
+            return layer_norm(p[name], p[name + "_b"], x)
+        return rms_norm(p[name], x)
+
+    def _embed_tokens(self, params, tokens):
+        x = cast(params["embed"])[tokens]
+        if self.cfg.embed_scale:
+            x = x * jnp.asarray(self.cfg.d_model ** 0.5, COMPUTE_DTYPE)
+        return x
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", x, cast(params["embed"]))
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", x, cast(params["unembed"]))
+        logits = shd.constrain(logits, "logits")
+        return softcap(logits, cfg.logit_softcap)
+
+    # ------------------------------------------------------------------
+    # blocks — full-sequence path
+    # ------------------------------------------------------------------
+    def _apply_layer(self, lp, plan: Plan, x):
+        cfg = self.cfg
+        if plan.kind == "ssm":
+            return x + ssm_block(lp["ssm"], cfg.ssm, self._norm(lp, x)), 0.0
+        h = self._norm(lp, x)
+        a = attention(lp["attn"], self.attn_spec, h, window=plan.window)
+        if cfg.post_norms:
+            a = rms_norm(lp["ln1_post"], a)
+        if cfg.parallel_block:
+            return x + a + gated_mlp(lp["mlp"], h), 0.0
+        x = x + a
+        h2 = self._norm(lp, x, "ln2")
+        aux = 0.0
+        if plan.ffn == "moe":
+            if (shd.current_variant() == "opt_ep"
+                    and shd.current_mesh() is not None):
+                from .moe import moe_block_ep
+                f, aux = moe_block_ep(lp["moe"], cfg.moe, h2, shd.current_mesh())
+            else:
+                f, aux = moe_block(lp["moe"], cfg.moe, h2)
+            if cfg.moe.dense_residual:
+                f = f + gated_mlp(lp["mlp"], h2)
+        else:
+            if cfg.enc_dec:
+                f = gelu_mlp(lp["mlp"], h2)
+            else:
+                f = gated_mlp(lp["mlp"], h2)
+        if cfg.post_norms:
+            f = rms_norm(lp["ln2_post"], f)
+        return x + f, aux
+
+    def _apply_block(self, bp, x):
+        aux = 0.0
+        for i, plan in enumerate(self.plans):
+            x, a = self._apply_layer(bp["layers"][i], plan, x)
+            aux = aux + a
+        x = shd.constrain(x, "activation")
+        return x, aux
+
+    def _remat(self, fn):
+        """Activation-checkpoint policy (§Perf iteration 4):
+        'full'    — recompute everything (lowest memory, +1 fwd of FLOPs);
+        'dots_nb' — save weight-matmul outputs (kills the dominant backward
+                    recompute traffic; scores still rematerialized);
+        'none'    — no remat."""
+        if not self.cfg.remat or self.cfg.remat_policy == "none":
+            return fn
+        if self.cfg.remat_policy == "dots_nb":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        return jax.checkpoint(fn)
+
+    def _scan_blocks(self, params, x):
+        body = self._remat(self._apply_block)
+
+        def step(carry, bp):
+            x, aux = carry
+            x, a = body(bp, x)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(step, (x, 0.0), params["blocks"])
+        return x, aux
+
+    def _shared_block(self, sp, x):
+        h = rms_norm(sp["ln1"], x)
+        x = x + attention(sp["attn"], self.attn_spec, h)
+        x = x + gated_mlp(sp["mlp"], rms_norm(sp["ln2"], x))
+        return x
+
+    def _hybrid_forward(self, params, x):
+        cfg = self.cfg
+
+        def group_step(x, gp):
+            def layer_step(x, lp):
+                y, _ = self._apply_layer(lp, Plan("ssm", "none"), x)
+                return y, None
+            x, _ = jax.lax.scan(layer_step, x, gp)
+            x = self._shared_block(params["shared"], x)
+            return shd.constrain(x, "activation"), None
+
+        group_step = self._remat(group_step)
+        x, _ = jax.lax.scan(lambda c, g: group_step(c, g), x, params["groups"])
+        if "rest" in params:
+            def layer_step(x, lp):
+                y, _ = self._apply_layer(lp, Plan("ssm", "none"), x)
+                return y, None
+            x, _ = jax.lax.scan(layer_step, x, params["rest"])
+        return x, 0.0
+
+    # ------------------------------------------------------------------
+    # public: forward / loss
+    # ------------------------------------------------------------------
+    def forward(self, params, batch):
+        """batch: {'tokens': (B,S_text), optional 'frontend': (B,P,D)}.
+
+        Returns logits over the *text* positions (B, S_text, V)."""
+        cfg = self.cfg
+        if cfg.enc_dec:
+            return self._encdec_forward(params, batch)
+        tok = self._embed_tokens(params, batch["tokens"])
+        P_front = 0
+        if cfg.n_frontend_positions and "frontend" in batch:
+            front = cast(batch["frontend"])
+            x = jnp.concatenate([front, tok], axis=1)
+            P_front = front.shape[1]
+        else:
+            x = tok
+        if cfg.learned_pos:
+            x = x + cast(params["pos_dec"])[: x.shape[1]][None]
+        x = shd.constrain(x, "activation")
+        if cfg.family == "hybrid":
+            x, aux = self._hybrid_forward(params, x)
+        else:
+            x, aux = self._scan_blocks(params, x)
+        x = self._norm(params, x, "ln_f")
+        logits = self._logits(params, x[:, P_front:])
+        return logits, aux
+
+    def _encoder(self, params, frames):
+        cfg = self.cfg
+        x = cast(frames) + cast(params["pos_enc"])[: frames.shape[1]][None]
+
+        def step(x, lp):
+            h = layer_norm(lp["ln1"], lp["ln1_b"], x)
+            q, k, v = _project_qkv(lp["attn"], self.attn_spec, h, h)
+            a = _sdpa(q, k, v, None, self.attn_spec)
+            x = x + jnp.einsum("bsh,hd->bsd", a, cast(lp["attn"]["wo"]))
+            h2 = layer_norm(lp["ln2"], lp["ln2_b"], x)
+            x = x + gelu_mlp(lp["mlp"], h2)
+            return x, None
+
+        step = self._remat(step)
+        x, _ = jax.lax.scan(step, x, params["enc_blocks"])
+        return layer_norm(params["ln_enc"], params["ln_enc_b"], x)
+
+    def _encdec_forward(self, params, batch):
+        cfg = self.cfg
+        memory = self._encoder(params, batch["frontend"])
+        tok = self._embed_tokens(params, batch["tokens"])
+        S = tok.shape[1]
+        x = tok + cast(params["pos_dec"])[:S][None]
+
+        def step(x, lp):
+            h = layer_norm(lp["ln1"], lp["ln1_b"], x)
+            a = attention(lp["attn"], self.attn_spec, h)
+            x = x + a
+            h2 = layer_norm(lp["ln2"], lp["ln2_b"], x)
+            x = x + cross_attention(lp["xattn"], self.attn_spec, h2, memory)
+            h3 = layer_norm(lp["ln3"], lp["ln3_b"], x)
+            x = x + gelu_mlp(lp["mlp"], h3)
+            return x, None
+
+        step = self._remat(step)
+        x, _ = jax.lax.scan(step, x, params["dec_blocks"])
+        x = self._norm(params, x, "ln_f")
+        return self._logits(params, x), 0.0
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        tokens = batch["tokens"]
+        ce = cross_entropy(logits[:, :-1], tokens[:, 1:])
+        return ce + 0.01 * aux

@@ -1,0 +1,46 @@
+"""Batched greedy serving loop (prefill + decode) over the unified LM."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode as dec
+from repro.models.transformer import LM
+
+
+def prefill_into_cache(model: LM, params, cache, tokens):
+    """Sequentially decode the prompt into the cache (teacher forcing).
+
+    Simple and exact for every family (attention caches, SSM states,
+    hybrids); production prefill would batch this per-chunk."""
+    B, S = tokens.shape
+    step = jax.jit(lambda p, c, t: dec.serve_step(model, p, c, t))
+    logits = None
+    for i in range(S):
+        logits, cache = step(params, cache, tokens[:, i:i + 1])
+    return logits, cache
+
+
+def generate(model: LM, params, prompts: np.ndarray, max_new_tokens: int,
+             max_len: Optional[int] = None,
+             frontend: Optional[np.ndarray] = None) -> np.ndarray:
+    """Greedy generation for a batch of equal-length prompts."""
+    B, S0 = prompts.shape
+    max_len = max_len or (S0 + max_new_tokens)
+    cache = dec.init_cache(model, B, max_len)
+    if model.cfg.enc_dec:
+        assert frontend is not None
+        xk, xv = dec.encdec_prefill_cross(model, params, jnp.asarray(frontend))
+        cache["xk"], cache["xv"] = xk, xv
+    logits, cache = prefill_into_cache(model, params, cache, jnp.asarray(prompts))
+    step = jax.jit(lambda p, c, t: dec.serve_step(model, p, c, t))
+    out = [prompts]
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    for _ in range(max_new_tokens):
+        out.append(np.asarray(tok))
+        logits, cache = step(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    return np.concatenate(out, axis=1)

@@ -1,0 +1,72 @@
+"""Training loop wiring model + optimizer + bitmap data pipeline + fault
+tolerance + optional EWAH gradient compression into one entry point."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import BitmapDataPipeline
+from repro.distributed import grad_compression as gcomp
+from repro.distributed.fault_tolerance import (SupervisorConfig,
+                                               TrainSupervisor)
+from repro.models.transformer import LM
+from .optimizer import AdamW, AdamWConfig
+from .step import make_train_step
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    batch_size: int = 8
+    seq_len: int = 256
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    grad_compression: Optional[float] = None  # keep_ratio, e.g. 0.1
+    lr: float = 3e-4
+
+
+def make_compressed_train_step(model: LM, opt: AdamW, keep_ratio: float):
+    """train_step with EWAH block-sparsified gradients + error feedback.
+
+    Host-side stats (wire bytes) are returned via io_callback-free design:
+    the jitted part applies the mask; stats are recomputed on demand."""
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        kept, new_err_flat, _, _ = gcomp.sparsify(
+            grads, opt_state["error"], keep_ratio)
+        grads_s = gcomp._unflatten(grads, kept)
+        new_err = gcomp._unflatten(grads, new_err_flat)
+        params, inner = opt.apply(params, grads_s, opt_state["inner"])
+        return params, {"inner": inner, "error": new_err}, loss
+    return train_step
+
+
+def train(model: LM, cfg: TrainConfig, pipeline: BitmapDataPipeline,
+          rng=None, inject_failure_at: Optional[int] = None):
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    params = model.init(rng)
+    opt = AdamW(AdamWConfig(lr=cfg.lr, warmup_steps=max(cfg.steps // 20, 1),
+                            total_steps=cfg.steps))
+    if cfg.grad_compression:
+        step_fn = jax.jit(make_compressed_train_step(model, opt,
+                                                     cfg.grad_compression))
+        opt_state = {"inner": opt.init(params),
+                     "error": gcomp.init_error(params)}
+    else:
+        step_fn = jax.jit(make_train_step(model, opt))
+        opt_state = opt.init(params)
+
+    def data_fn(step: int) -> Dict[str, Any]:
+        b = pipeline.batch(step, cfg.batch_size, cfg.seq_len)
+        return {"tokens": jnp.asarray(b["tokens"])}
+
+    sup = TrainSupervisor(
+        SupervisorConfig(ckpt_dir=cfg.ckpt_dir, ckpt_every=cfg.ckpt_every),
+        step_fn, {"params": params, "opt": opt_state}, data_fn)
+    if inject_failure_at is not None:
+        sup.inject_failure_at = inject_failure_at
+    report = sup.run(cfg.steps)
+    return sup.state["params"], report

@@ -1,0 +1,92 @@
+"""AdamW + cosine schedule + global-norm clipping (no optax dependency).
+
+State is a pytree mirroring params: {'m': .., 'v': .., 'step': scalar}.
+fp32 moments; params are fp32 masters (bf16 compute happens in the model).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    # storage dtype for the Adam moments (math stays fp32): "f32" | "bf16" —
+    # bf16 moments halve optimizer HBM (§Perf memory-fit lever for 480B)
+    moment_dtype: str = "f32"
+
+
+def cosine_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * cfg.lr * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+class AdamW:
+    def __init__(self, cfg: AdamWConfig = AdamWConfig()):
+        self.cfg = cfg
+
+    def init(self, params) -> Any:
+        mdt = jnp.bfloat16 if self.cfg.moment_dtype == "bf16" else jnp.float32
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def apply(self, params, grads, state):
+        cfg = self.cfg
+        step = state["step"] + 1
+        if cfg.clip_norm is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        lr = cosine_lr(cfg, step)
+        bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            mdt = m.dtype
+            m = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+            v = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            p32 = p.astype(jnp.float32)
+            step_ = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p32
+            return ((p32 - lr * step_).astype(p.dtype), m.astype(mdt),
+                    v.astype(mdt))
+
+        # NOTE §Perf iteration 10 tried lax.scan-chunking this update over the
+        # stacked-layer axis to shrink fp32 temporaries; it REFUTED: the scan
+        # breaks XLA's donation aliasing on the stacked leaves and peak HBM
+        # rose 13.9 -> 21.0 GiB.  Whole-leaf elementwise update stays.
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m, "v": new_v, "step": step}

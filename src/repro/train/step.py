@@ -1,0 +1,52 @@
+"""train_step / prefill_step factories — what the dry-run lowers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import LM
+from .optimizer import AdamW
+
+
+def make_train_step(model: LM, opt: AdamW, n_micro: int = 1):
+    """n_micro > 1: gradient accumulation over microbatches (lax.scan) —
+    divides activation live-set by n_micro at the cost of n_micro weight
+    gathers per step; the §Perf memory-fit lever for the 400-480B archs."""
+    if n_micro == 1:
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            params, opt_state = opt.apply(params, grads, opt_state)
+            return params, opt_state, loss
+        return train_step
+
+    def train_step(params, opt_state, batch):
+        def micro(carry, mb):
+            gacc, lacc = carry
+            loss, grads = jax.value_and_grad(model.loss)(params, mb)
+            gacc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32) / n_micro,
+                                gacc, grads)
+            return (gacc, lacc + loss / n_micro), None
+
+        mbatch = jax.tree.map(
+            lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+            batch)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss), _ = jax.lax.scan(micro, (zeros, 0.0), mbatch)
+        params, opt_state = opt.apply(params, grads, opt_state)
+        return params, opt_state, loss
+    return train_step
+
+
+def make_prefill_step(model: LM):
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch)
+        return logits
+    return prefill_step
+
+
+def make_serve_step(model: LM):
+    from repro.models import decode as dec
+
+    def serve_step(params, cache, tokens):
+        return dec.serve_step(model, params, cache, tokens)
+    return serve_step

@@ -1,0 +1,159 @@
+"""Checkpointing, fault tolerance, gradient compression, data pipeline."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.data.pipeline import BitmapDataPipeline, Corpus
+from repro.distributed import checkpoint as ckpt
+from repro.distributed import grad_compression as gcomp
+from repro.models import LM
+from repro.train.loop import TrainConfig, train
+from repro.train.optimizer import AdamW, AdamWConfig
+
+
+@pytest.fixture()
+def tiny_model():
+    return LM(ARCHS["qwen2-0.5b"].reduced())
+
+
+# -- checkpointing -----------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path, tiny_model):
+    params = tiny_model.init(jax.random.PRNGKey(0))
+    opt = AdamW()
+    state = {"params": params, "opt": opt.init(params)}
+    ckpt.save(str(tmp_path), 7, state, extra={"next_step": 7})
+    step, restored, extra = ckpt.load(str(tmp_path), state)
+    assert step == 7 and extra["next_step"] == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomic_and_gc(tmp_path, tiny_model):
+    params = {"w": jnp.arange(10.0)}
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, params, keep=2)
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert steps == ["step_00000004", "step_00000005"]
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+def test_checkpoint_checksum_detects_corruption(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"w": jnp.arange(4.0)})
+    # corrupt the shard
+    shard = next((tmp_path / "step_00000001").glob("shard_*.npz"))
+    data = dict(np.load(shard))
+    key = list(data)[0]
+    data[key] = data[key] + 1
+    np.savez(shard, **data)
+    with pytest.raises(IOError):
+        ckpt.load(str(tmp_path), {"w": jnp.arange(4.0)})
+
+
+def test_elastic_restore_onto_mesh(tmp_path):
+    """Checkpoint saved logically restores under a (1,1) host mesh."""
+    from repro.distributed import sharding as shd
+    from repro.launch.mesh import make_host_mesh
+    params = {"mlp": {"wi": jnp.ones((8, 16)), "wo": jnp.ones((16, 8))}}
+    ckpt.save(str(tmp_path), 3, params)
+    mesh = make_host_mesh(1, 1)
+    shards = shd.param_shardings(params, mesh)
+    step, restored, _ = ckpt.load(str(tmp_path), params, shardings=shards)
+    assert step == 3
+    assert restored["mlp"]["wi"].sharding.mesh.shape == {"data": 1, "model": 1}
+
+
+# -- fault tolerance -----------------------------------------------------------
+
+def test_train_restarts_after_injected_failure(tmp_path, tiny_model):
+    pipe = BitmapDataPipeline(Corpus.synthetic(n_docs=64, doc_len=64,
+                                               vocab=tiny_model.cfg.vocab))
+    cfg = TrainConfig(steps=9, batch_size=2, seq_len=32,
+                      ckpt_dir=str(tmp_path), ckpt_every=3)
+    params, report = train(tiny_model, cfg, pipe, inject_failure_at=5)
+    assert report.restarts == 1
+    # restart replays from step 3 checkpoint: 5 pre-crash + (9-3) post
+    assert report.steps_run >= 9
+    assert np.isfinite(report.losses).all()
+
+
+def test_training_loss_decreases(tmp_path, tiny_model):
+    pipe = BitmapDataPipeline(Corpus.synthetic(n_docs=32, doc_len=64,
+                                               vocab=tiny_model.cfg.vocab))
+    cfg = TrainConfig(steps=30, batch_size=4, seq_len=32,
+                      ckpt_dir=str(tmp_path), ckpt_every=100, lr=1e-3)
+    params, report = train(tiny_model, cfg, pipe)
+    first = np.mean(report.losses[:5])
+    last = np.mean(report.losses[-5:])
+    assert last < first, (first, last)
+
+
+# -- gradient compression -------------------------------------------------------
+
+def test_sparsify_identity_at_full_keep():
+    grads = {"a": jnp.arange(512.0), "b": jnp.ones((256,))}
+    err = gcomp.init_error(grads)
+    out, new_err, stats = gcomp.compressed_allreduce(grads, err, keep_ratio=1.0)
+    for k in grads:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(grads[k]))
+    assert max(float(jnp.abs(l).max()) for l in jax.tree.leaves(new_err)) == 0
+
+
+def test_error_feedback_accumulates_dropped_mass():
+    grads = {"w": jnp.concatenate([jnp.full((256,), 10.0), jnp.full((256,), 0.1)])}
+    err = gcomp.init_error(grads)
+    out, err, stats = gcomp.compressed_allreduce(grads, err, keep_ratio=0.5)
+    # big block kept, small block dropped into error feedback
+    assert float(out["w"][:256].sum()) > 0
+    assert float(out["w"][256:].sum()) == 0
+    np.testing.assert_allclose(np.asarray(err["w"][256:]), 0.1, rtol=1e-6)
+    # next round: error feedback makes the dropped block win eventually
+    out2, err2, _ = gcomp.compressed_allreduce(
+        {"w": jnp.zeros(512)}, err, keep_ratio=0.5)
+    assert float(jnp.abs(out2["w"][256:]).sum()) > 0
+
+
+def test_compression_ratio_reported():
+    g = {"w": jnp.zeros((256 * 64,)).at[0].set(1.0)}
+    _, _, stats = gcomp.compressed_allreduce(g, gcomp.init_error(g), 1 / 64)
+    assert stats.ratio > 10
+    assert stats.bitmap_words < 16
+
+
+def test_compressed_training_converges(tmp_path, tiny_model):
+    pipe = BitmapDataPipeline(Corpus.synthetic(n_docs=32, doc_len=64,
+                                               vocab=tiny_model.cfg.vocab))
+    cfg = TrainConfig(steps=20, batch_size=4, seq_len=32,
+                      ckpt_dir=str(tmp_path), ckpt_every=100, lr=1e-3,
+                      grad_compression=0.25)
+    params, report = train(tiny_model, cfg, pipe)
+    assert np.mean(report.losses[-5:]) < np.mean(report.losses[:5])
+
+
+# -- data pipeline ----------------------------------------------------------------
+
+def test_pipeline_selection_matches_naive():
+    corpus = Corpus.synthetic(n_docs=512, doc_len=32)
+    pipe = BitmapDataPipeline(corpus)
+    n = pipe.select(conj={"lang": 3, "quality": 2})
+    want = np.flatnonzero((pipe.table[:, 1] == 3) & (pipe.table[:, 3] == 2))
+    assert n == len(want)
+    assert np.array_equal(pipe.selected, want)
+
+
+def test_pipeline_batches_are_seekable():
+    corpus = Corpus.synthetic(n_docs=128, doc_len=64)
+    pipe = BitmapDataPipeline(corpus)
+    pipe.select(conj={"quality": 1})
+    b1 = pipe.batch(11, 4, 32)
+    b2 = pipe.batch(11, 4, 32)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_pipeline_sorting_shrinks_index():
+    corpus = Corpus.synthetic(n_docs=4096, doc_len=8)
+    stats = BitmapDataPipeline(corpus, sort=True).index_stats()
+    assert stats["compression_gain"] > 1.2, stats

@@ -1,0 +1,120 @@
+"""k-of-N encoding, Algorithm 2 allocation, Gray codes, sorting methods."""
+import itertools
+from math import comb
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ColumnEncoder, WAH, bitmaps_needed, choose_k,
+                        block_sort, gray_sort, lex_sort, lex_sort_bits,
+                        random_shuffle, random_sort, revolving_door,
+                        unrank_lex, BitmapIndex, order_columns,
+                        order_columns_freq_aware)
+from repro.core import synth
+from repro.core.ewah import EWAH
+
+
+def test_unrank_matches_itertools():
+    for L, k in [(5, 2), (6, 3), (8, 4), (9, 1), (12, 2)]:
+        want = list(itertools.combinations(range(L), k))
+        got = unrank_lex(np.arange(comb(L, k)), L, k)
+        assert [tuple(r) for r in got] == want
+
+
+def test_bitmaps_needed_paper_example():
+    # paper §2.2: ~2000 bitmaps represent 2M distinct values at k=2
+    L = bitmaps_needed(2_000_000, 2)
+    assert comb(L, 2) >= 2_000_000 > comb(L - 1, 2)
+    assert L == 2001
+
+
+def test_choose_k_heuristic():
+    # §2.2: <=5 -> 1; <=21 -> 2; <=85 -> 3; else requested
+    assert choose_k(5, 4) == 1
+    assert choose_k(6, 4) == 2
+    assert choose_k(21, 4) == 2
+    assert choose_k(22, 4) == 3
+    assert choose_k(85, 4) == 3
+    assert choose_k(86, 4) == 4
+
+
+def test_revolving_door_gray_property():
+    for L, k in [(4, 2), (6, 3), (7, 2), (8, 4)]:
+        rd = revolving_door(L, k)
+        assert len(rd) == comb(L, k)
+        sets = [set(map(int, r)) for r in rd]
+        assert len({frozenset(s) for s in sets}) == len(sets)  # all distinct
+        for a, b in zip(sets, sets[1:]):
+            assert len(a ^ b) == 2  # one-element swap
+
+
+def test_gray_allocation_paper_2of4_order():
+    enc = ColumnEncoder(6, k=2, allocation="gray")
+    codes = [set(map(int, c)) for c in enc.all_codes()]
+    def s(st_): return "".join("1" if 3 - i in st_ else "0" for i in range(4))
+    assert [s(c) for c in codes] == ["0011", "0110", "0101", "1100", "1010", "1001"]
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 400), st.integers(1, 4))
+def test_encoder_codes_distinct(card, k):
+    enc = ColumnEncoder(card, k=min(k, card), allocation="alpha")
+    codes = enc.all_codes()
+    assert len({tuple(map(int, c)) for c in codes}) == card
+    assert (np.diff(np.sort(codes, axis=1), axis=1) > 0).all() or enc.k == 1
+
+
+def test_gray_equals_bitlex_single_1ofN_column():
+    rng = np.random.default_rng(0)
+    t = synth.zipf_table(2000, 1, s=1.0, card=64, rng=rng)
+    r, _ = synth.factorize(t)
+    encs = [ColumnEncoder(int(r[:, 0].max()) + 1, 1)]
+    assert np.array_equal(r[gray_sort(r, encs)], r[lex_sort_bits(r, encs)])
+
+
+def test_lex_sort_improves_compression():
+    rng = np.random.default_rng(1)
+    t = synth.zipf_table(20000, 3, s=1.0, rng=rng)
+    r, _ = synth.factorize(t)
+    shuffled = BitmapIndex.build(r[random_shuffle(r, rng)], k=1).size_words
+    lexed = BitmapIndex.build(r[lex_sort(r)], k=1).size_words
+    assert lexed < shuffled * 0.8
+
+
+def test_block_sort_monotone_degradation():
+    rng = np.random.default_rng(2)
+    t = synth.zipf_table(30000, 3, s=1.0, rng=rng)
+    r, _ = synth.factorize(t)
+    sizes = [BitmapIndex.build(r[block_sort(r, nb)], k=1).size_words
+             for nb in (1, 4, 16, 64)]
+    assert sizes == sorted(sizes)
+
+
+def test_random_sort_groups_rows():
+    rng = np.random.default_rng(3)
+    t = np.repeat(np.arange(50), 10)[:, None]
+    rng.shuffle(t)
+    perm = random_sort(t, rng)
+    s = t[perm][:, 0]
+    # identical values are contiguous
+    changes = (np.diff(s) != 0).sum()
+    assert changes == len(np.unique(s)) - 1
+
+
+def test_column_ordering():
+    assert order_columns([10, 1000, 50], "card_desc") == [1, 2, 0]
+    assert order_columns([10, 1000, 50], "card_asc") == [0, 2, 1]
+    # freq-aware: high-card column whose values repeat < 32x goes last
+    t = np.stack([np.arange(1000), np.arange(1000) % 7], axis=1)
+    order = order_columns_freq_aware(t, [1000, 7])
+    assert order == [1, 0]
+
+
+def test_wah_vs_ewah_sizes():
+    rng = np.random.default_rng(4)
+    bits = rng.random(100_000) < 0.01
+    e, w = EWAH.from_bool(bits), WAH.from_bool(bits)
+    assert np.array_equal(w.to_bool(), bits)
+    # both word-aligned RLE: sizes within 2x of each other on sparse data
+    assert 0.5 < e.size_words / w.size_words < 2.0

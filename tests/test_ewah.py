@@ -1,0 +1,97 @@
+"""EWAH codec: roundtrip, marker layout, logical ops, property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ewah import (EWAH, MAX_CLEAN, MAX_LIT, binary_op, make_marker,
+                             parse_marker, and_many, or_many)
+
+
+def bits_strategy(max_n=2048):
+    return st.integers(0, max_n).flatmap(
+        lambda n: st.builds(
+            lambda seed, p: np.random.default_rng(seed).random(n) < p,
+            st.integers(0, 2**31), st.floats(0.0, 1.0)))
+
+
+def test_marker_layout():
+    m = make_marker(1, 123, 45)
+    assert parse_marker(m) == (1, 123, 45)
+    assert parse_marker(make_marker(0, MAX_CLEAN, MAX_LIT)) == (0, MAX_CLEAN, MAX_LIT)
+    # bit 0 = clean type; 16 bits clean; 15 bits literal (paper §2.3)
+    assert make_marker(1, 0, 0) == 1
+    assert make_marker(0, 1, 0) == 2
+    assert make_marker(0, 0, 1) == 1 << 17
+
+
+@settings(max_examples=200, deadline=None)
+@given(bits_strategy())
+def test_roundtrip(bits):
+    e = EWAH.from_bool(bits)
+    assert np.array_equal(e.to_bool(), bits)
+    assert e.count() == int(bits.sum())
+    assert np.array_equal(e.set_bits(), np.flatnonzero(bits))
+
+
+@settings(max_examples=100, deadline=None)
+@given(bits_strategy())
+def test_from_positions_equivalent(bits):
+    a = EWAH.from_bool(bits)
+    b = EWAH.from_positions(np.flatnonzero(bits), len(bits))
+    assert a == b
+    assert a.size_words == b.size_words
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.integers(0, 2**31), st.integers(1, 1500),
+       st.floats(0, 1), st.floats(0, 1))
+def test_logical_ops_match_boolean(seed, n, pa, pb):
+    rng = np.random.default_rng(seed)
+    a = rng.random(n) < pa ** 2
+    b = rng.random(n) < pb ** 2
+    A, B = EWAH.from_bool(a), EWAH.from_bool(b)
+    assert np.array_equal((A & B).to_bool(), a & b)
+    assert np.array_equal((A | B).to_bool(), a | b)
+    assert np.array_equal((A ^ B).to_bool(), a ^ b)
+    assert np.array_equal(A.andnot(B).to_bool(), a & ~b)
+
+
+def test_long_runs_compress_to_markers():
+    # 10M zeros = 312500 clean words -> ceil(312500/65535) = 5 markers
+    z = EWAH.from_bool(np.zeros(10_000_000, bool))
+    assert z.size_words == 5
+    o = EWAH.from_bool(np.ones(10_000_000, bool))
+    assert o.size_words == 5
+
+
+def test_worst_case_expansion_bounded():
+    # alternating bits -> all literal words + 1 marker per 2^15 literals
+    bits = np.tile([True, False], 200_000)
+    e = EWAH.from_bool(bits)
+    n_words = e.n_words_uncompressed
+    # paper: EWAH can not exceed uncompressed size by more than ~0.1%
+    assert e.size_words <= n_words * 1.001 + 2
+
+
+def test_sparse_op_cost_proportional_to_nonzero_words():
+    # Lemma 2: AND of sparse bitmaps touches only non-zero words
+    n = 1 << 20
+    a = np.zeros(n, bool); a[::5000] = True
+    b = np.zeros(n, bool); b[::7000] = True
+    A, B = EWAH.from_bool(a), EWAH.from_bool(b)
+    out = A & B
+    assert np.array_equal(out.to_bool(), a & b)
+    assert out.size_words < A.size_words + B.size_words + 4
+
+
+def test_reduce_helpers():
+    rng = np.random.default_rng(0)
+    mats = [rng.random(777) < 0.1 for _ in range(7)]
+    bms = [EWAH.from_bool(m) for m in mats]
+    assert np.array_equal(or_many(bms).to_bool(), np.logical_or.reduce(mats))
+    assert np.array_equal(and_many(bms).to_bool(), np.logical_and.reduce(mats))
+
+
+def test_empty_bitmap():
+    e = EWAH.from_bool(np.zeros(0, bool))
+    assert e.count() == 0 and len(e.set_bits()) == 0

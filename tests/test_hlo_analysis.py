@@ -1,0 +1,81 @@
+"""Unit tests for the trip-count-aware HLO roofline parser (pure text)."""
+import numpy as np
+
+from repro.launch import hlo_analysis as H
+
+MODULE = """
+HloModule jit_f
+
+%body.1 (arg: (s32[], f32[16,64])) -> (s32[], f32[16,64]) {
+  %p = (s32[], f32[16,64]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[16,64]{1,0} get-tuple-element(%p), index=1
+  %w = f32[64,64]{1,0} constant({...})
+  %dot.1 = f32[16,64]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[16,64]{1,0} all-reduce(%dot.1), channel_id=1, replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[16,64]{1,0}) tuple(%ni, %ar)
+}
+
+%cond.1 (arg: (s32[], f32[16,64])) -> pred[] {
+  %p = (s32[], f32[16,64]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main.1 (a: f32[16,64]) -> f32[16,64] {
+  %a = f32[16,64]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[16,64]{1,0}) tuple(%z, %a)
+  %w2 = (s32[], f32[16,64]{1,0}) while(%t0), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"5"}}
+  %big = f32[128,256]{1,0} parameter(1)
+  %w3 = f32[256,32]{1,0} parameter(2)
+  %dot.9 = f32[128,32]{1,0} dot(%big, %w3), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %out = f32[16,64]{1,0} get-tuple-element(%w2), index=1
+}
+"""
+
+
+def test_trip_counts_multiply_loop_body_costs():
+    a = H.HloAnalysis(MODULE)
+    t = a.totals()
+    # dot in body: 2*16*64*64 = 131072 flops, x5 trips; entry dot: 2*128*32*256
+    body_dot = 2 * 16 * 64 * 64
+    entry_dot = 2 * 128 * 32 * 256
+    assert t["flops"] == 5 * body_dot + entry_dot
+
+
+def test_operand_symbol_resolution_for_contracting_dims():
+    a = H.HloAnalysis(MODULE)
+    # the entry dot has operands without inline types in the body case;
+    # symbol table must resolve %x -> f32[16,64] so K=64 (not 1)
+    c = a.comp_cost("body.1")
+    assert c.flops == 2 * 16 * 64 * 64
+
+
+def test_collective_bytes_and_groups():
+    a = H.HloAnalysis(MODULE)
+    t = a.totals()
+    # all-reduce of f32[16,64] = 4096 B, x5 trips; group size 4
+    assert t["collectives"]["all-reduce"] == 5 * 16 * 64 * 4
+    assert t["collectives"]["all-reduce:group"] == 4
+    assert t["collective_counts"]["all-reduce"] == 5
+
+
+def test_link_bytes_model():
+    coll = {"all-reduce": 1000.0, "all-reduce:group": 4,
+            "all-gather": 800.0, "all-gather:group": 2,
+            "collective-permute": 100.0}
+    lb = H.link_bytes(coll)
+    # AR: 2*(3/4)*1000 = 1500; AG: (1/2)*800 = 400; CP: 100
+    np.testing.assert_allclose(lb, 1500 + 400 + 100)
+
+
+def test_bytes_exclude_plumbing_ops():
+    a = H.HloAnalysis(MODULE)
+    # tuple/get-tuple-element/parameter/constant must not count toward bytes
+    c = a.comp_cost("cond.1")
+    assert c.flops == 0
+    assert c.bytes <= 16  # only the compare's operands/result

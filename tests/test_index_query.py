@@ -1,0 +1,86 @@
+"""Bitmap index build + query engine vs naive row-scan oracles."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BitmapIndex, lex_sort
+from repro.core import query as q
+from repro.core import synth
+
+
+@pytest.fixture(scope="module")
+def table():
+    rng = np.random.default_rng(0)
+    t = synth.uniform_table(4000, 3, r=2, n_dep=2, rng=rng)
+    r, _ = synth.factorize(t)
+    return r
+
+
+@pytest.mark.parametrize("k", [1, 2, 3, 4])
+def test_equality_vs_oracle(table, k):
+    idx = BitmapIndex.build(table, k=k)
+    rng = np.random.default_rng(k)
+    for _ in range(25):
+        c = int(rng.integers(0, table.shape[1]))
+        v = int(rng.integers(0, table[:, c].max() + 1))
+        assert np.array_equal(idx.equality_rows(c, v),
+                              q.naive_equality(table, c, v))
+
+
+@pytest.mark.parametrize("k", [1, 2])
+def test_conj_disj_inset(table, k):
+    idx = BitmapIndex.build(table, k=k)
+    preds = {0: int(table[7, 0]), 2: int(table[7, 2])}
+    assert np.array_equal(q.conjunction(idx, preds).set_bits(),
+                          q.naive_conjunction(table, preds))
+    assert np.array_equal(q.disjunction(idx, preds).set_bits(),
+                          q.naive_disjunction(table, preds))
+    vals = [int(v) for v in np.unique(table[:5, 1])]
+    got = q.in_set(idx, 1, vals).set_bits()
+    want = np.flatnonzero(np.isin(table[:, 1], vals))
+    assert np.array_equal(got, want)
+
+
+def test_partitioned_index_equivalent(table):
+    whole = BitmapIndex.build(table, k=2)
+    parts = BitmapIndex.build(table, k=2, partition_rows=992)  # 31 words
+    for c in range(table.shape[1]):
+        for v in (0, 1, int(table[:, c].max())):
+            a = whole.equality_rows(c, v)
+            b = parts.equality_rows(c, v)
+            assert np.array_equal(a, b), (c, v)
+
+
+def test_word_aligned_partitions_required(table):
+    idx = BitmapIndex.build(table, k=1, partition_rows=992)
+    assert all(b % 32 == 0 for b in idx.partition_bounds[1:-1].tolist())
+
+
+def test_index_size_unit_is_words(table):
+    idx = BitmapIndex.build(table, k=1)
+    assert idx.size_words == sum(idx.words_per_column())
+    per_col = idx.columns[0].bitmap_sizes()
+    assert per_col.sum() == idx.columns[0].size_words
+
+
+def test_heuristic_caps_k(table):
+    idx = BitmapIndex.build(table, k=4)
+    for c, col in enumerate(idx.columns):
+        card = int(table[:, c].max()) + 1
+        if card <= 5:
+            assert col.encoder.k == 1
+        elif card <= 21:
+            assert col.encoder.k <= 2
+        elif card <= 85:
+            assert col.encoder.k <= 3
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31))
+def test_property_sorted_never_bigger(seed):
+    rng = np.random.default_rng(seed)
+    t = synth.zipf_table(3000, 2, s=1.2, card=200, rng=rng)
+    r, _ = synth.factorize(t)
+    sorted_size = BitmapIndex.build(r[lex_sort(r)], k=1).size_words
+    raw_size = BitmapIndex.build(r[rng.permutation(len(r))], k=1).size_words
+    assert sorted_size <= raw_size + 4

@@ -1,0 +1,69 @@
+"""Pallas kernel sweeps (interpret mode) vs pure-jnp oracles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitpack import pack_matrix
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+WORD_SHAPES = [(1, 32), (3, 100), (8, 1024), (16, 2048), (20, 1500), (64, 96)]
+
+
+@pytest.mark.parametrize("shape", WORD_SHAPES)
+@pytest.mark.parametrize("op", ["and", "or", "xor", "andnot"])
+def test_word_logical_sweep(shape, op):
+    a = RNG.integers(0, 2**32, size=shape, dtype=np.uint32)
+    b = RNG.integers(0, 2**32, size=shape, dtype=np.uint32)
+    a[0, :] = 0  # force clean-zero tiles
+    if shape[0] > 2:
+        b[2, :] = 0xFFFFFFFF  # clean-one tiles
+    got = np.asarray(ops.word_logical(a, b, op))
+    want = np.asarray(ref.word_logical(jnp.asarray(a), jnp.asarray(b), op))
+    assert np.array_equal(got, want)
+
+
+def test_word_logical_all_clean_tiles():
+    a = np.zeros((8, 1024), np.uint32)
+    b = np.full((8, 1024), 0xFFFFFFFF, np.uint32)
+    assert np.asarray(ops.word_logical(a, b, "or")).min() == 0xFFFFFFFF
+    assert np.asarray(ops.word_logical(a, b, "and")).max() == 0
+
+
+@pytest.mark.parametrize("shape", [(1, 5), (8, 1024), (5, 333), (17, 2049)])
+def test_popcount_sweep(shape):
+    a = RNG.integers(0, 2**32, size=shape, dtype=np.uint32)
+    assert int(ops.popcount_total(a)) == int(ref.popcount_total(jnp.asarray(a)))
+    np.testing.assert_array_equal(np.asarray(ops.popcount_rows(a)),
+                                  np.asarray(ref.popcount_rows(jnp.asarray(a))))
+
+
+@pytest.mark.parametrize("N,L", [(32, 4), (1024, 128), (2048, 200), (96, 7),
+                                 (4096, 64)])
+@pytest.mark.parametrize("density", [0.02, 0.5])
+def test_bitpack_sweep(N, L, density):
+    bits = RNG.random((N, L)) < density
+    got = np.asarray(ops.bitpack(bits))
+    want = np.asarray(ref.bitpack(jnp.asarray(bits)))
+    assert np.array_equal(got, want)
+    # convention matches the host codec (bit i of word w = row 32w+i)
+    assert np.array_equal(got.T, pack_matrix(bits))
+
+
+@pytest.mark.parametrize("n", [256, 256 * 100, 256 * 100 + 17])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_block_sqnorms_sweep(n, dtype):
+    g = RNG.standard_normal(n).astype(dtype)
+    got = np.asarray(ops.block_sqnorms(g))
+    pad = (-len(g)) % 256
+    gp = np.pad(g.astype(np.float32), (0, pad))
+    want = np.asarray(ref.block_sqnorms(jnp.asarray(gp), 256))
+    np.testing.assert_allclose(got, want, rtol=2e-3)
+
+
+def test_topk_block_mask():
+    g = np.zeros(256 * 10, np.float32)
+    g[256 * 3: 256 * 4] = 100.0  # one hot block
+    mask = np.asarray(ops.topk_block_mask(g, 0.1))
+    assert mask[3] and mask.sum() == 1

@@ -1,0 +1,100 @@
+"""Per-arch smoke tests (reduced configs): forward/train/decode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.base import ShapeConfig
+from repro.configs.input_specs import concrete_batch
+from repro.models import LM, decode as dec
+from repro.train.optimizer import AdamW, AdamWConfig
+from repro.train.step import make_train_step
+
+SMOKE = ShapeConfig("smoke", 64, 2, "train")
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_forward_shapes_and_finite(name, rng):
+    cfg = ARCHS[name].reduced()
+    model = LM(cfg)
+    params = model.init(rng)
+    batch = concrete_batch(cfg, SMOKE)
+    logits, aux = jax.jit(model.forward)(params, batch)
+    S_text = batch["tokens"].shape[1]
+    assert logits.shape == (2, S_text, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_train_step_updates_and_finite_loss(name, rng):
+    cfg = ARCHS[name].reduced()
+    model = LM(cfg)
+    params = model.init(rng)
+    opt = AdamW(AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10))
+    opt_state = opt.init(params)
+    batch = concrete_batch(cfg, SMOKE)
+    step = jax.jit(make_train_step(model, opt))
+    p1, o1, loss1 = step(params, opt_state, batch)
+    p2, o2, loss2 = step(p1, o1, batch)
+    assert np.isfinite(float(loss1)) and np.isfinite(float(loss2))
+    assert float(loss2) < float(loss1)  # same batch: loss must drop
+    # params actually changed
+    diff = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), params, p1)
+    assert max(jax.tree.leaves(diff)) > 0
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_decode_matches_forward(name, rng):
+    """Teacher-forced sequential decode logits == full forward logits."""
+    cfg = ARCHS[name].reduced()
+    model = LM(cfg)
+    params = model.init(rng)
+    B, S = 2, 8
+    batch = concrete_batch(cfg, ShapeConfig("tiny", 8 + cfg.n_frontend_positions
+                                            if not cfg.enc_dec else 8, B, "train"))
+    tokens = batch["tokens"][:, :S]
+    full_batch = dict(batch)
+    full_batch["tokens"] = tokens
+    logits_full, _ = jax.jit(model.forward)(params, full_batch)
+
+    cache = dec.init_cache(model, B, S)
+    if cfg.enc_dec:
+        xk, xv = dec.encdec_prefill_cross(model, params, batch["frontend"])
+        cache["xk"], cache["xv"] = xk, xv
+    step = jax.jit(lambda p, c, t: dec.serve_step(model, p, c, t))
+    outs = []
+    for i in range(S):
+        lg, cache = step(params, cache, tokens[:, i:i + 1])
+        outs.append(lg)
+    logits_dec = jnp.concatenate(outs, axis=1)
+
+    if cfg.n_frontend_positions and not cfg.enc_dec:
+        # vlm decode path here skips the frontend prefix; compare shapes only
+        assert logits_dec.shape[-1] == logits_full.shape[-1]
+        return
+    np.testing.assert_allclose(np.asarray(logits_dec, np.float32),
+                               np.asarray(logits_full, np.float32),
+                               rtol=0.15, atol=0.15)
+
+
+def test_gemma2_local_global_masks_differ(rng):
+    cfg = ARCHS["gemma2-9b"].reduced()
+    assert cfg.local_global_period == 2 and cfg.sliding_window == 8
+    model = LM(cfg)
+    assert model.period == 2
+    assert model.plans[0].window == 8 and model.plans[1].window is None
+
+
+def test_moe_aux_loss_nonzero(rng):
+    cfg = ARCHS["arctic-480b"].reduced()
+    model = LM(cfg)
+    params = model.init(rng)
+    batch = concrete_batch(cfg, SMOKE)
+    _, aux = jax.jit(model.forward)(params, batch)
+    assert float(aux) > 0.0

@@ -1,10 +1,11 @@
-"""Quickstart: build a sorted, EWAH-compressed bitmap index and query it.
+"""Quickstart: sorted EWAH bitmap index + the composable query expression API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (BitmapIndex, lex_sort, order_columns, random_shuffle)
+from repro.core import (BitmapIndex, QueryBatch, col, execute, explain,
+                        lex_sort, order_columns, plan, random_shuffle)
 from repro.core import query as q
 from repro.core import synth
 
@@ -23,8 +24,10 @@ def main():
     order = order_columns(cards, "card_desc")
     # 2. sort the fact table lexicographically
     sorted_table = ranked[lex_sort(ranked, order)]
-    # 3. build the EWAH-compressed bitmap index
-    idx_sorted = BitmapIndex.build(sorted_table, k=1, cards=cards)
+    # 3. build the EWAH-compressed bitmap index (named columns)
+    names = ["region", "day", "user"]
+    idx_sorted = BitmapIndex.build(sorted_table, k=1, cards=cards,
+                                   column_names=names)
 
     # versus an unsorted baseline
     shuffled = ranked[random_shuffle(ranked, rng)]
@@ -36,16 +39,36 @@ def main():
           f"({4 * idx_sorted.size_words / 1e6:.2f} MB)")
     print(f"sorting gain: {idx_raw.size_words / idx_sorted.size_words:.2f}x")
 
-    # --- queries are logical ops over compressed bitmaps --------------------
-    v0 = int(sorted_table[0, 0])
-    v2 = int(sorted_table[0, 2])
-    hits = q.conjunction(idx_sorted, {0: v0, 2: v2})
-    print(f"query d0=={v0} AND d2=={v2}: {hits.count()} rows, "
-          f"result bitmap {hits.size_words} words")
+    # --- composable query expressions ---------------------------------------
+    # build with operator overloading; the planner rewrites the tree (De
+    # Morgan push-down, size-ordered ANDs, andnot fusion) and the executor
+    # picks EWAH or the Pallas kernel path per node by operand density
+    v_region = int(sorted_table[0, 0])
+    v_day = int(sorted_table[0, 1])
+    expr = ((col("region") == v_region)
+            & ~col("day").isin([v_day, v_day + 1])
+            & col("user").between(0, 5))
+    print(f"\nquery: {expr}")
+    print("plan:")
+    print(explain(plan(idx_sorted, expr)))
+
+    hits = execute(idx_sorted, expr)
+    print(f"-> {hits.count()} rows, result bitmap {hits.size_words} words")
+
+    # bit-identical to a naive row scan
     rows = hits.set_bits()
-    assert (sorted_table[rows, 0] == v0).all()
-    assert (sorted_table[rows, 2] == v2).all()
-    print("verified against the table — done.")
+    assert np.array_equal(rows, q.naive_eval_rows(sorted_table, expr,
+                                                  names=names))
+    print("verified against the row-scan oracle.")
+
+    # --- batched execution shares loaded operands ---------------------------
+    batch = QueryBatch([
+        (col("region") == v_region) & (col("user") == 0),
+        (col("region") == v_region) | (col("day") == v_day),
+        ~(col("region") == v_region) & col("day").between(0, 9),
+    ])
+    for e, bm in zip(batch.exprs, batch.execute(idx_sorted)):
+        print(f"batch {e}: {bm.count()} rows")
 
 
 if __name__ == "__main__":

@@ -14,6 +14,9 @@ from .sorting import (
     block_sort, order_columns, order_columns_freq_aware,
 )
 from .index import BitmapIndex, ColumnIndex, concat_bitmaps
+from .expr import And, Col, Const, Eq, Expr, In, Not, Or, Range, col
+from .planner import explain, plan
+from .executor import QueryBatch, execute, execute_rows
 from . import query
 from . import synth
 
@@ -24,5 +27,7 @@ __all__ = [
     "lex_sort", "gray_sort", "lex_sort_bits", "random_sort", "random_shuffle",
     "block_sort", "order_columns", "order_columns_freq_aware",
     "BitmapIndex", "ColumnIndex", "concat_bitmaps",
+    "Expr", "Col", "col", "Eq", "In", "Range", "And", "Or", "Not", "Const",
+    "plan", "explain", "execute", "execute_rows", "QueryBatch",
     "query", "synth",
 ]

@@ -195,6 +195,42 @@ class EWAH:
         return int(np.unpackbits(words.view(np.uint8)).sum())
 
     # -- logical ops (compressed domain, Lemma 2) --------------------------
+    def __invert__(self) -> "EWAH":
+        """Bitwise complement over ``n_bits`` (padding bits stay clear).
+
+        Runs in the compressed domain: clean runs flip type, literals are
+        inverted wholesale.  Only the final word needs care — after
+        complementing, the pad bits past ``n_bits`` would read 1, so the
+        segment holding it is split and the word masked (``_emit``
+        re-canonicalizes if the masked word comes out clean).
+        """
+        n_words = self.n_words_uncompressed
+        pad = n_words * WORD_BITS - self.n_bits
+        tail_mask = np.uint32((1 << (WORD_BITS - pad)) - 1) if pad else ALL_ONES
+
+        def segs():
+            pos = 0
+            for seg in self.segments():
+                if seg[0] == "run":
+                    _, bit, cnt = seg
+                    nb = bit ^ 1
+                    if pad and pos + cnt == n_words:
+                        if cnt > 1:
+                            yield ("run", nb, cnt - 1)
+                        last = (ALL_ONES if nb else np.uint32(0)) & tail_mask
+                        yield ("lit", np.array([last], dtype=WORD_DTYPE))
+                    else:
+                        yield ("run", nb, cnt)
+                    pos += cnt
+                else:
+                    lit = np.bitwise_not(seg[1])
+                    if pad and pos + len(lit) == n_words:
+                        lit[-1] &= tail_mask
+                    yield ("lit", lit)
+                    pos += len(lit)
+
+        return EWAH(_emit(segs()), self.n_bits)
+
     def __and__(self, other: "EWAH") -> "EWAH":
         return binary_op(self, other, "and")
 

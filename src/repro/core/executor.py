@@ -1,0 +1,160 @@
+"""Physical executor: run a plan over EWAH bitmaps or Pallas kernels.
+
+Per-node backend choice (Roaring's lesson, arXiv:1402.6407 — pick the
+physical representation per operation, by density, not globally): an n-ary
+AND/OR whose operands are mostly *dense* (compressed size close to the
+uncompressed word count, so EWAH's run-skipping buys nothing) is offloaded
+to the Pallas ``word_logical`` kernel as a dense tree reduction; sparse
+operands stay on the compressed EWAH path where cost is O(non-zero words)
+(Lemma 2).  The decision reads the operands' actual compressed sizes, which
+the index already tracks — no sampling pass.
+
+``QueryBatch`` evaluates many expressions in one pass over a shared operand
+cache: physical bitmaps (and their dense decompressions, when the kernel
+path is taken) are loaded once and reused across all plans in the batch.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from .ewah import EWAH, and_many, or_many
+from .expr import Expr
+from .index import BitmapIndex
+from .planner import PAnd, PBitmap, PConst, PDiff, PNot, POr, PlanNode, plan
+
+# operands denser than this fraction of their uncompressed size go to the
+# dense kernel path; EWAH on near-incompressible bitmaps degenerates to a
+# literal-word scan with marker overhead, which the VMEM-tiled kernel beats
+DENSE_THRESHOLD = 0.5
+
+Backend = str  # "auto" | "ewah" | "kernel"
+
+
+def _const_bitmap(index: BitmapIndex, value: bool) -> EWAH:
+    return EWAH.from_bool(np.full(index.n_rows, value, dtype=bool))
+
+
+class Executor:
+    def __init__(self, index: BitmapIndex, backend: Backend = "auto",
+                 cache: Optional[Dict] = None,
+                 dense_threshold: float = DENSE_THRESHOLD):
+        assert backend in ("auto", "ewah", "kernel"), backend
+        self.index = index
+        self.backend = backend
+        self.cache = cache if cache is not None else {}
+        self.dense_threshold = dense_threshold
+
+    # -- operand loading (shared across a batch via ``cache``) ------------
+    def _load(self, node: PBitmap) -> EWAH:
+        key = ("bm", node.col, node.bitmap_id)
+        bm = self.cache.get(key)
+        if bm is None:
+            bm = self.index.bitmap(node.col, node.bitmap_id)
+            self.cache[key] = bm
+        return bm
+
+    def _dense_words(self, node: PlanNode, bm: EWAH) -> np.ndarray:
+        if isinstance(node, PBitmap):
+            key = ("words", node.col, node.bitmap_id)
+            w = self.cache.get(key)
+            if w is None:
+                w = bm.to_words()
+                self.cache[key] = w
+            return w
+        return bm.to_words()
+
+    # -- evaluation --------------------------------------------------------
+    def run(self, node: PlanNode) -> EWAH:
+        if isinstance(node, PConst):
+            return _const_bitmap(self.index, node.value)
+        if isinstance(node, PBitmap):
+            return self._load(node)
+        if isinstance(node, PNot):
+            return ~self.run(node.child)
+        if isinstance(node, PDiff):
+            return self._run_diff(node)
+        assert isinstance(node, (PAnd, POr))
+        op = "and" if isinstance(node, PAnd) else "or"
+        children = [(ch, self.run(ch)) for ch in node.children]
+        if self._use_kernel([bm for _, bm in children]):
+            return self._reduce_kernel(children, op)
+        bms = [bm for _, bm in children]
+        return and_many(bms) if op == "and" else or_many(bms)
+
+    def _run_diff(self, node: PDiff) -> EWAH:
+        """AND(pos) \\ OR(neg) via EWAH's native andnot — negated operands
+        never materialize their complements."""
+        pos = [(ch, self.run(ch)) for ch in node.pos]
+        neg = [(ch, self.run(ch)) for ch in node.neg]
+        if self._use_kernel([bm for _, bm in pos + neg]):
+            from repro.kernels import ops as kops
+            pmat = np.stack([self._dense_words(n, bm) for n, bm in pos])
+            nmat = np.stack([self._dense_words(n, bm) for n, bm in neg])
+            a = kops.logical_reduce(pmat, op="and")
+            b = kops.logical_reduce(nmat, op="or")
+            out = np.asarray(kops.word_logical(a[None, :], b[None, :],
+                                               "andnot"))[0]
+            return EWAH.from_words(out, pos[0][1].n_bits)
+        acc = and_many([bm for _, bm in pos])
+        for _, bm in neg:
+            acc = acc.andnot(bm)
+        return acc
+
+    def _use_kernel(self, bms: Sequence[EWAH]) -> bool:
+        if self.backend == "ewah":
+            return False
+        if self.backend == "kernel":
+            return True
+        n_words = max(bms[0].n_words_uncompressed, 1)
+        density = sum(bm.size_words for bm in bms) / (len(bms) * n_words)
+        return len(bms) >= 2 and density >= self.dense_threshold
+
+    def _reduce_kernel(self, children, op: str) -> EWAH:
+        from repro.kernels import ops as kops  # lazy: jax only on this path
+        mat = np.stack([self._dense_words(node, bm) for node, bm in children])
+        out = np.asarray(kops.logical_reduce(mat, op=op))
+        n_bits = children[0][1].n_bits
+        return EWAH.from_words(out, n_bits)
+
+
+def execute(index: BitmapIndex, e: Union[Expr, PlanNode],
+            backend: Backend = "auto", optimize: bool = True,
+            cache: Optional[Dict] = None) -> EWAH:
+    """Plan (unless given a plan) and evaluate one expression -> EWAH."""
+    node = plan(index, e, optimize=optimize) if isinstance(e, Expr) else e
+    return Executor(index, backend=backend, cache=cache).run(node)
+
+
+def execute_rows(index: BitmapIndex, e: Union[Expr, PlanNode],
+                 backend: Backend = "auto", optimize: bool = True) -> np.ndarray:
+    """Evaluate and return matching row ids (sorted)."""
+    return execute(index, e, backend=backend, optimize=optimize).set_bits()
+
+
+class QueryBatch:
+    """Evaluate many expressions in one pass sharing loaded operands.
+
+    Plans are built up front, then all plans execute against one operand
+    cache, so a bitmap referenced by several queries (the common case for
+    dashboard-style workloads: same dimensions, different slices) is
+    concatenated from its partitions — and decompressed, on the kernel
+    path — exactly once.
+    """
+
+    def __init__(self, exprs: Sequence[Expr]):
+        self.exprs = list(exprs)
+
+    def execute(self, index: BitmapIndex, backend: Backend = "auto",
+                optimize: bool = True) -> List[EWAH]:
+        plans = [plan(index, e, optimize=optimize) for e in self.exprs]
+        cache: Dict = {}
+        ex = Executor(index, backend=backend, cache=cache)
+        return [ex.run(p) for p in plans]
+
+    def execute_rows(self, index: BitmapIndex, backend: Backend = "auto",
+                     optimize: bool = True) -> List[np.ndarray]:
+        return [bm.set_bits()
+                for bm in self.execute(index, backend=backend,
+                                       optimize=optimize)]

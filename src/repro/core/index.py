@@ -47,6 +47,7 @@ class BitmapIndex:
     n_rows: int
     columns: List[ColumnIndex]
     partition_bounds: np.ndarray  # (n_parts + 1,)
+    column_names: Optional[List[str]] = None
 
     @classmethod
     def build(
@@ -57,11 +58,16 @@ class BitmapIndex:
         cards: Optional[Sequence[int]] = None,
         partition_rows: Optional[int] = None,
         apply_heuristic: bool = True,
+        column_names: Optional[Sequence[str]] = None,
     ) -> "BitmapIndex":
         """Build the index.  ``k`` is the requested encoding (paper's k-of-N);
         the per-column heuristic of §2.2 caps it by cardinality."""
         table = np.asarray(table)
         n, d = table.shape
+        names = list(column_names) if column_names is not None else None
+        if names is not None and len(names) != d:
+            raise ValueError(
+                f"column_names has {len(names)} entries for {d} columns")
         if cards is None:
             cards = [int(table[:, c].max()) + 1 if n else 1 for c in range(d)]
         part = partition_rows or n or 1
@@ -89,7 +95,8 @@ class BitmapIndex:
                     bms.append(EWAH.from_positions(pos, rows_part))
                 col.bitmaps.append(bms)
             columns.append(col)
-        return cls(n_rows=n, columns=columns, partition_bounds=bounds)
+        return cls(n_rows=n, columns=columns, partition_bounds=bounds,
+                   column_names=names)
 
     # -- stats -------------------------------------------------------------
     @property
@@ -104,7 +111,35 @@ class BitmapIndex:
     def n_bitmaps(self) -> int:
         return sum(col.encoder.L for col in self.columns)
 
+    @property
+    def n_partitions(self) -> int:
+        return len(self.partition_bounds) - 1
+
+    def card(self, col: int) -> int:
+        return self.columns[col].encoder.card
+
+    def resolve_column(self, key) -> int:
+        """Map a column name (if the index carries names) or position to an
+        integer column position."""
+        if isinstance(key, (int, np.integer)):
+            c = int(key)
+            if not (0 <= c < len(self.columns)):
+                raise KeyError(f"column position {c} out of range")
+            return c
+        if self.column_names is None:
+            raise KeyError(f"index has no column names; got {key!r}")
+        try:
+            return self.column_names.index(key)
+        except ValueError:
+            raise KeyError(f"unknown column {key!r}") from None
+
     # -- queries -----------------------------------------------------------
+    def bitmap(self, col: int, bitmap_id: int) -> EWAH:
+        """One physical bitmap of a column, concatenated over all partitions."""
+        ci = self.columns[col]
+        return concat_bitmaps([ci.bitmaps[p][bitmap_id]
+                               for p in range(self.n_partitions)])
+
     def equality_bitmap(self, col: int, value_rank: int) -> EWAH:
         """Predicate column == value as one EWAH bitmap over all rows.
 

@@ -1,0 +1,331 @@
+"""Logical query planner: rewrite an ``Expr`` tree into a physical plan.
+
+Rewrites (paper-motivated — many bitmaps are combined per query, so plan
+shape dominates):
+
+* **NOT push-down** (De Morgan): ``~(a & b) -> ~a | ~b``, ``~(a | b) ->
+  ~a & ~b``, ``~~a -> a``.  Complements end up directly above leaves, where
+  EWAH's ``__invert__`` runs in the compressed domain.
+* **Flattening**: associative AND/OR chains collapse into n-ary nodes so the
+  executor can reduce them in one pass (tree order for OR, accumulative for
+  AND).
+* **Leaf lowering to minimal bitmap sets**: an ``Eq`` on a k-of-N-encoded
+  column becomes the AND of its k physical bitmaps; ``In`` drops duplicate
+  and out-of-domain ranks, shares nothing it does not need and folds to a
+  constant when it covers the whole domain; ``Range`` clips to the column
+  cardinality and lowers like the equivalent ``In``.
+* **Size-ordered AND**: operands of every AND are sorted by estimated
+  compressed size (words, the paper's cost unit) so the cheapest bitmap
+  prunes first — intermediate results stay small for the whole chain.
+
+The planner is purely logical: it reads only per-bitmap compressed sizes
+(``ColumnIndex.bitmap_sizes()``) and never touches bitmap payloads.  The
+physical choice between the compressed EWAH path and the dense Pallas kernel
+path is made per node by the executor.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import numpy as np
+
+from .expr import And, Const, Eq, Expr, In, Not, Or, Range
+from .index import BitmapIndex
+
+
+# ---------------------------------------------------------------------------
+# Physical plan nodes.  ``est_words`` estimates the compressed size (32-bit
+# words) of the node's *result* — the unit the paper uses for both storage
+# and logical-op cost.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PlanNode:
+    est_words: int = field(default=0, init=False)
+
+
+@dataclass
+class PBitmap(PlanNode):
+    """Load one physical bitmap (concatenated over partitions)."""
+    col: int
+    bitmap_id: int
+
+    def __repr__(self):
+        return f"bitmap[c{self.col}:b{self.bitmap_id}]~{self.est_words}w"
+
+
+@dataclass
+class PAnd(PlanNode):
+    children: List[PlanNode]
+
+    def __repr__(self):
+        return "AND(" + ", ".join(map(repr, self.children)) + ")"
+
+
+@dataclass
+class POr(PlanNode):
+    children: List[PlanNode]
+
+    def __repr__(self):
+        return "OR(" + ", ".join(map(repr, self.children)) + ")"
+
+
+@dataclass
+class PNot(PlanNode):
+    child: PlanNode
+
+    def __repr__(self):
+        return f"NOT({self.child!r})"
+
+
+@dataclass
+class PConst(PlanNode):
+    value: bool
+
+    def __repr__(self):
+        return "ALL" if self.value else "NONE"
+
+
+@dataclass
+class PDiff(PlanNode):
+    """AND(pos) minus OR(neg): the optimizer's fusion of ``x & ~y`` chains
+    into EWAH's native ``andnot`` — negated operands are subtracted in the
+    compressed domain instead of materializing their (dense) complements."""
+    pos: List[PlanNode]
+    neg: List[PlanNode]
+
+    def __repr__(self):
+        return ("DIFF(" + ", ".join(map(repr, self.pos)) + " \\ "
+                + ", ".join(map(repr, self.neg)) + ")")
+
+
+# ---------------------------------------------------------------------------
+# Logical rewrites (index-free).
+# ---------------------------------------------------------------------------
+
+def push_not(e: Expr, negate: bool = False) -> Expr:
+    """Push negations down to the leaves via De Morgan's laws."""
+    if isinstance(e, Not):
+        return push_not(e.operand, not negate)
+    if isinstance(e, And):
+        ops = tuple(push_not(c, negate) for c in e.operands)
+        return Or(ops) if negate else And(ops)
+    if isinstance(e, Or):
+        ops = tuple(push_not(c, negate) for c in e.operands)
+        return And(ops) if negate else Or(ops)
+    if isinstance(e, Const):
+        return Const(not e.value) if negate else e
+    return Not(e) if negate else e
+
+
+def flatten(e: Expr) -> Expr:
+    """Collapse nested associative AND/OR chains into n-ary nodes."""
+    if isinstance(e, (And, Or)):
+        cls = type(e)
+        ops: List[Expr] = []
+        for c in e.operands:
+            fc = flatten(c)
+            if isinstance(fc, cls):
+                ops.extend(fc.operands)
+            else:
+                ops.append(fc)
+        if len(ops) == 1:
+            return ops[0]
+        return cls(tuple(ops))
+    if isinstance(e, Not):
+        return Not(flatten(e.operand))
+    return e
+
+
+# ---------------------------------------------------------------------------
+# Index-aware lowering + cost estimation.
+# ---------------------------------------------------------------------------
+
+class Planner:
+    def __init__(self, index: BitmapIndex, optimize: bool = True):
+        self.index = index
+        self.optimize = optimize
+        self._sizes: dict = {}  # col -> np.ndarray of per-bitmap words
+
+    # -- stats ------------------------------------------------------------
+    def _bitmap_words(self, col: int, bid: int) -> int:
+        if col not in self._sizes:
+            self._sizes[col] = self.index.columns[col].bitmap_sizes()
+        return int(self._sizes[col][bid])
+
+    @property
+    def _n_words(self) -> int:
+        return -(-self.index.n_rows // 32)
+
+    # -- lowering ---------------------------------------------------------
+    def plan(self, e: Expr) -> PlanNode:
+        if self.optimize:
+            e = flatten(push_not(e))
+        return self._lower(e)
+
+    def _lower(self, e: Expr) -> PlanNode:
+        if isinstance(e, Const):
+            return self._const(e.value)
+        if isinstance(e, Eq):
+            return self._lower_eq(e)
+        if isinstance(e, In):
+            return self._lower_in(e.col, e.values)
+        if isinstance(e, Range):
+            return self._lower_range(e)
+        if isinstance(e, Not):
+            child = self._lower(e.operand)
+            if isinstance(child, PConst):
+                return self._const(not child.value)
+            if isinstance(child, PNot):  # complement lowering may re-negate
+                return child.child
+            node = PNot(child)
+            # complement flips clean-run types and inverts literals in
+            # place, so its compressed size matches the child's
+            node.est_words = child.est_words
+            return node
+        if isinstance(e, And):
+            return self._lower_nary(e.operands, PAnd)
+        if isinstance(e, Or):
+            return self._lower_nary(e.operands, POr)
+        raise TypeError(f"not a query expression: {e!r}")
+
+    def _const(self, value: bool) -> PConst:
+        node = PConst(value)
+        node.est_words = 1 if not value else self._n_words
+        return node
+
+    def _leaf(self, col: int, bid: int) -> PBitmap:
+        node = PBitmap(col, bid)
+        node.est_words = self._bitmap_words(col, bid)
+        return node
+
+    def _value_node(self, col: int, code) -> PlanNode:
+        """One value rank on a k-of-N column -> AND of its k bitmaps."""
+        leaves = [self._leaf(col, int(b)) for b in code]
+        if len(leaves) == 1:
+            return leaves[0]
+        if self.optimize:
+            leaves.sort(key=lambda n: n.est_words)
+        node = PAnd(leaves)
+        node.est_words = min(l.est_words for l in leaves)
+        return node
+
+    def _lower_eq(self, e: Eq) -> PlanNode:
+        c = self.index.resolve_column(e.col)
+        if not (0 <= e.value < self.index.card(c)):
+            return self._const(False)  # unseen value matches no rows
+        code = self.index.columns[c].encoder.codes(np.array([e.value]))[0]
+        return self._value_node(c, code)
+
+    def _lower_in(self, col, values: Tuple[int, ...]) -> PlanNode:
+        c = self.index.resolve_column(col)
+        card = self.index.card(c)
+        # dedupe + drop out-of-domain ranks (minimal bitmap set)
+        vals = sorted({int(v) for v in values if 0 <= int(v) < card})
+        if not vals:
+            return self._const(False)
+        if len(vals) == card:
+            return self._const(True)
+        if self.optimize and len(vals) > card - len(vals):
+            # minimal bitmap set: a value set covering most of the domain is
+            # cheaper as the complement of its (smaller) inverse set; every
+            # row holds exactly one value, so NOT(inverse) is exact, and an
+            # enclosing AND fuses the NOT into a compressed-domain andnot
+            comp = sorted(set(range(card)) - set(vals))
+            child = self._lower_in(c, tuple(comp))
+            node = PNot(child)
+            node.est_words = child.est_words
+            return node
+        enc = self.index.columns[c].encoder
+        codes = enc.codes(np.asarray(vals, dtype=np.int64))
+        if enc.k == 1:
+            # distinct ranks may still share bitmaps only at k>1; at k=1 the
+            # minimal set is just the distinct bitmap ids
+            bids = sorted({int(b) for b in codes[:, 0]})
+            children: List[PlanNode] = [self._leaf(c, b) for b in bids]
+        else:
+            children = [self._value_node(c, code) for code in codes]
+        if len(children) == 1:
+            return children[0]
+        if self.optimize:
+            children.sort(key=lambda n: n.est_words)
+        node = POr(children)
+        node.est_words = min(sum(ch.est_words for ch in children), self._n_words)
+        return node
+
+    def _lower_range(self, e: Range) -> PlanNode:
+        c = self.index.resolve_column(e.col)
+        card = self.index.card(c)
+        lo = 0 if e.lo is None else max(int(e.lo), 0)
+        hi = card - 1 if e.hi is None else min(int(e.hi), card - 1)
+        if lo > hi:
+            return self._const(False)
+        if lo == 0 and hi == card - 1:
+            return self._const(True)
+        return self._lower_in(c, tuple(range(lo, hi + 1)))
+
+    def _lower_nary(self, operands, cls) -> PlanNode:
+        children = [self._lower(op) for op in operands]
+        # constant folding
+        if cls is PAnd:
+            if any(isinstance(ch, PConst) and not ch.value for ch in children):
+                return self._const(False)
+            children = [ch for ch in children
+                        if not (isinstance(ch, PConst) and ch.value)]
+            if not children:
+                return self._const(True)
+        else:
+            if any(isinstance(ch, PConst) and ch.value for ch in children):
+                return self._const(True)
+            children = [ch for ch in children
+                        if not (isinstance(ch, PConst) and not ch.value)]
+            if not children:
+                return self._const(False)
+        if len(children) == 1:
+            return children[0]
+        if self.optimize:
+            # cheapest first: for AND the sparsest bitmap prunes the chain,
+            # for OR small results keep intermediate unions small
+            children.sort(key=lambda n: n.est_words)
+            if cls is PAnd:
+                neg = [ch.child for ch in children if isinstance(ch, PNot)]
+                pos = [ch for ch in children if not isinstance(ch, PNot)]
+                if pos and neg:  # fuse x & ~y -> andnot (no complement)
+                    node = PDiff(pos, neg)
+                    node.est_words = min(ch.est_words for ch in pos)
+                    return node
+        node = cls(children)
+        if cls is PAnd:
+            node.est_words = min(ch.est_words for ch in children)
+        else:
+            node.est_words = min(sum(ch.est_words for ch in children),
+                                 self._n_words)
+        return node
+
+
+def plan(index: BitmapIndex, e: Expr, optimize: bool = True) -> PlanNode:
+    """Plan an expression against an index; ``optimize=False`` keeps the
+    user's tree shape (baseline for benchmarks)."""
+    return Planner(index, optimize=optimize).plan(e)
+
+
+def explain(node: PlanNode, depth: int = 0) -> str:
+    """Human-readable plan tree with size estimates."""
+    pad = "  " * depth
+    if isinstance(node, PBitmap):
+        return f"{pad}bitmap c{node.col}:b{node.bitmap_id} ~{node.est_words}w"
+    if isinstance(node, PConst):
+        return f"{pad}{'ALL' if node.value else 'NONE'}"
+    if isinstance(node, PNot):
+        return f"{pad}NOT ~{node.est_words}w\n" + explain(node.child, depth + 1)
+    if isinstance(node, PDiff):
+        lines = [f"{pad}ANDNOT ~{node.est_words}w"]
+        lines += [explain(ch, depth + 1) for ch in node.pos]
+        lines += [f"{pad}  minus:"]
+        lines += [explain(ch, depth + 2) for ch in node.neg]
+        return "\n".join(lines)
+    name = "AND" if isinstance(node, PAnd) else "OR"
+    lines = [f"{pad}{name} ~{node.est_words}w"]
+    lines += [explain(ch, depth + 1) for ch in node.children]
+    return "\n".join(lines)

@@ -1,44 +1,125 @@
-"""Query engine over a BitmapIndex: equality / conjunction / disjunction.
+"""Query layer over a BitmapIndex: expression API + row-scan oracles.
 
-Queries translate to AND/OR over EWAH bitmaps (paper §2.1); for a k-of-N
-encoded column an equality predicate loads k bitmaps and ANDs them.
-A naive row-scan oracle is provided for tests.
+Queries are composable ``Expr`` trees (see ``repro.core.expr``) built with
+operator overloading, planned by ``repro.core.planner`` and evaluated by
+``repro.core.executor``:
+
+    from repro.core import col, query
+    hits = query.execute(index, (col(0) == 3) & ~col(1).isin([1, 2]))
+
+The original free functions (``equality`` / ``conjunction`` / ``disjunction``
+/ ``in_set``) remain as deprecated shims over the expression API; they now
+evaluate through the planner, which makes ``conjunction`` deterministic under
+predicate-dict ordering (operands are ordered by estimated compressed size,
+ties by column) and deduplicates value ranks in ``in_set``.
+
+``naive_eval`` is the row-scan oracle for arbitrary expressions; the older
+``naive_*`` helpers stay for the seed tests.
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence
+import warnings
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
-from .ewah import EWAH, and_many, or_many
+from .ewah import EWAH
+from .expr import And, Const, Eq, Expr, In, Not, Or, Range, col
+from .executor import QueryBatch, execute, execute_rows
 from .index import BitmapIndex
+from .planner import explain, plan
+
+__all__ = [
+    "col", "execute", "execute_rows", "plan", "explain", "QueryBatch",
+    "equality", "conjunction", "disjunction", "in_set",
+    "naive_eval", "naive_equality", "naive_conjunction", "naive_disjunction",
+]
 
 
-def equality(index: BitmapIndex, col: int, value_rank: int) -> EWAH:
-    return index.equality_bitmap(col, value_rank)
+def _deprecated(old: str, new: str):
+    warnings.warn(f"repro.core.query.{old} is deprecated; build an "
+                  f"expression with {new} and call query.execute",
+                  DeprecationWarning, stacklevel=3)
+
+
+# -- deprecated free-function shims ----------------------------------------
+
+def equality(index: BitmapIndex, c: int, value_rank: int) -> EWAH:
+    _deprecated("equality", "col(c) == v")
+    return execute(index, Eq(c, value_rank))
 
 
 def conjunction(index: BitmapIndex, predicates: Dict[int, int]) -> EWAH:
-    """AND of column == value predicates."""
-    bms = [index.equality_bitmap(c, v) for c, v in predicates.items()]
-    return and_many(bms)
+    """AND of column == value predicates (deterministic across dict orders)."""
+    _deprecated("conjunction", "(col(a) == x) & (col(b) == y)")
+    ops = tuple(Eq(c, v) for c, v in sorted(predicates.items()))
+    return execute(index, And(ops))
 
 
 def disjunction(index: BitmapIndex, predicates: Dict[int, int]) -> EWAH:
-    bms = [index.equality_bitmap(c, v) for c, v in predicates.items()]
-    return or_many(bms)
+    _deprecated("disjunction", "(col(a) == x) | (col(b) == y)")
+    ops = tuple(Eq(c, v) for c, v in sorted(predicates.items()))
+    return execute(index, Or(ops))
 
 
-def in_set(index: BitmapIndex, col: int, value_ranks: Sequence[int]) -> EWAH:
-    """column IN (v1, v2, ...) as an OR of equality bitmaps."""
-    bms = [index.equality_bitmap(col, v) for v in value_ranks]
-    return or_many(bms)
+def in_set(index: BitmapIndex, c: int, value_ranks: Sequence[int]) -> EWAH:
+    """column IN (v1, v2, ...); duplicate ranks are collapsed."""
+    _deprecated("in_set", "col(c).isin(values)")
+    return execute(index, In(c, tuple(value_ranks)))
 
 
 # -- oracles ---------------------------------------------------------------
 
-def naive_equality(table: np.ndarray, col: int, value_rank: int) -> np.ndarray:
-    return np.flatnonzero(np.asarray(table)[:, col] == value_rank)
+def naive_eval(table: np.ndarray, e: Expr,
+               names: Optional[Sequence[str]] = None) -> np.ndarray:
+    """Row-scan oracle: evaluate an expression to a boolean row mask."""
+    table = np.asarray(table)
+
+    def resolve(key) -> int:
+        if isinstance(key, (int, np.integer)):
+            return int(key)
+        assert names is not None, f"column name {key!r} but no names given"
+        return list(names).index(key)
+
+    def ev(node: Expr) -> np.ndarray:
+        if isinstance(node, Const):
+            return np.full(len(table), node.value, dtype=bool)
+        if isinstance(node, Eq):
+            return table[:, resolve(node.col)] == node.value
+        if isinstance(node, In):
+            return np.isin(table[:, resolve(node.col)], list(node.values))
+        if isinstance(node, Range):
+            v = table[:, resolve(node.col)]
+            mask = np.ones(len(table), dtype=bool)
+            if node.lo is not None:
+                mask &= v >= node.lo
+            if node.hi is not None:
+                mask &= v <= node.hi
+            return mask
+        if isinstance(node, Not):
+            return ~ev(node.operand)
+        if isinstance(node, And):
+            mask = np.ones(len(table), dtype=bool)
+            for c in node.operands:
+                mask &= ev(c)
+            return mask
+        if isinstance(node, Or):
+            mask = np.zeros(len(table), dtype=bool)
+            for c in node.operands:
+                mask |= ev(c)
+            return mask
+        raise TypeError(f"not a query expression: {node!r}")
+
+    return ev(e)
+
+
+def naive_eval_rows(table: np.ndarray, e: Expr,
+                    names: Optional[Sequence[str]] = None) -> np.ndarray:
+    return np.flatnonzero(naive_eval(table, e, names))
+
+
+def naive_equality(table: np.ndarray, c: int, value_rank: int) -> np.ndarray:
+    return np.flatnonzero(np.asarray(table)[:, c] == value_rank)
 
 
 def naive_conjunction(table: np.ndarray, predicates: Dict[int, int]) -> np.ndarray:

@@ -18,9 +18,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import (BitmapIndex, lex_sort, order_columns_freq_aware,
-                        random_shuffle)
-from repro.core import query as q
+from repro.core import (BitmapIndex, execute, lex_sort,
+                        order_columns_freq_aware, random_shuffle)
+from repro.core.expr import And, Eq, Expr, Not, Or
 
 COLUMNS = ("source", "lang", "length_bucket", "quality", "dedup_cluster")
 
@@ -66,21 +66,20 @@ class BitmapDataPipeline:
                exclude: Optional[Dict[str, int]] = None) -> int:
         """Install the sample filter; returns the number of selected docs."""
         col = {name: i for i, name in enumerate(COLUMNS)}
-        bm = None
+        parts: List[Expr] = []
         if conj:
-            bm = q.conjunction(self.index, {col[c]: v for c, v in conj.items()})
+            parts.extend(Eq(col[c], v) for c, v in sorted(conj.items()))
         if disj:
-            d = q.disjunction(self.index, {col[c]: v for c, v in disj.items()})
-            bm = d if bm is None else (bm & d)
-        if bm is None:
+            parts.append(Or(tuple(Eq(col[c], v)
+                                  for c, v in sorted(disj.items()))))
+        if exclude:  # the planner fuses this into a compressed-domain andnot
+            parts.append(Not(Or(tuple(Eq(col[c], v)
+                                      for c, v in sorted(exclude.items())))))
+        if not parts:
             sel = np.arange(len(self.table))
         else:
-            sel = bm.set_bits()
-        if exclude:
-            ex = q.disjunction(self.index, {col[c]: v for c, v in exclude.items()})
-            mask = np.ones(len(self.table), dtype=bool)
-            mask[ex.set_bits()] = False
-            sel = sel[mask[sel]]
+            e = parts[0] if len(parts) == 1 else And(tuple(parts))
+            sel = execute(self.index, e).set_bits()
         self.selected = sel
         return len(sel)
 

@@ -45,6 +45,29 @@ def word_logical(a, b, op: str = "and", interpret: bool = True,
     return out[: orig[0], : orig[1]]
 
 
+def logical_reduce(mat, op: str = "and", interpret: bool = True,
+                   block_rows: int = 8, block_cols: int = 1024) -> jax.Array:
+    """Reduce the rows of an (L, n_words) uint32 matrix to one word row.
+
+    Tree reduction: each round halves the operand count by running the
+    clean-tile-skipping ``word_logical`` kernel on the two matrix halves, so
+    an L-way AND/OR costs ceil(log2 L) kernel launches over ever-smaller
+    stacks — the dense executor path for n-ary query nodes.
+    """
+    assert op in ("and", "or", "xor"), op  # associative ops only
+    mat = jnp.asarray(mat, jnp.uint32)
+    assert mat.ndim == 2 and mat.shape[0] >= 1, mat.shape
+    while mat.shape[0] > 1:
+        half = mat.shape[0] // 2
+        red = word_logical(mat[:half], mat[half:2 * half], op,
+                           interpret=interpret, block_rows=block_rows,
+                           block_cols=block_cols)
+        if mat.shape[0] % 2:  # odd row carries to the next round
+            red = jnp.concatenate([red, mat[2 * half:]], axis=0)
+        mat = red
+    return mat[0]
+
+
 def popcount_total(a, interpret: bool = True) -> jax.Array:
     a = jnp.asarray(a, jnp.uint32)
     ap, _ = _pad2(a, 8, 1024)

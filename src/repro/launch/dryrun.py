@@ -120,6 +120,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, args) -> dict:
         "argument_size_in_bytes", "output_size_in_bytes",
         "temp_size_in_bytes", "alias_size_in_bytes") if hasattr(ma, k)}
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # newer jax returns [per-device dict]
+        ca = ca[0] if ca else {}
     cost = {k: float(v) for k, v in ca.items()
             if k in ("flops", "bytes accessed", "transcendentals")}
 

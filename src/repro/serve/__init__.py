@@ -1,0 +1,3 @@
+"""Serving layer: LM decode loop (``loop``) and the bitmap-index query
+endpoint (``query_api``).  Submodules import lazily — ``loop`` pulls in the
+model stack, ``query_api`` only the core query engine."""

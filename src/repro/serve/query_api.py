@@ -1,0 +1,217 @@
+"""Minimal query-serving endpoint over a bitmap index.
+
+Two layers, both dependency-free (stdlib ``http.server`` + the core query
+stack):
+
+* ``QueryService`` — programmatic facade: parse a JSON expression, plan it,
+  execute (EWAH / Pallas / auto), return rows + stats.  Batched queries go
+  through ``QueryBatch`` so shared operands load once.
+* ``serve()`` — a threaded HTTP server exposing the service:
+    POST /query   {"query": <expr>}          -> one result
+    POST /query   {"queries": [<expr>, ...]} -> batched results
+    GET  /healthz                            -> liveness
+    GET  /stats                              -> index size/shape stats
+
+Wire format for expressions (mirrors the AST):
+    {"op": "eq", "col": 0, "value": 3}
+    {"op": "in", "col": "region", "values": [1, 2]}
+    {"op": "range", "col": 1, "lo": 10, "hi": 20}        # either bound opt.
+    {"op": "and"|"or", "args": [<expr>, ...]}
+    {"op": "not", "arg": <expr>}
+
+Run standalone against a synthetic sorted table:
+    PYTHONPATH=src python -m repro.serve.query_api --port 8321
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import BitmapIndex, lex_sort, synth
+from repro.core.expr import And, Eq, Expr, In, Not, Or, Range
+from repro.core.executor import Executor, QueryBatch
+from repro.core.planner import explain, plan
+
+
+def parse_expr(obj: Dict) -> Expr:
+    """JSON wire format -> Expr tree (raises ValueError on malformed input)."""
+    if not isinstance(obj, dict) or "op" not in obj:
+        raise ValueError(f"expression must be an object with 'op': {obj!r}")
+    op = obj["op"]
+    if op == "eq":
+        return Eq(obj["col"], int(obj["value"]))
+    if op == "in":
+        return In(obj["col"], tuple(int(v) for v in obj["values"]))
+    if op == "range":
+        lo, hi = obj.get("lo"), obj.get("hi")
+        if lo is None and hi is None:
+            raise ValueError("range needs at least one of lo/hi")
+        return Range(obj["col"], None if lo is None else int(lo),
+                     None if hi is None else int(hi))
+    if op in ("and", "or"):
+        args = [parse_expr(a) for a in obj["args"]]
+        if not args:
+            raise ValueError(f"{op} needs at least one argument")
+        return And(tuple(args)) if op == "and" else Or(tuple(args))
+    if op == "not":
+        return Not(parse_expr(obj["arg"]))
+    raise ValueError(f"unknown op {op!r}")
+
+
+def expr_to_json(e: Expr) -> Dict:
+    """Inverse of ``parse_expr`` (for clients and round-trip tests)."""
+    if isinstance(e, Eq):
+        return {"op": "eq", "col": e.col, "value": e.value}
+    if isinstance(e, In):
+        return {"op": "in", "col": e.col, "values": list(e.values)}
+    if isinstance(e, Range):
+        out = {"op": "range", "col": e.col}
+        if e.lo is not None:
+            out["lo"] = e.lo
+        if e.hi is not None:
+            out["hi"] = e.hi
+        return out
+    if isinstance(e, And):
+        return {"op": "and", "args": [expr_to_json(c) for c in e.operands]}
+    if isinstance(e, Or):
+        return {"op": "or", "args": [expr_to_json(c) for c in e.operands]}
+    if isinstance(e, Not):
+        return {"op": "not", "arg": expr_to_json(e.operand)}
+    raise TypeError(f"cannot serialize {e!r}")
+
+
+class QueryService:
+    """Plan + execute queries against one index; thread-safe for reads."""
+
+    def __init__(self, index: BitmapIndex, backend: str = "auto",
+                 max_rows: int = 10_000):
+        self.index = index
+        self.backend = backend
+        self.max_rows = max_rows  # cap rows per response, count is exact
+
+    def _result(self, bm) -> Dict:
+        rows = bm.set_bits()  # pad bits already masked, so len == popcount
+        return {
+            "count": len(rows),
+            "rows": rows[: self.max_rows].tolist(),
+            "truncated": bool(len(rows) > self.max_rows),
+            "result_words": bm.size_words,
+        }
+
+    def query(self, expr, explain_plan: bool = False) -> Dict:
+        e = parse_expr(expr) if isinstance(expr, dict) else expr
+        p = plan(self.index, e)
+        out = self._result(Executor(self.index, backend=self.backend).run(p))
+        if explain_plan:
+            out["plan"] = explain(p)
+        return out
+
+    def query_batch(self, exprs: Sequence) -> List[Dict]:
+        es = [parse_expr(e) if isinstance(e, dict) else e for e in exprs]
+        bms = QueryBatch(es).execute(self.index, backend=self.backend)
+        return [self._result(bm) for bm in bms]
+
+    def stats(self) -> Dict:
+        idx = self.index
+        return {
+            "n_rows": idx.n_rows,
+            "n_columns": len(idx.columns),
+            "n_bitmaps": idx.n_bitmaps,
+            "n_partitions": idx.n_partitions,
+            "size_words": idx.size_words,
+            "column_names": idx.column_names,
+            "cards": [idx.card(c) for c in range(len(idx.columns))],
+        }
+
+
+class _Handler(BaseHTTPRequestHandler):
+    service: QueryService  # set by make_server
+
+    def _send(self, code: int, payload: Dict):
+        body = json.dumps(payload).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def do_GET(self):
+        if self.path == "/healthz":
+            self._send(200, {"ok": True})
+        elif self.path == "/stats":
+            self._send(200, self.service.stats())
+        else:
+            self._send(404, {"error": f"unknown path {self.path}"})
+
+    def do_POST(self):
+        if self.path != "/query":
+            self._send(404, {"error": f"unknown path {self.path}"})
+            return
+        try:
+            n = int(self.headers.get("Content-Length", 0))
+            req = json.loads(self.rfile.read(n) or b"{}")
+            if "queries" in req:
+                self._send(200, {"results":
+                                 self.service.query_batch(req["queries"])})
+            elif "query" in req:
+                self._send(200, self.service.query(
+                    req["query"], explain_plan=bool(req.get("explain"))))
+            else:
+                self._send(400, {"error": "body needs 'query' or 'queries'"})
+        except (ValueError, KeyError, TypeError) as exc:
+            # KeyError's str() wraps its message in quotes; unwrap it
+            msg = exc.args[0] if exc.args else str(exc)
+            self._send(400, {"error": str(msg)})
+
+    def log_message(self, *args):  # quiet by default
+        pass
+
+
+def make_server(service: QueryService, host: str = "127.0.0.1",
+                port: int = 8321) -> ThreadingHTTPServer:
+    handler = type("BoundHandler", (_Handler,), {"service": service})
+    return ThreadingHTTPServer((host, port), handler)
+
+
+def serve_in_thread(service: QueryService, host: str = "127.0.0.1",
+                    port: int = 0):
+    """Start the server on a daemon thread; returns (server, port)."""
+    srv = make_server(service, host, port)
+    t = threading.Thread(target=srv.serve_forever, daemon=True)
+    t.start()
+    return srv, srv.server_address[1]
+
+
+def _demo_index(n_rows: int, rng: Optional[np.random.Generator] = None
+                ) -> BitmapIndex:
+    rng = rng or np.random.default_rng(0)
+    table = synth.census_like_table(n_rows, rng)
+    ranked, _ = synth.factorize(table)
+    ranked = ranked[lex_sort(ranked)]
+    return BitmapIndex.build(ranked, k=2,
+                             column_names=["region", "day", "user"])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8321)
+    ap.add_argument("--rows", type=int, default=50_000)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "ewah", "kernel"])
+    args = ap.parse_args(argv)
+    service = QueryService(_demo_index(args.rows), backend=args.backend)
+    srv = make_server(service, args.host, args.port)
+    print(f"[query_api] serving {args.rows} rows on "
+          f"http://{args.host}:{srv.server_address[1]} "
+          f"(backend={args.backend})", flush=True)
+    srv.serve_forever()
+
+
+if __name__ == "__main__":
+    main()

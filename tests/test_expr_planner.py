@@ -1,0 +1,342 @@
+"""Expression API, planner rewrites and executor vs the row-scan oracle."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BitmapIndex, QueryBatch, col, execute, execute_rows,
+                        lex_sort, random_shuffle, synth)
+from repro.core import query as q
+from repro.core.ewah import EWAH
+from repro.core.expr import And, Const, Eq, In, Not, Or, Range
+from repro.core.planner import (PAnd, PBitmap, PConst, PDiff, PNot, POr,
+                                flatten, plan, push_not, explain)
+
+
+@pytest.fixture(scope="module")
+def tables():
+    rng = np.random.default_rng(0)
+    t = synth.uniform_table(4000, 3, r=2, n_dep=1, rng=rng)
+    r, _ = synth.factorize(t)
+    return {"sorted": r[lex_sort(r)], "shuffled": r[random_shuffle(r, rng)]}
+
+
+# -- EWAH complement --------------------------------------------------------
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 2**31), st.integers(0, 2100), st.floats(0, 1))
+def test_invert_roundtrip(seed, n, p):
+    bits = np.random.default_rng(seed).random(n) < p
+    e = EWAH.from_bool(bits)
+    inv = ~e
+    assert np.array_equal(inv.to_bool(), ~bits)
+    assert inv == EWAH.from_bool(~bits)          # canonical form too
+    assert ~inv == e                             # involution
+    assert inv.count() == n - e.count()          # tail bits stay clear
+
+
+@pytest.mark.parametrize("n", [1, 31, 32, 33, 63, 64, 65, 4096])
+def test_invert_tail_semantics(n):
+    for bits in (np.zeros(n, bool), np.ones(n, bool)):
+        inv = ~EWAH.from_bool(bits)
+        assert np.array_equal(inv.to_bool(), ~bits)
+        assert inv.count() == int((~bits).sum())
+
+
+def test_invert_empty():
+    e = EWAH.from_bool(np.zeros(0, bool))
+    assert (~e).count() == 0 and (~e).n_bits == 0
+
+
+# -- expression building ----------------------------------------------------
+
+def test_operator_overloading_builds_ast():
+    e = (col("region") == 3) & ~(col("day").between(10, 20))
+    assert isinstance(e, And) and len(e.operands) == 2
+    assert e.operands[0] == Eq("region", 3)
+    assert e.operands[1] == Not(Range("day", 10, 20))
+    # chained & / | flatten at construction
+    e3 = (col(0) == 1) & (col(1) == 2) & (col(2) == 3)
+    assert len(e3.operands) == 3
+    assert ~~(col(0) == 1) == Eq(0, 1)  # double negation cancels
+
+    assert (col(0) < 5) == Range(0, None, 4)
+    assert (col(0) >= 5) == Range(0, 5, None)
+    assert col(0).isin([3, 1, 3, 2]) == In(0, (1, 2, 3))  # dedup + sort
+
+
+def test_in_values_deduplicated():
+    assert In(0, (5, 5, 5, 1)).values == (1, 5)
+
+
+def test_expr_has_no_truth_value():
+    # `and`/`or`/chained comparisons would silently drop operands
+    with pytest.raises(TypeError):
+        bool(col(0) == 1)
+    with pytest.raises(TypeError):
+        (col(0) == 1) and (col(1) == 2)
+    with pytest.raises(TypeError):
+        0 <= col(0) <= 5
+
+
+# -- logical rewrites -------------------------------------------------------
+
+def test_de_morgan_pushdown():
+    a, b, c = Eq(0, 1), Eq(1, 2), Eq(2, 3)
+    assert push_not(Not(And((a, b)))) == Or((Not(a), Not(b)))
+    assert push_not(Not(Or((a, b)))) == And((Not(a), Not(b)))
+    assert push_not(Not(Not(a))) == a
+    # nested: ~(a & (b | ~c)) -> ~a | (~b & c)
+    e = Not(And((a, Or((b, Not(c))))))
+    assert push_not(e) == Or((Not(a), And((Not(b), c))))
+    assert push_not(Not(Const(True))) == Const(False)
+
+
+def test_flatten_associative_chains():
+    a, b, c, d = (Eq(i, 0) for i in range(4))
+    assert flatten(And((And((a, b)), And((c, d))))) == And((a, b, c, d))
+    assert flatten(Or((a, Or((b, Or((c, d))))))) == Or((a, b, c, d))
+    assert flatten(And((a,))) == a  # single operand unwraps
+
+
+# -- planning against an index ---------------------------------------------
+
+def test_and_operands_ordered_by_size_estimate(tables):
+    table = tables["sorted"]
+    idx = BitmapIndex.build(table, k=1)
+    counts = np.bincount(table[:, 0])
+    dense_v, rare_v = int(counts.argmax()), int(counts.argmin())
+    mid_v = int(np.argsort(counts)[len(counts) // 2])
+    e = (col(0) == dense_v) & (col(0) == mid_v) & (col(0) == rare_v)
+    p = plan(idx, e)
+    assert isinstance(p, PAnd)
+    ests = [ch.est_words for ch in p.children]
+    assert ests == sorted(ests)
+    # the estimates are the true per-bitmap compressed sizes
+    sizes = idx.columns[0].bitmap_sizes()
+    assert ests[0] == int(sizes[min(dense_v, mid_v, rare_v,
+                                    key=lambda v: sizes[v])])
+    # naive planning keeps the user's order
+    p0 = plan(idx, e, optimize=False)
+    assert [ch.bitmap_id for ch in p0.children] == [dense_v, mid_v, rare_v]
+
+
+def test_not_fused_into_andnot(tables):
+    idx = BitmapIndex.build(tables["sorted"], k=1)
+    e = (col(0) == 1) & ~(col(1) == 2)
+    p = plan(idx, e)
+    assert isinstance(p, PDiff)
+    assert [type(x) for x in p.pos] == [PBitmap]
+    assert [type(x) for x in p.neg] == [PBitmap]
+    # without optimization the complement stays explicit
+    p0 = plan(idx, e, optimize=False)
+    assert isinstance(p0, PAnd)
+    assert any(isinstance(ch, PNot) for ch in p0.children)
+
+
+def test_wide_in_lowered_as_complement(tables):
+    table = tables["sorted"]
+    idx = BitmapIndex.build(table, k=1)
+    card = idx.card(0)
+    wide = list(range(card - 2))        # all but two values
+    p = plan(idx, In(0, tuple(wide)))
+    assert isinstance(p, PNot)          # NOT of the 2-value inverse set
+    inner = p.child
+    kids = inner.children if isinstance(inner, POr) else [inner]
+    assert len(kids) == 2
+    # full-domain IN folds to a constant
+    assert isinstance(plan(idx, In(0, tuple(range(card)))), PConst)
+    assert isinstance(plan(idx, In(0, (card + 5,))), PConst)
+
+
+def test_range_lowering_vs_oracle(tables):
+    for name, table in tables.items():
+        for k in (1, 2):
+            idx = BitmapIndex.build(table, k=k)
+            rng = np.random.default_rng(k)
+            for _ in range(10):
+                c = int(rng.integers(0, table.shape[1]))
+                card = idx.card(c)
+                lo = int(rng.integers(-2, card))
+                hi = lo + int(rng.integers(0, card))
+                e = col(c).between(lo, hi)
+                assert np.array_equal(execute_rows(idx, e),
+                                      q.naive_eval_rows(table, e)), (name, k)
+            # open-ended ranges
+            for e in ((col(0) <= 3), (col(1) > 2), (col(2) >= 0)):
+                assert np.array_equal(execute_rows(idx, e),
+                                      q.naive_eval_rows(table, e)), name
+
+
+def test_const_folding(tables):
+    idx = BitmapIndex.build(tables["sorted"], k=1)
+    card = idx.card(0)
+    full = col(0).between(0, card - 1)       # whole domain -> ALL
+    p = plan(idx, full & (col(1) == 1))
+    assert not isinstance(p, (PAnd, PDiff)) or all(
+        not isinstance(ch, PConst) for ch in getattr(p, "children", []))
+    assert np.array_equal(execute_rows(idx, full & (col(1) == 1)),
+                          q.naive_eval_rows(tables["sorted"], col(1) == 1))
+    none = col(0).between(card + 1, card + 5)
+    assert execute(idx, none | (col(1) == 1)).count() == \
+        len(q.naive_eval_rows(tables["sorted"], col(1) == 1))
+    assert execute(idx, none & (col(1) == 1)).count() == 0
+    assert execute(idx, ~none).count() == idx.n_rows
+
+
+# -- end-to-end vs oracle ---------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2])
+@pytest.mark.parametrize("backend", ["ewah", "kernel", "auto"])
+def test_acceptance_query_vs_oracle(tables, k, backend):
+    """(Eq & Eq & Not(In)) bit-identical to the row-scan oracle on sorted
+    and shuffled tables, on every backend."""
+    for name, table in tables.items():
+        idx = BitmapIndex.build(table, k=k, partition_rows=992)
+        e = ((col(0) == int(table[7, 0]))
+             & (col(2) == int(table[7, 2]))
+             & ~col(1).isin([int(table[0, 1]), int(table[3, 1])]))
+        got = execute(idx, e, backend=backend).set_bits()
+        assert np.array_equal(got, q.naive_eval_rows(table, e)), (name, k)
+        # same result without optimization
+        got0 = execute(idx, e, backend=backend, optimize=False).set_bits()
+        assert np.array_equal(got0, q.naive_eval_rows(table, e)), (name, k)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31))
+def test_random_expressions_vs_oracle(seed):
+    rng = np.random.default_rng(seed)
+    t = synth.zipf_table(1500, 3, s=1.0, card=30, rng=rng)
+    table, _ = synth.factorize(t)
+    idx = BitmapIndex.build(table, k=2)
+
+    def rand_expr(depth):
+        c = int(rng.integers(0, 3))
+        card = idx.card(c)
+        if depth == 0 or rng.random() < 0.4:
+            kind = rng.integers(0, 3)
+            if kind == 0:
+                return col(c) == int(rng.integers(0, card + 2))
+            if kind == 1:
+                return col(c).isin(rng.integers(0, card,
+                                                size=5).tolist() * 2)
+            lo = int(rng.integers(0, card))
+            return col(c).between(lo, lo + int(rng.integers(0, card)))
+        a, b = rand_expr(depth - 1), rand_expr(depth - 1)
+        kind = rng.integers(0, 3)
+        if kind == 0:
+            return a & b
+        if kind == 1:
+            return a | b
+        return ~a & b
+
+    for _ in range(3):
+        e = rand_expr(3)
+        assert np.array_equal(execute_rows(idx, e),
+                              q.naive_eval_rows(table, e))
+
+
+def test_column_names_resolve(tables):
+    table = tables["sorted"]
+    names = [f"dim{i}" for i in range(table.shape[1])]
+    idx = BitmapIndex.build(table, k=1, column_names=names)
+    e = (col("dim0") == int(table[0, 0])) & ~(col("dim2") == int(table[1, 2]))
+    ei = (col(0) == int(table[0, 0])) & ~(col(2) == int(table[1, 2]))
+    assert np.array_equal(execute_rows(idx, e), execute_rows(idx, ei))
+    with pytest.raises(KeyError):
+        plan(idx, col("nope") == 1)
+    with pytest.raises(KeyError):
+        plan(BitmapIndex.build(table, k=1), col("dim0") == 1)
+
+
+# -- deprecated shims -------------------------------------------------------
+
+def test_conjunction_deterministic_under_dict_order(tables):
+    table = tables["sorted"]
+    idx = BitmapIndex.build(table, k=2)
+    v0, v2 = int(table[7, 0]), int(table[7, 2])
+    with pytest.warns(DeprecationWarning):
+        a = q.conjunction(idx, {0: v0, 2: v2})
+        b = q.conjunction(idx, {2: v2, 0: v0})
+    assert a == b
+    assert np.array_equal(a.set_bits(),
+                          q.naive_conjunction(table, {0: v0, 2: v2}))
+
+
+def test_in_set_deduplicates(tables):
+    table = tables["sorted"]
+    idx = BitmapIndex.build(table, k=1)
+    vals = [int(table[0, 1]), int(table[5, 1])]
+    with pytest.warns(DeprecationWarning):
+        a = q.in_set(idx, 1, vals * 7)
+        b = q.in_set(idx, 1, vals)
+    assert a == b
+    want = np.flatnonzero(np.isin(table[:, 1], vals))
+    assert np.array_equal(a.set_bits(), want)
+
+
+# -- batched execution ------------------------------------------------------
+
+def test_query_batch_matches_individual(tables):
+    table = tables["sorted"]
+    idx = BitmapIndex.build(table, k=2)
+    exprs = [(col(0) == int(table[i, 0])) & ~(col(1) == int(table[i, 1]))
+             for i in (0, 100, 500)]
+    exprs.append(col(2).between(1, 6) | (col(0) == int(table[0, 0])))
+    batch = QueryBatch(exprs).execute(idx)
+    for e, bm in zip(exprs, batch):
+        assert bm == execute(idx, e)
+        assert np.array_equal(bm.set_bits(), q.naive_eval_rows(table, e))
+
+
+def test_query_batch_shares_operand_loads(tables, monkeypatch):
+    idx = BitmapIndex.build(tables["sorted"], k=1)
+    loads = []
+    orig = BitmapIndex.bitmap
+
+    def counting(self, c, b):
+        loads.append((c, b))
+        return orig(self, c, b)
+
+    monkeypatch.setattr(BitmapIndex, "bitmap", counting)
+    v = int(tables["sorted"][0, 0])
+    # the shared Eq leaf appears in all three queries
+    exprs = [(col(0) == v) & (col(1) == int(tables["sorted"][i, 1]))
+             for i in (0, 50, 200)]
+    QueryBatch(exprs).execute(idx)
+    assert loads.count((0, v)) == 1
+
+
+def test_auto_backend_offloads_dense_nodes(monkeypatch):
+    """Per-node dispatch: dense operands go to the Pallas kernel path,
+    sparse ones stay on compressed EWAH (Roaring-style, per operation)."""
+    from repro.core.executor import Executor
+    rng = np.random.default_rng(1)
+    t = synth.zipf_table(60_000, 3, s=0.5, card=8, rng=rng)  # dense bitmaps
+    table, _ = synth.factorize(t)
+    idx = BitmapIndex.build(table, k=1)
+    e = ((col(0) == 0) | (col(0) == 1)) & ((col(1) == 0) | (col(2) == 1))
+    calls = []
+    orig = Executor._reduce_kernel
+    monkeypatch.setattr(Executor, "_reduce_kernel",
+                        lambda self, ch, op: (calls.append(op),
+                                              orig(self, ch, op))[1])
+    got = Executor(idx, backend="auto").run(plan(idx, e)).set_bits()
+    assert np.array_equal(got, q.naive_eval_rows(table, e))
+    assert calls, "auto backend never offloaded dense operands"
+    # sparse sorted data must NOT offload
+    calls.clear()
+    sparse = synth.zipf_table(60_000, 2, s=1.3, card=500, rng=rng)
+    ts, _ = synth.factorize(sparse)
+    ts = ts[lex_sort(ts)]
+    idx_s = BitmapIndex.build(ts, k=1)
+    Executor(idx_s, backend="auto").run(
+        plan(idx_s, (col(0) == 5) & (col(1) == 3)))
+    assert not calls
+
+
+def test_explain_smoke(tables):
+    idx = BitmapIndex.build(tables["sorted"], k=2)
+    e = (col(0) == 1) & ~col(1).isin([2, 3])
+    text = explain(plan(idx, e))
+    assert "ANDNOT" in text and "bitmap" in text

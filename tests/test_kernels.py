@@ -31,6 +31,18 @@ def test_word_logical_all_clean_tiles():
     assert np.asarray(ops.word_logical(a, b, "and")).max() == 0
 
 
+@pytest.mark.parametrize("L", [1, 2, 3, 7, 8, 16])
+@pytest.mark.parametrize("op", ["and", "or", "xor"])
+def test_logical_reduce_matches_numpy(L, op):
+    mat = RNG.integers(0, 2**32, size=(L, 700), dtype=np.uint32)
+    mat[0, :300] = 0
+    got = np.asarray(ops.logical_reduce(mat, op=op))
+    npop = {"and": np.bitwise_and, "or": np.bitwise_or,
+            "xor": np.bitwise_xor}[op]
+    want = npop.reduce(mat, axis=0)
+    assert np.array_equal(got, want)
+
+
 @pytest.mark.parametrize("shape", [(1, 5), (8, 1024), (5, 333), (17, 2049)])
 def test_popcount_sweep(shape):
     a = RNG.integers(0, 2**32, size=shape, dtype=np.uint32)

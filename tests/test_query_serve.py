@@ -1,0 +1,97 @@
+"""Query-serving endpoint: wire format, service facade, HTTP round trips."""
+import json
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import BitmapIndex, col, lex_sort, synth
+from repro.core import query as q
+from repro.serve.query_api import (QueryService, expr_to_json, parse_expr,
+                                   serve_in_thread)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(0)
+    t = synth.uniform_table(3000, 3, r=2, rng=rng)
+    table, _ = synth.factorize(t)
+    table = table[lex_sort(table)]
+    names = [f"dim{i}" for i in range(table.shape[1])]
+    idx = BitmapIndex.build(table, k=2, column_names=names)
+    return table, idx, QueryService(idx, max_rows=100)
+
+
+def test_wire_format_roundtrip():
+    e = ((col("region") == 3) & ~col("day").between(10, 20)) \
+        | col(2).isin([1, 2, 2])
+    assert parse_expr(expr_to_json(e)) == e
+    # open-ended range keeps its open side
+    r = col(0) >= 7
+    assert parse_expr(expr_to_json(r)) == r
+
+
+def test_parse_expr_rejects_malformed():
+    for bad in ({}, {"op": "nope"}, {"op": "and", "args": []},
+                {"op": "range", "col": 0}, "not-an-object"):
+        with pytest.raises(ValueError):
+            parse_expr(bad)
+
+
+def test_service_query_matches_oracle(setup):
+    table, idx, svc = setup
+    e = (col(0) == int(table[5, 0])) & ~(col(1) == int(table[5, 1]))
+    out = svc.query(expr_to_json(e), explain_plan=True)
+    want = q.naive_eval_rows(table, e)
+    assert out["count"] == len(want)
+    assert out["rows"] == want[:100].tolist()
+    assert out["truncated"] == (len(want) > 100)
+    assert "ANDNOT" in out["plan"] or "AND" in out["plan"]
+
+
+def test_service_batch(setup):
+    table, idx, svc = setup
+    exprs = [col(0) == int(table[i, 0]) for i in (0, 9, 42)]
+    outs = svc.query_batch([expr_to_json(e) for e in exprs])
+    for e, out in zip(exprs, outs):
+        assert out["count"] == len(q.naive_eval_rows(table, e))
+
+
+def test_http_endpoint(setup):
+    table, idx, svc = setup
+    srv, port = serve_in_thread(svc)
+    try:
+        base = f"http://127.0.0.1:{port}"
+
+        def post(payload):
+            req = urllib.request.Request(
+                f"{base}/query", data=json.dumps(payload).encode(),
+                headers={"Content-Type": "application/json"})
+            with urllib.request.urlopen(req) as resp:
+                return json.loads(resp.read())
+
+        with urllib.request.urlopen(f"{base}/healthz") as resp:
+            assert json.loads(resp.read()) == {"ok": True}
+        with urllib.request.urlopen(f"{base}/stats") as resp:
+            stats = json.loads(resp.read())
+        assert stats["n_rows"] == idx.n_rows
+        assert stats["size_words"] == idx.size_words
+
+        e = (col("dim0") == int(table[3, 0])) | (col("dim2") == int(table[3, 2]))
+        out = post({"query": expr_to_json(e), "explain": True})
+        assert out["count"] == len(q.naive_eval_rows(
+            table, (col(0) == int(table[3, 0])) | (col(2) == int(table[3, 2]))))
+        assert "plan" in out
+
+        outs = post({"queries": [expr_to_json(col(0) == 0),
+                                 expr_to_json(col(1) == 1)]})
+        assert len(outs["results"]) == 2
+
+        # malformed input -> 400, not a crash
+        try:
+            post({"query": {"op": "nope"}})
+            assert False, "expected HTTP 400"
+        except urllib.error.HTTPError as err:
+            assert err.code == 400
+    finally:
+        srv.shutdown()

@@ -1,0 +1,151 @@
+"""Full-sort vs external-merge-sort vs block-sort build + sharded queries.
+
+The paper's §4.4 point, measured end to end on this codebase: a table too
+large to sort in memory can either be block-sorted (sort chunks, concatenate
+— what you get by accident) or external-merge sorted (sort chunks into runs,
+k-way merge — what this repo's ``external_merge_sort_perm`` does).  Block
+sort loses most of the compression; the external merge recovers *exactly*
+the full-sort index, which this benchmark asserts
+(``ext_merge.size_words == full_sort.size_words``).
+
+Also smokes the sharded path: a ``ShardedIndex`` built from the merge-sorted
+table answers a mixed query workload bit-identically to the monolithic index.
+
+Emits CSV rows (like the other benchmarks) and writes a ``BENCH_sharded.json``
+artifact so CI records the perf trajectory.
+
+    PYTHONPATH=src python benchmarks/bench_sharded_build.py [--tiny] \
+        [--out BENCH_sharded.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import (BitmapIndex, IndexBuilder, ShardedIndex, block_sort,
+                        col, execute, external_sorted_chunks, lex_sort, synth)
+
+try:  # package-style and script-style execution both work
+    from .common import emit
+except ImportError:  # pragma: no cover
+    from common import emit
+
+
+def _make_table(n: int, rng: np.random.Generator) -> np.ndarray:
+    t = np.stack([rng.integers(0, 7, n),
+                  (rng.pareto(1.5, n) * 40).astype(np.int64) % 2000,
+                  rng.integers(0, 40_000, n)], axis=1)
+    table, _ = synth.factorize(t)
+    return table[rng.permutation(n)]
+
+
+def run(n: int = 200_000, chunk_rows: int = 8192, k: int = 1,
+        out_path: str = "BENCH_sharded.json") -> dict:
+    rng = np.random.default_rng(0)
+    table = _make_table(n, rng)
+    cards = [int(table[:, c].max()) + 1 for c in range(table.shape[1])]
+    n_blocks = max(n // chunk_rows, 1)
+    results: dict = {"n_rows": n, "chunk_rows": chunk_rows, "k": k,
+                     "variants": {}}
+
+    def record(name: str, size_words: int, t_sort: float, t_build: float):
+        results["variants"][name] = {
+            "size_words": int(size_words),
+            "sort_s": round(t_sort, 4),
+            "build_s": round(t_build, 4),
+        }
+        emit(f"sharded_build_{name}", (t_sort + t_build) * 1e6,
+             f"size_words={size_words};sort_s={t_sort:.2f};"
+             f"build_s={t_build:.2f}")
+
+    # 1. full in-memory lexicographic sort (the paper's best case)
+    t0 = time.perf_counter()
+    perm = lex_sort(table)
+    t_sort = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    full = BitmapIndex.build(table[perm], k=k, cards=cards)
+    record("full_sort", full.size_words, t_sort, time.perf_counter() - t0)
+
+    # 2. external merge sort + streaming IndexBuilder (chunked build)
+    t0 = time.perf_counter()
+    builder = IndexBuilder(cards, k=k)
+    for chunk in external_sorted_chunks(table, chunk_rows):
+        builder.append(chunk)
+    ext = builder.finish()
+    t_ext = time.perf_counter() - t0
+    record("ext_merge_stream", ext.size_words, t_ext, 0.0)
+
+    # 3. block-wise sort without merging (the degraded out-of-core baseline)
+    t0 = time.perf_counter()
+    bperm = block_sort(table, n_blocks)
+    t_sort = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    blocked = BitmapIndex.build(table[bperm], k=k, cards=cards)
+    record("block_sort", blocked.size_words, t_sort, time.perf_counter() - t0)
+
+    assert ext.size_words == full.size_words, (
+        "external merge sort must recover full-sort compression: "
+        f"{ext.size_words} != {full.size_words}")
+    results["block_overhead"] = round(
+        blocked.size_words / max(full.size_words, 1), 3)
+
+    # 4. sharded execution smoke: same answers, per-shard plans
+    sorted_table = table[perm]
+    shard_rows = max(-(-n // 8) // 32 * 32, 32)
+    sh = ShardedIndex.build(sorted_table, shard_rows=shard_rows, k=k,
+                            cards=cards)
+    exprs = [col(2) == int(v)
+             for v in rng.integers(0, cards[2], 8)]
+    exprs += [(col(0) == int(sorted_table[0, 0])) & ~col(1).isin([0, 1]),
+              col(1).between(0, 50) | (col(0) == 2)]
+    # first pass is cold (dense operands JIT-compile Pallas kernels per
+    # shape); the warm second pass is the steady-state serving number
+    def timed(idx):
+        t0 = time.perf_counter()
+        res = [execute(idx, e) for e in exprs]
+        cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res = [execute(idx, e) for e in exprs]
+        return res, cold, time.perf_counter() - t0
+
+    mono_res, t_mono_cold, t_mono = timed(full)
+    shard_res, t_shard_cold, t_shard = timed(sh)
+    for a, b in zip(mono_res, shard_res):
+        assert a == b, "sharded execution must be bit-identical"
+    results["query"] = {
+        "n_queries": len(exprs),
+        "n_shards": sh.n_shards,
+        "monolithic_s": round(t_mono, 4),
+        "sharded_s": round(t_shard, 4),
+        "monolithic_cold_s": round(t_mono_cold, 4),
+        "sharded_cold_s": round(t_shard_cold, 4),
+        "bit_identical": True,
+    }
+    emit("sharded_query_smoke", t_shard / len(exprs) * 1e6,
+         f"n_shards={sh.n_shards};mono_s={t_mono:.3f};shard_s={t_shard:.3f}")
+
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"wrote {out_path}")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke size (20k rows)")
+    ap.add_argument("--rows", type=int, default=None)
+    ap.add_argument("--chunk-rows", type=int, default=None)
+    ap.add_argument("--k", type=int, default=1)
+    ap.add_argument("--out", default="BENCH_sharded.json")
+    args = ap.parse_args(argv)
+    n = args.rows or (20_000 if args.tiny else 200_000)
+    chunk = args.chunk_rows or (2048 if args.tiny else 8192)
+    run(n=n, chunk_rows=chunk, k=args.k, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

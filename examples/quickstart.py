@@ -1,13 +1,16 @@
-"""Quickstart: sorted EWAH bitmap index + the composable query expression API.
+"""Quickstart: sorted EWAH bitmap indexes — streaming builds, sharded
+execution, the composable query API, and the cached, pooled query service.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (BitmapIndex, QueryBatch, col, execute, explain,
+from repro.core import (BitmapIndex, IndexBuilder, QueryBatch, ShardedIndex,
+                        col, execute, explain, external_sorted_chunks,
                         lex_sort, order_columns, plan, random_shuffle)
 from repro.core import query as q
 from repro.core import synth
+from repro.serve.query_api import QueryService
 
 
 def main():
@@ -19,15 +22,25 @@ def main():
     cards = [len(u) for u in uniques]
     print(f"fact table: {len(ranked)} rows, cardinalities {cards}")
 
-    # --- the paper's recipe -------------------------------------------------
+    # --- the paper's recipe, at streaming scale -----------------------------
     # 1. order columns (high-cardinality first when values repeat >= 32x)
     order = order_columns(cards, "card_desc")
-    # 2. sort the fact table lexicographically
-    sorted_table = ranked[lex_sort(ranked, order)]
-    # 3. build the EWAH-compressed bitmap index (named columns)
+    # 2. sort the fact table lexicographically *without* holding it in
+    #    memory: chunk-sorted runs + k-way merge (external merge sort).
+    #    Block-wise sorting — sort chunks, concatenate — would lose most of
+    #    the compression (paper §4.4); the merge recovers the full sort.
+    # 3. stream the sorted chunks into an incremental IndexBuilder.
     names = ["region", "day", "user"]
-    idx_sorted = BitmapIndex.build(sorted_table, k=1, cards=cards,
-                                   column_names=names)
+    builder = IndexBuilder(cards, k=1, column_names=names)
+    for chunk in external_sorted_chunks(ranked, chunk_rows=8192,
+                                        col_order=order):
+        builder.append(chunk)
+    idx_sorted = builder.finish()
+
+    # identical to the one-shot in-memory build
+    sorted_table = ranked[lex_sort(ranked, order)]
+    assert idx_sorted.size_words == \
+        BitmapIndex.build(sorted_table, k=1, cards=cards).size_words
 
     # versus an unsorted baseline
     shuffled = ranked[random_shuffle(ranked, rng)]
@@ -36,7 +49,8 @@ def main():
     print(f"index size unsorted: {idx_raw.size_words} words "
           f"({4 * idx_raw.size_words / 1e6:.2f} MB)")
     print(f"index size sorted:   {idx_sorted.size_words} words "
-          f"({4 * idx_sorted.size_words / 1e6:.2f} MB)")
+          f"({4 * idx_sorted.size_words / 1e6:.2f} MB)  "
+          f"(streamed, never sorted more than 8192 rows at once)")
     print(f"sorting gain: {idx_raw.size_words / idx_sorted.size_words:.2f}x")
 
     # --- composable query expressions ---------------------------------------
@@ -61,14 +75,37 @@ def main():
                                                   names=names))
     print("verified against the row-scan oracle.")
 
+    # --- sharded execution --------------------------------------------------
+    # split rows into shards (the scale-out unit): per-shard plans adapt to
+    # each shard's compressed sizes, results concatenate exactly
+    sharded = ShardedIndex.build(sorted_table, shard_rows=8192, k=1,
+                                 cards=cards, column_names=names)
+    assert execute(sharded, expr) == hits
+    print(f"\nsharded: {sharded.n_shards} shards, "
+          f"{sharded.size_words} words total — same bits, same answer")
+
     # --- batched execution shares loaded operands ---------------------------
     batch = QueryBatch([
         (col("region") == v_region) & (col("user") == 0),
         (col("region") == v_region) | (col("day") == v_day),
         ~(col("region") == v_region) & col("day").between(0, 9),
     ])
-    for e, bm in zip(batch.exprs, batch.execute(idx_sorted)):
+    for e, bm in zip(batch.exprs, batch.execute(sharded)):
         print(f"batch {e}: {bm.count()} rows")
+
+    # --- the cached, pooled query service -----------------------------------
+    # worker pool + LRU result cache keyed by the *canonical* structural key
+    # of the expression, so a repeat (or commutatively reordered) query never
+    # touches a bitmap; swapping in a rebuilt index invalidates the cache
+    svc = QueryService(sharded, pool_workers=4, cache_entries=128)
+    first = svc.query(expr)
+    again = svc.query(expr)
+    stats = svc.stats()["cache"]
+    print(f"\nservice: count={first['count']} cached={first['cached']} "
+          f"then cached={again['cached']} "
+          f"(cache {stats['hits']} hits / {stats['misses']} misses)")
+    assert again["rows"] == first["rows"]
+    svc.close()
 
 
 if __name__ == "__main__":

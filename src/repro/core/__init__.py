@@ -11,12 +11,16 @@ from .wah import WAH
 from .encoding import ColumnEncoder, bitmaps_needed, choose_k, unrank_lex, revolving_door
 from .sorting import (
     lex_sort, gray_sort, lex_sort_bits, random_sort, random_shuffle,
-    block_sort, order_columns, order_columns_freq_aware,
+    block_sort, external_merge_sort_perm, external_sorted_chunks,
+    order_columns, order_columns_freq_aware,
 )
-from .index import BitmapIndex, ColumnIndex, concat_bitmaps
-from .expr import And, Col, Const, Eq, Expr, In, Not, Or, Range, col
+from .index import (BitmapIndex, ColumnIndex, IndexBuilder, concat_bitmaps,
+                    validate_partition_rows)
+from .expr import (And, Col, Const, Eq, Expr, In, Not, Or, Range,
+                   canonical_key, col)
 from .planner import explain, plan
 from .executor import QueryBatch, execute, execute_rows
+from .shard import ShardedIndex
 from . import query
 from . import synth
 
@@ -25,9 +29,12 @@ __all__ = [
     "EWAH", "binary_op", "and_many", "or_many", "WAH",
     "ColumnEncoder", "bitmaps_needed", "choose_k", "unrank_lex", "revolving_door",
     "lex_sort", "gray_sort", "lex_sort_bits", "random_sort", "random_shuffle",
-    "block_sort", "order_columns", "order_columns_freq_aware",
-    "BitmapIndex", "ColumnIndex", "concat_bitmaps",
+    "block_sort", "external_merge_sort_perm", "external_sorted_chunks",
+    "order_columns", "order_columns_freq_aware",
+    "BitmapIndex", "ColumnIndex", "IndexBuilder", "ShardedIndex",
+    "concat_bitmaps", "validate_partition_rows",
     "Expr", "Col", "col", "Eq", "In", "Range", "And", "Or", "Not", "Const",
+    "canonical_key",
     "plan", "explain", "execute", "execute_rows", "QueryBatch",
     "query", "synth",
 ]

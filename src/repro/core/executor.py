@@ -105,9 +105,13 @@ class Executor:
     def _use_kernel(self, bms: Sequence[EWAH]) -> bool:
         if self.backend == "ewah":
             return False
+        n_words = bms[0].n_words_uncompressed
+        if n_words == 0:
+            # zero-row operands (e.g. an empty shard): nothing to reduce
+            # densely, and Pallas rejects zero-size blocks
+            return False
         if self.backend == "kernel":
             return True
-        n_words = max(bms[0].n_words_uncompressed, 1)
         density = sum(bm.size_words for bm in bms) / (len(bms) * n_words)
         return len(bms) >= 2 and density >= self.dense_threshold
 
@@ -119,15 +123,29 @@ class Executor:
         return EWAH.from_words(out, n_bits)
 
 
-def execute(index: BitmapIndex, e: Union[Expr, PlanNode],
+def execute(index, e: Union[Expr, PlanNode],
             backend: Backend = "auto", optimize: bool = True,
             cache: Optional[Dict] = None) -> EWAH:
-    """Plan (unless given a plan) and evaluate one expression -> EWAH."""
+    """Plan (unless given a plan) and evaluate one expression -> EWAH.
+
+    Accepts a monolithic ``BitmapIndex`` or a ``ShardedIndex``; the sharded
+    path plans and executes per shard, then concatenates the EWAH results.
+    """
+    from .shard import ShardedIndex  # local: shard imports this module
+    if isinstance(index, ShardedIndex):
+        # a caller-supplied cache still shares operands across calls: each
+        # shard gets a persistent sub-dict inside it
+        caches = None
+        if cache is not None:
+            caches = [cache.setdefault(("shard", i), {})
+                      for i in range(index.n_shards)]
+        return index.execute(e, backend=backend, optimize=optimize,
+                             caches=caches)
     node = plan(index, e, optimize=optimize) if isinstance(e, Expr) else e
     return Executor(index, backend=backend, cache=cache).run(node)
 
 
-def execute_rows(index: BitmapIndex, e: Union[Expr, PlanNode],
+def execute_rows(index, e: Union[Expr, PlanNode],
                  backend: Backend = "auto", optimize: bool = True) -> np.ndarray:
     """Evaluate and return matching row ids (sorted)."""
     return execute(index, e, backend=backend, optimize=optimize).set_bits()
@@ -146,14 +164,20 @@ class QueryBatch:
     def __init__(self, exprs: Sequence[Expr]):
         self.exprs = list(exprs)
 
-    def execute(self, index: BitmapIndex, backend: Backend = "auto",
+    def execute(self, index, backend: Backend = "auto",
                 optimize: bool = True) -> List[EWAH]:
+        from .shard import ShardedIndex
+        if isinstance(index, ShardedIndex):
+            # one operand cache per shard, shared across the whole batch
+            caches: List[Dict] = [{} for _ in index.shards]
+            return [index.execute(e, backend=backend, optimize=optimize,
+                                  caches=caches) for e in self.exprs]
         plans = [plan(index, e, optimize=optimize) for e in self.exprs]
         cache: Dict = {}
         ex = Executor(index, backend=backend, cache=cache)
         return [ex.run(p) for p in plans]
 
-    def execute_rows(self, index: BitmapIndex, backend: Backend = "auto",
+    def execute_rows(self, index, backend: Backend = "auto",
                      optimize: bool = True) -> List[np.ndarray]:
         return [bm.set_bits()
                 for bm in self.execute(index, backend=backend,

@@ -60,6 +60,11 @@ class Expr:
         _collect_columns(self, out)
         return tuple(out)
 
+    def cache_key(self) -> tuple:
+        """Hashable structural key for result/plan caches (see
+        ``canonical_key``); commutatively equal expressions share a key."""
+        return canonical_key(self)
+
 
 def _operands(e: Expr, cls) -> Tuple[Expr, ...]:
     return e.operands if isinstance(e, cls) else (e,)
@@ -150,6 +155,32 @@ class Const(Expr):
 
     def __repr__(self):
         return "ALL" if self.value else "NONE"
+
+
+def canonical_key(e: Expr) -> tuple:
+    """Nested-tuple structural key of an expression, usable as a dict key.
+
+    Expression nodes are frozen dataclasses, so ``hash(e)``/``e == f`` are
+    already structural; the canonical key goes one step further for caching:
+    ``And``/``Or`` operands commute for results, so their child keys are
+    sorted — ``a & b`` and ``b & a`` land on the same cache entry.  (Sorting
+    is by ``repr`` of the child key, since column keys mix ints and strs.)
+    """
+    if isinstance(e, Eq):
+        return ("eq", e.col, e.value)
+    if isinstance(e, In):
+        return ("in", e.col) + e.values
+    if isinstance(e, Range):
+        return ("range", e.col, e.lo, e.hi)
+    if isinstance(e, Const):
+        return ("const", e.value)
+    if isinstance(e, Not):
+        return ("not", canonical_key(e.operand))
+    if isinstance(e, (And, Or)):
+        tag = "and" if isinstance(e, And) else "or"
+        return (tag,) + tuple(sorted((canonical_key(c) for c in e.operands),
+                                     key=repr))
+    raise TypeError(f"not a query expression: {e!r}")
 
 
 class Col:

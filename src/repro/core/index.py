@@ -7,6 +7,13 @@ constant time per run, as in the word-aligned appender of Algorithm 3).
 
 The index is horizontally partitioned (the paper writes 256 MB blocks); each
 partition holds its own compressed bitmaps and queries concatenate results.
+
+Construction is *streaming*: ``IndexBuilder`` accepts arbitrary row chunks via
+``append`` (e.g. straight from ``sorting.external_sorted_chunks``), buffers at
+most one partition of rows, and compiles each completed partition into its
+EWAH bitmaps.  ``BitmapIndex.build`` is a thin single-shot wrapper over it.
+Partition bounds are validated to be 32-bit-word multiples at build time, so
+``concat_bitmaps`` can always stitch per-partition results exactly.
 """
 from __future__ import annotations
 
@@ -24,22 +31,179 @@ class ColumnIndex:
     encoder: ColumnEncoder
     # bitmaps[partition][bitmap_id] -> EWAH
     bitmaps: List[List[EWAH]] = field(default_factory=list)
+    # memoized bitmap_sizes(); planning reads sizes on every query, and
+    # walking L EWAH objects per plan dominated sharded execution
+    _sizes_cache: Optional[np.ndarray] = field(
+        default=None, repr=False, compare=False)
 
     @property
     def size_words(self) -> int:
-        return sum(bm.size_words for part in self.bitmaps for bm in part)
+        return int(self.bitmap_sizes().sum())
 
     def bitmap_sizes(self) -> np.ndarray:
-        """Per-bitmap compressed words, summed over partitions (Fig. 4)."""
-        out = np.zeros(self.encoder.L, dtype=np.int64)
-        for part in self.bitmaps:
-            for b, bm in enumerate(part):
-                out[b] += bm.size_words
-        return out
+        """Per-bitmap compressed words, summed over partitions (Fig. 4).
+
+        Cached after the first call (the builder invalidates on append);
+        treat the returned array as read-only."""
+        if self._sizes_cache is None:
+            out = np.zeros(self.encoder.L, dtype=np.int64)
+            for part in self.bitmaps:
+                for b, bm in enumerate(part):
+                    out[b] += bm.size_words
+            self._sizes_cache = out
+        return self._sizes_cache
+
+    def invalidate_sizes(self) -> None:
+        self._sizes_cache = None
 
     def bitmap_uncompressed_words(self, n_rows_per_part: Sequence[int]) -> np.ndarray:
         total = sum(-(-r // 32) for r in n_rows_per_part)
         return np.full(self.encoder.L, total, dtype=np.int64)
+
+
+WORD_ROWS = 32  # rows per 32-bit word: the partition-alignment quantum
+
+
+def validate_partition_rows(partition_rows: Optional[int]) -> Optional[int]:
+    """Partition sizes must be 32-bit-word multiples (or None = one partition).
+
+    ``concat_bitmaps`` can only stitch word-aligned interior partitions; a
+    misaligned size used to slip through the builder and fail only at query
+    time, deep inside the concatenation.  Fail at build time instead.
+    """
+    if partition_rows is None:
+        return None
+    p = int(partition_rows)
+    if p <= 0:
+        raise ValueError(f"partition_rows must be positive, got {partition_rows}")
+    if p % WORD_ROWS:
+        lo, hi = p - p % WORD_ROWS, p + WORD_ROWS - p % WORD_ROWS
+        raise ValueError(
+            f"partition_rows={p} is not a multiple of the {WORD_ROWS}-bit "
+            f"word size; interior partitions must be word-aligned for exact "
+            f"EWAH concatenation (use e.g. {lo or hi} or {hi})")
+    return p
+
+
+class IndexBuilder:
+    """Incremental, chunk-at-a-time index construction.
+
+    ``append(chunk)`` buffers rows and compiles every completed partition
+    (``partition_rows`` rows, word-aligned) into its EWAH bitmaps — with
+    ``partition_rows`` set, memory stays O(partition_rows + compressed
+    index) regardless of table size.  With ``partition_rows=None`` the
+    whole table is one partition, so the builder must buffer every row
+    until ``finish()``; pass ``partition_rows`` (the paper's 256 MB blocks)
+    whenever the table may not fit in memory.  ``finish()`` flushes the
+    ragged tail partition and returns the ``BitmapIndex``.  Feeding
+    globally sorted chunks (see ``sorting.external_sorted_chunks``)
+    therefore yields *full-sort* compression for tables that never fit in
+    memory at once.
+
+    Cardinalities must be known up front (they size the k-of-N encoders);
+    chunk values are validated against them as they arrive.
+    """
+
+    def __init__(self, cards: Sequence[int], k: int = 1,
+                 allocation: str = "alpha",
+                 partition_rows: Optional[int] = None,
+                 apply_heuristic: bool = True,
+                 column_names: Optional[Sequence[str]] = None):
+        self.cards = [int(c) for c in cards]
+        d = len(self.cards)
+        names = list(column_names) if column_names is not None else None
+        if names is not None and len(names) != d:
+            raise ValueError(
+                f"column_names has {len(names)} entries for {d} columns")
+        self.column_names = names
+        self.partition_rows = validate_partition_rows(partition_rows)
+        self.columns: List[ColumnIndex] = []
+        for card in self.cards:
+            kc = choose_k(card, k) if apply_heuristic else k
+            self.columns.append(
+                ColumnIndex(encoder=ColumnEncoder(card, kc, allocation)))
+        self._buf: List[np.ndarray] = []
+        self._buffered = 0
+        self._bounds: List[int] = [0]
+        self._n_rows = 0
+        self._finished = False
+
+    def append(self, chunk: np.ndarray) -> "IndexBuilder":
+        """Add a chunk of rows (any length, including ragged); returns self."""
+        if self._finished:
+            raise RuntimeError("IndexBuilder.finish() was already called")
+        chunk = np.asarray(chunk)
+        if chunk.ndim != 2 or chunk.shape[1] != len(self.cards):
+            raise ValueError(
+                f"chunk shape {chunk.shape} does not match {len(self.cards)} "
+                f"columns")
+        if len(chunk) == 0:
+            return self
+        for c, card in enumerate(self.cards):
+            hi = int(chunk[:, c].max())
+            lo = int(chunk[:, c].min())
+            if lo < 0 or hi >= card:
+                raise ValueError(
+                    f"column {c} has value rank outside [0, {card}): "
+                    f"min={lo}, max={hi}")
+        self._buf.append(chunk)
+        self._buffered += len(chunk)
+        self._n_rows += len(chunk)
+        if self.partition_rows is not None:
+            while self._buffered >= self.partition_rows:
+                self._close_partition(self._take(self.partition_rows))
+        return self
+
+    def finish(self) -> BitmapIndex:
+        """Flush the tail partition and return the finished index."""
+        if self._finished:
+            raise RuntimeError("IndexBuilder.finish() was already called")
+        if self._buffered:
+            self._close_partition(self._take(self._buffered))
+        self._finished = True
+        return BitmapIndex(
+            n_rows=self._n_rows, columns=self.columns,
+            partition_bounds=np.asarray(self._bounds, dtype=np.int64),
+            column_names=self.column_names)
+
+    # -- internals ---------------------------------------------------------
+    def _take(self, n: int) -> np.ndarray:
+        """Pop exactly n buffered rows (concatenating across append chunks)."""
+        out, got = [], 0
+        while got < n:
+            head = self._buf[0]
+            need = n - got
+            if len(head) <= need:
+                out.append(head)
+                got += len(head)
+                self._buf.pop(0)
+            else:
+                out.append(head[:need])
+                self._buf[0] = head[need:]
+                got += need
+        self._buffered -= n
+        return out[0] if len(out) == 1 else np.concatenate(out)
+
+    def _close_partition(self, part: np.ndarray) -> None:
+        """Compile one partition of rows into per-column EWAH bitmaps
+        (Algorithm 3: scatter (row, bitmap) pairs, group, append runs)."""
+        rows_part = len(part)
+        for c, col in enumerate(self.columns):
+            enc = col.encoder
+            codes = enc.codes(part[:, c])  # (rows_part, k)
+            rows = np.repeat(np.arange(rows_part, dtype=np.int64), enc.k)
+            flat = codes.reshape(-1).astype(np.int64)
+            order = np.lexsort((rows, flat))
+            flat_s, rows_s = flat[order], rows[order]
+            # group boundaries per bitmap id
+            bms: List[EWAH] = []
+            idx = np.searchsorted(flat_s, np.arange(enc.L + 1))
+            for b in range(enc.L):
+                pos = rows_s[idx[b]: idx[b + 1]]
+                bms.append(EWAH.from_positions(pos, rows_part))
+            col.bitmaps.append(bms)
+            col.invalidate_sizes()
+        self._bounds.append(self._bounds[-1] + rows_part)
 
 
 @dataclass
@@ -60,43 +224,19 @@ class BitmapIndex:
         apply_heuristic: bool = True,
         column_names: Optional[Sequence[str]] = None,
     ) -> "BitmapIndex":
-        """Build the index.  ``k`` is the requested encoding (paper's k-of-N);
-        the per-column heuristic of §2.2 caps it by cardinality."""
+        """Build the index in one shot (thin wrapper over ``IndexBuilder``).
+
+        ``k`` is the requested encoding (paper's k-of-N); the per-column
+        heuristic of §2.2 caps it by cardinality."""
         table = np.asarray(table)
         n, d = table.shape
-        names = list(column_names) if column_names is not None else None
-        if names is not None and len(names) != d:
-            raise ValueError(
-                f"column_names has {len(names)} entries for {d} columns")
         if cards is None:
             cards = [int(table[:, c].max()) + 1 if n else 1 for c in range(d)]
-        part = partition_rows or n or 1
-        bounds = np.arange(0, n, part, dtype=np.int64)
-        bounds = np.concatenate([bounds, [n]])
-
-        columns = []
-        for c in range(d):
-            kc = choose_k(cards[c], k) if apply_heuristic else k
-            enc = ColumnEncoder(cards[c], kc, allocation)
-            col = ColumnIndex(encoder=enc)
-            codes_all = enc.codes(table[:, c])  # (n, k)
-            for s, e in zip(bounds[:-1], bounds[1:]):
-                rows_part = e - s
-                codes = codes_all[s:e]
-                rows = np.repeat(np.arange(rows_part, dtype=np.int64), enc.k)
-                flat = codes.reshape(-1).astype(np.int64)
-                order = np.lexsort((rows, flat))
-                flat_s, rows_s = flat[order], rows[order]
-                # group boundaries per bitmap id
-                bms: List[EWAH] = []
-                idx = np.searchsorted(flat_s, np.arange(enc.L + 1))
-                for b in range(enc.L):
-                    pos = rows_s[idx[b]: idx[b + 1]]
-                    bms.append(EWAH.from_positions(pos, rows_part))
-                col.bitmaps.append(bms)
-            columns.append(col)
-        return cls(n_rows=n, columns=columns, partition_bounds=bounds,
-                   column_names=names)
+        builder = IndexBuilder(cards, k=k, allocation=allocation,
+                               partition_rows=partition_rows,
+                               apply_heuristic=apply_heuristic,
+                               column_names=column_names)
+        return builder.append(table).finish()
 
     # -- stats -------------------------------------------------------------
     @property

@@ -7,65 +7,28 @@ operator overloading, planned by ``repro.core.planner`` and evaluated by
     from repro.core import col, query
     hits = query.execute(index, (col(0) == 3) & ~col(1).isin([1, 2]))
 
-The original free functions (``equality`` / ``conjunction`` / ``disjunction``
-/ ``in_set``) remain as deprecated shims over the expression API; they now
-evaluate through the planner, which makes ``conjunction`` deterministic under
-predicate-dict ordering (operands are ordered by estimated compressed size,
-ties by column) and deduplicates value ranks in ``in_set``.
+The pre-expression free functions (``equality`` / ``conjunction`` /
+``disjunction`` / ``in_set``) were deprecated in favor of the expression API
+and have been removed now that no caller remains.
 
 ``naive_eval`` is the row-scan oracle for arbitrary expressions; the older
 ``naive_*`` helpers stay for the seed tests.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Dict, Optional, Sequence
 
 import numpy as np
 
-from .ewah import EWAH
 from .expr import And, Const, Eq, Expr, In, Not, Or, Range, col
 from .executor import QueryBatch, execute, execute_rows
-from .index import BitmapIndex
 from .planner import explain, plan
 
 __all__ = [
     "col", "execute", "execute_rows", "plan", "explain", "QueryBatch",
-    "equality", "conjunction", "disjunction", "in_set",
-    "naive_eval", "naive_equality", "naive_conjunction", "naive_disjunction",
+    "naive_eval", "naive_eval_rows",
+    "naive_equality", "naive_conjunction", "naive_disjunction",
 ]
-
-
-def _deprecated(old: str, new: str):
-    warnings.warn(f"repro.core.query.{old} is deprecated; build an "
-                  f"expression with {new} and call query.execute",
-                  DeprecationWarning, stacklevel=3)
-
-
-# -- deprecated free-function shims ----------------------------------------
-
-def equality(index: BitmapIndex, c: int, value_rank: int) -> EWAH:
-    _deprecated("equality", "col(c) == v")
-    return execute(index, Eq(c, value_rank))
-
-
-def conjunction(index: BitmapIndex, predicates: Dict[int, int]) -> EWAH:
-    """AND of column == value predicates (deterministic across dict orders)."""
-    _deprecated("conjunction", "(col(a) == x) & (col(b) == y)")
-    ops = tuple(Eq(c, v) for c, v in sorted(predicates.items()))
-    return execute(index, And(ops))
-
-
-def disjunction(index: BitmapIndex, predicates: Dict[int, int]) -> EWAH:
-    _deprecated("disjunction", "(col(a) == x) | (col(b) == y)")
-    ops = tuple(Eq(c, v) for c, v in sorted(predicates.items()))
-    return execute(index, Or(ops))
-
-
-def in_set(index: BitmapIndex, c: int, value_ranks: Sequence[int]) -> EWAH:
-    """column IN (v1, v2, ...); duplicate ranks are collapsed."""
-    _deprecated("in_set", "col(c).isin(values)")
-    return execute(index, In(c, tuple(value_ranks)))
 
 
 # -- oracles ---------------------------------------------------------------

@@ -1,0 +1,167 @@
+"""Horizontally sharded bitmap index: per-shard planning and execution.
+
+A ``ShardedIndex`` holds a row-range of the fact table per shard, each as an
+ordinary ``BitmapIndex`` with its own partitions and compressed-size stats.
+Shards share one set of k-of-N encoders (global cardinalities), so bitmap ids
+mean the same thing everywhere; queries are planned *per shard* by the
+existing planner — operand ordering adapts to each shard's own compressed
+sizes — executed by the existing executor, and the per-shard EWAH results are
+concatenated exactly (interior shards are validated word-aligned, the same
+invariant the paper's 256 MB blocks rely on, one level up).
+
+This is the coarse-grained unit for scale-out: shards can live on different
+workers, be built independently by streaming ``IndexBuilder``s, and be
+appended/retired without touching their siblings.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from .ewah import EWAH
+from .expr import Expr
+from .index import (BitmapIndex, IndexBuilder, WORD_ROWS, concat_bitmaps,
+                    validate_partition_rows)
+
+
+class ShardedIndex:
+    """A list of row-contiguous ``BitmapIndex`` shards with offset bookkeeping."""
+
+    def __init__(self, shards: Sequence[BitmapIndex],
+                 column_names: Optional[Sequence[str]] = None):
+        shards = list(shards)
+        if not shards:
+            raise ValueError("ShardedIndex needs at least one shard")
+        ref = shards[0]
+        for i, sh in enumerate(shards):
+            if len(sh.columns) != len(ref.columns):
+                raise ValueError(
+                    f"shard {i} has {len(sh.columns)} columns, expected "
+                    f"{len(ref.columns)}")
+            for c, (a, b) in enumerate(zip(sh.columns, ref.columns)):
+                ea, eb = a.encoder, b.encoder
+                if (ea.card, ea.k, ea.L) != (eb.card, eb.k, eb.L):
+                    raise ValueError(
+                        f"shard {i} column {c} encoder {ea!r} differs from "
+                        f"shard 0's {eb!r}; shards must share global "
+                        f"cardinalities")
+            if i + 1 < len(shards) and sh.n_rows % WORD_ROWS:
+                raise ValueError(
+                    f"interior shard {i} has {sh.n_rows} rows, not a "
+                    f"multiple of {WORD_ROWS}; results could not be "
+                    f"concatenated exactly")
+        self.shards = shards
+        self.offsets = np.concatenate(
+            [[0], np.cumsum([sh.n_rows for sh in shards])]).astype(np.int64)
+        names = list(column_names) if column_names is not None \
+            else ref.column_names
+        self.column_names = names
+
+    @classmethod
+    def build(
+        cls,
+        table: np.ndarray,
+        shard_rows: int,
+        k: int = 1,
+        allocation: str = "alpha",
+        cards: Optional[Sequence[int]] = None,
+        partition_rows: Optional[int] = None,
+        apply_heuristic: bool = True,
+        column_names: Optional[Sequence[str]] = None,
+    ) -> "ShardedIndex":
+        """Cut ``table`` into row shards of ``shard_rows`` and index each.
+
+        Cardinalities are computed globally (unless given) so every shard
+        uses identical encoders — a value absent from one shard still owns
+        its bitmap there, keeping per-shard plans and results composable.
+        """
+        table = np.asarray(table)
+        n, d = table.shape
+        shard_rows = validate_partition_rows(int(shard_rows))
+        validate_partition_rows(partition_rows)
+        if cards is None:
+            cards = [int(table[:, c].max()) + 1 if n else 1 for c in range(d)]
+        shards = []
+        for s in range(0, n, shard_rows) or [0]:
+            builder = IndexBuilder(cards, k=k, allocation=allocation,
+                                   partition_rows=partition_rows,
+                                   apply_heuristic=apply_heuristic,
+                                   column_names=column_names)
+            shards.append(builder.append(table[s:s + shard_rows]).finish())
+        return cls(shards, column_names=column_names)
+
+    # -- stats (mirrors BitmapIndex) ---------------------------------------
+    @property
+    def n_rows(self) -> int:
+        return int(self.offsets[-1])
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def n_columns(self) -> int:
+        return len(self.shards[0].columns)
+
+    @property
+    def size_words(self) -> int:
+        return sum(sh.size_words for sh in self.shards)
+
+    @property
+    def n_bitmaps(self) -> int:
+        return self.shards[0].n_bitmaps
+
+    @property
+    def n_partitions(self) -> int:
+        return sum(sh.n_partitions for sh in self.shards)
+
+    def card(self, col: int) -> int:
+        return self.shards[0].card(col)
+
+    def resolve_column(self, key) -> int:
+        if self.column_names is not None and isinstance(key, str):
+            try:
+                return self.column_names.index(key)
+            except ValueError:
+                raise KeyError(f"unknown column {key!r}") from None
+        return self.shards[0].resolve_column(key)
+
+    def shard_of_row(self, row: int) -> int:
+        """Which shard owns global row id ``row``."""
+        if not (0 <= row < self.n_rows):
+            raise IndexError(f"row {row} out of range [0, {self.n_rows})")
+        return int(np.searchsorted(self.offsets, row, side="right")) - 1
+
+    # -- queries -----------------------------------------------------------
+    def bitmap(self, col: int, bitmap_id: int) -> EWAH:
+        """One physical bitmap concatenated over all shards (and partitions)."""
+        return concat_bitmaps([sh.bitmap(col, bitmap_id)
+                               for sh in self.shards if sh.n_rows])
+
+    def equality_bitmap(self, col: int, value_rank: int) -> EWAH:
+        return concat_bitmaps([sh.equality_bitmap(col, value_rank)
+                               for sh in self.shards])
+
+    def equality_rows(self, col: int, value_rank: int) -> np.ndarray:
+        return self.equality_bitmap(col, value_rank).set_bits()
+
+    def execute(self, e, backend: str = "auto", optimize: bool = True,
+                caches: Optional[List[Dict]] = None) -> EWAH:
+        """Plan per shard, execute per shard, concatenate the EWAH results.
+
+        ``caches`` (one operand dict per shard) lets a batch share loaded
+        bitmaps across queries, exactly like ``Executor``'s cache does for a
+        monolithic index.
+        """
+        from .executor import Executor  # local: executor also dispatches here
+        from .planner import plan
+        parts = []
+        for i, sh in enumerate(self.shards):
+            node = plan(sh, e, optimize=optimize) if isinstance(e, Expr) else e
+            cache = caches[i] if caches is not None else None
+            parts.append(Executor(sh, backend=backend, cache=cache).run(node))
+        return concat_bitmaps(parts)
+
+
+AnyIndex = Union[BitmapIndex, ShardedIndex]

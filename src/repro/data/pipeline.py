@@ -8,6 +8,12 @@ lexicographically sorted with cardinality-aware column ordering (paper §4.3)
 before indexing — `index_stats()` reports the sorted-vs-shuffled compression
 delta, reproducing the paper's effect inside the training stack.
 
+Sorting and indexing both stream: the sort is an external merge
+(chunk-sorted runs + k-way merge, identical permutation to the in-memory
+``lex_sort``) and the index is built by appending ``chunk_rows``-row chunks
+to an ``IndexBuilder``, so corpus metadata larger than memory still gets
+*full-sort* compression rather than the paper's degraded block-sort numbers.
+
 The pipeline is *seekable*: batch(step) is a pure function of (selected ids,
 seed, step), which fault tolerance relies on for exact replay after restart.
 """
@@ -18,8 +24,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import (BitmapIndex, execute, lex_sort,
-                        order_columns_freq_aware, random_shuffle)
+from repro.core import (BitmapIndex, IndexBuilder, execute,
+                        external_merge_sort_perm, order_columns_freq_aware,
+                        random_shuffle)
 from repro.core.expr import And, Eq, Expr, Not, Or
 
 COLUMNS = ("source", "lang", "length_bucket", "quality", "dedup_cluster")
@@ -45,19 +52,29 @@ class Corpus:
 
 class BitmapDataPipeline:
     def __init__(self, corpus: Corpus, sort: bool = True, k: int = 1,
-                 seed: int = 0):
+                 seed: int = 0, chunk_rows: int = 4096):
         self.corpus = corpus
         self.seed = seed
+        self.chunk_rows = int(chunk_rows)
         rng = np.random.default_rng(seed)
         if sort:
             order = order_columns_freq_aware(corpus.fact_table, corpus.cards)
-            self.row_perm = lex_sort(corpus.fact_table, order)
+            # external merge: only chunk_rows rows sorted at once, same
+            # permutation (and hence same index) as a full in-memory lex sort
+            self.row_perm = external_merge_sort_perm(
+                corpus.fact_table, self.chunk_rows, order)
             self.col_order = order
         else:
             self.row_perm = random_shuffle(corpus.fact_table, rng)
             self.col_order = list(range(corpus.fact_table.shape[1]))
         self.table = corpus.fact_table[self.row_perm]
-        self.index = BitmapIndex.build(self.table, k=k, cards=corpus.cards)
+        # word-aligned partitions bound the builder's buffering to one
+        # chunk; corpora up to chunk_rows docs still get one partition
+        part = self.chunk_rows - self.chunk_rows % 32 or 32
+        builder = IndexBuilder(corpus.cards, k=k, partition_rows=part)
+        for s in range(0, len(self.table), self.chunk_rows):
+            builder.append(self.table[s:s + self.chunk_rows])
+        self.index = builder.finish()
         self.selected: np.ndarray = np.arange(len(self.table))
 
     # -- selection ----------------------------------------------------------

@@ -1,16 +1,22 @@
-"""Minimal query-serving endpoint over a bitmap index.
+"""Query-serving endpoint over a (possibly sharded) bitmap index.
 
-Two layers, both dependency-free (stdlib ``http.server`` + the core query
-stack):
+Production-shaped serving on a dependency-free stack (stdlib ``http.server``
++ the core query stack):
 
-* ``QueryService`` — programmatic facade: parse a JSON expression, plan it,
-  execute (EWAH / Pallas / auto), return rows + stats.  Batched queries go
-  through ``QueryBatch`` so shared operands load once.
+* ``QueryService`` — programmatic facade: parse a JSON expression, execute it
+  on a bounded ``ThreadPoolExecutor`` worker pool, return rows + stats.
+  Results are memoized in an LRU cache keyed by the *structural* canonical
+  key of the expression (``repro.core.expr.canonical_key``), so a repeated —
+  or commutatively reordered — query is served from cache without touching
+  a bitmap.  Swapping in a rebuilt index (``set_index``) invalidates the
+  cache atomically via a generation counter.  The index may be a monolithic
+  ``BitmapIndex`` or a ``ShardedIndex``; execution dispatches per shard.
 * ``serve()`` — a threaded HTTP server exposing the service:
-    POST /query   {"query": <expr>}          -> one result
-    POST /query   {"queries": [<expr>, ...]} -> batched results
-    GET  /healthz                            -> liveness
-    GET  /stats                              -> index size/shape stats
+    POST /query             {"query": <expr>}          -> one result
+    POST /query             {"queries": [<expr>, ...]} -> batched results
+    POST /admin/invalidate                             -> drop the result cache
+    GET  /healthz                                      -> liveness
+    GET  /stats                                        -> index + cache stats
 
 Wire format for expressions (mirrors the AST):
     {"op": "eq", "col": 0, "value": 3}
@@ -20,21 +26,23 @@ Wire format for expressions (mirrors the AST):
     {"op": "not", "arg": <expr>}
 
 Run standalone against a synthetic sorted table:
-    PYTHONPATH=src python -m repro.serve.query_api --port 8321
+    PYTHONPATH=src python -m repro.serve.query_api --port 8321 --shards 4
 """
 from __future__ import annotations
 
 import argparse
 import json
 import threading
+from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core import BitmapIndex, lex_sort, synth
-from repro.core.expr import And, Eq, Expr, In, Not, Or, Range
-from repro.core.executor import Executor, QueryBatch
+from repro.core import BitmapIndex, ShardedIndex, lex_sort, synth
+from repro.core.expr import And, Eq, Expr, In, Not, Or, Range, canonical_key
+from repro.core.executor import execute
 from repro.core.planner import explain, plan
 
 
@@ -85,48 +93,169 @@ def expr_to_json(e: Expr) -> Dict:
     raise TypeError(f"cannot serialize {e!r}")
 
 
-class QueryService:
-    """Plan + execute queries against one index; thread-safe for reads."""
+class _LRUCache:
+    """Thread-safe LRU with hit/miss counters (stdlib-only)."""
 
-    def __init__(self, index: BitmapIndex, backend: str = "auto",
-                 max_rows: int = 10_000):
+    _MISS = object()
+
+    def __init__(self, capacity: int):
+        self.capacity = max(int(capacity), 0)
+        self._od: "OrderedDict" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        with self._lock:
+            val = self._od.get(key, self._MISS)
+            if val is self._MISS:
+                self.misses += 1
+                return None
+            self._od.move_to_end(key)
+            self.hits += 1
+            return val
+
+    def put(self, key, val):
+        if self.capacity == 0:
+            return
+        with self._lock:
+            self._od[key] = val
+            self._od.move_to_end(key)
+            while len(self._od) > self.capacity:
+                self._od.popitem(last=False)
+
+    def clear(self):
+        with self._lock:
+            self._od.clear()
+
+    def stats(self) -> Dict:
+        with self._lock:
+            return {"entries": len(self._od), "capacity": self.capacity,
+                    "hits": self.hits, "misses": self.misses}
+
+
+class QueryService:
+    """Pooled, caching query service over one (re-buildable) index.
+
+    Every query executes on a bounded worker pool; results are cached by the
+    canonical structural key of the expression (plus backend and an index
+    *generation* counter, so a rebuilt index can never serve stale rows).
+    """
+
+    def __init__(self, index, backend: str = "auto",
+                 max_rows: int = 10_000, pool_workers: int = 4,
+                 cache_entries: int = 256):
         self.index = index
         self.backend = backend
         self.max_rows = max_rows  # cap rows per response, count is exact
+        self.cache = _LRUCache(cache_entries)
+        self._generation = 0
+        self._pool = ThreadPoolExecutor(max_workers=max(int(pool_workers), 1),
+                                        thread_name_prefix="query")
+        self.pool_workers = max(int(pool_workers), 1)
 
-    def _result(self, bm) -> Dict:
+    # -- lifecycle ---------------------------------------------------------
+    def set_index(self, index) -> None:
+        """Swap in a rebuilt index; the result cache is invalidated (the
+        generation counter in every cache key retires old entries even if a
+        racing query repopulates between the swap and the clear).
+
+        Write order matters: the index is assigned *before* the generation
+        bumps, and ``_snapshot`` reads the generation *before* the index, so
+        no reader can ever pair the new generation with the old index — the
+        combination that would let a stale result be cached under a live
+        key.  The worst interleavings only produce orphan entries under a
+        retired generation, which no future key matches."""
+        self.index = index
+        self._generation += 1
+        self.cache.clear()
+
+    def invalidate_cache(self) -> None:
+        self.cache.clear()
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=False)
+
+    # -- execution ---------------------------------------------------------
+    def _snapshot(self):
+        """(generation, index) pair that is safe to execute and cache under
+        (generation read first; see ``set_index`` for the ordering proof)."""
+        gen = self._generation
+        return gen, self.index
+
+    def _execute_cached(self, e: Expr, op_cache: Optional[Dict],
+                        snapshot=None):
+        gen, idx = snapshot if snapshot is not None else self._snapshot()
+        key = (gen, self.backend, canonical_key(e))
+        bm = self.cache.get(key)
+        if bm is not None:
+            return bm, True
+        bm = execute(idx, e, backend=self.backend, cache=op_cache)
+        self.cache.put(key, bm)
+        return bm, False
+
+    def _result(self, bm, cached: bool) -> Dict:
         rows = bm.set_bits()  # pad bits already masked, so len == popcount
         return {
             "count": len(rows),
             "rows": rows[: self.max_rows].tolist(),
             "truncated": bool(len(rows) > self.max_rows),
             "result_words": bm.size_words,
+            "cached": cached,
         }
+
+    def _query_one(self, e: Expr, explain_plan: bool = False,
+                   op_cache: Optional[Dict] = None, snapshot=None) -> Dict:
+        bm, cached = self._execute_cached(e, op_cache, snapshot)
+        out = self._result(bm, cached)
+        if explain_plan:
+            out["plan"] = self.explain(e)
+        return out
+
+    def explain(self, e: Expr) -> str:
+        idx = self.index
+        if isinstance(idx, ShardedIndex):
+            head = f"per-shard plans x{idx.n_shards}; shard 0:\n"
+            return head + explain(plan(idx.shards[0], e))
+        return explain(plan(idx, e))
 
     def query(self, expr, explain_plan: bool = False) -> Dict:
         e = parse_expr(expr) if isinstance(expr, dict) else expr
-        p = plan(self.index, e)
-        out = self._result(Executor(self.index, backend=self.backend).run(p))
-        if explain_plan:
-            out["plan"] = explain(p)
-        return out
+        return self._pool.submit(self._query_one, e, explain_plan).result()
 
     def query_batch(self, exprs: Sequence) -> List[Dict]:
         es = [parse_expr(e) if isinstance(e, dict) else e for e in exprs]
-        bms = QueryBatch(es).execute(self.index, backend=self.backend)
-        return [self._result(bm) for bm in bms]
+        # the whole batch executes against one (generation, index) snapshot,
+        # so a mid-batch set_index can't mix bitmaps of two indexes through
+        # the shared operand cache; uncached queries share loaded operands
+        # via the Executor's dict (benign races — worst case a bitmap loads
+        # twice), with per-shard sub-caches on the sharded path
+        snapshot = self._snapshot()
+        op_cache: Dict = {}
+        futs = [self._pool.submit(self._query_one, e, False, op_cache,
+                                  snapshot)
+                for e in es]
+        return [f.result() for f in futs]
 
     def stats(self) -> Dict:
         idx = self.index
-        return {
+        n_cols = (idx.n_columns if isinstance(idx, ShardedIndex)
+                  else len(idx.columns))
+        out = {
             "n_rows": idx.n_rows,
-            "n_columns": len(idx.columns),
+            "n_columns": n_cols,
             "n_bitmaps": idx.n_bitmaps,
             "n_partitions": idx.n_partitions,
             "size_words": idx.size_words,
             "column_names": idx.column_names,
-            "cards": [idx.card(c) for c in range(len(idx.columns))],
+            "cards": [idx.card(c) for c in range(n_cols)],
+            "pool_workers": self.pool_workers,
+            "cache": self.cache.stats(),
         }
+        if isinstance(idx, ShardedIndex):
+            out["n_shards"] = idx.n_shards
+            out["shard_rows"] = np.diff(idx.offsets).tolist()
+        return out
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -149,6 +278,10 @@ class _Handler(BaseHTTPRequestHandler):
             self._send(404, {"error": f"unknown path {self.path}"})
 
     def do_POST(self):
+        if self.path == "/admin/invalidate":
+            self.service.invalidate_cache()
+            self._send(200, {"ok": True})
+            return
         if self.path != "/query":
             self._send(404, {"error": f"unknown path {self.path}"})
             return
@@ -187,14 +320,18 @@ def serve_in_thread(service: QueryService, host: str = "127.0.0.1",
     return srv, srv.server_address[1]
 
 
-def _demo_index(n_rows: int, rng: Optional[np.random.Generator] = None
-                ) -> BitmapIndex:
+def _demo_index(n_rows: int, shards: int = 0,
+                rng: Optional[np.random.Generator] = None):
     rng = rng or np.random.default_rng(0)
     table = synth.census_like_table(n_rows, rng)
     ranked, _ = synth.factorize(table)
     ranked = ranked[lex_sort(ranked)]
-    return BitmapIndex.build(ranked, k=2,
-                             column_names=["region", "day", "user"])
+    names = ["region", "day", "user"]
+    if shards > 1:
+        shard_rows = max(-(-n_rows // shards) // 32 * 32, 32)
+        return ShardedIndex.build(ranked, shard_rows=shard_rows, k=2,
+                                  column_names=names)
+    return BitmapIndex.build(ranked, k=2, column_names=names)
 
 
 def main(argv=None):
@@ -204,12 +341,21 @@ def main(argv=None):
     ap.add_argument("--rows", type=int, default=50_000)
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "ewah", "kernel"])
+    ap.add_argument("--shards", type=int, default=0,
+                    help="split the demo index into this many row shards")
+    ap.add_argument("--workers", type=int, default=4,
+                    help="query worker pool size")
+    ap.add_argument("--cache", type=int, default=256,
+                    help="LRU result-cache entries (0 disables)")
     args = ap.parse_args(argv)
-    service = QueryService(_demo_index(args.rows), backend=args.backend)
+    service = QueryService(_demo_index(args.rows, args.shards),
+                           backend=args.backend, pool_workers=args.workers,
+                           cache_entries=args.cache)
     srv = make_server(service, args.host, args.port)
     print(f"[query_api] serving {args.rows} rows on "
           f"http://{args.host}:{srv.server_address[1]} "
-          f"(backend={args.backend})", flush=True)
+          f"(backend={args.backend}, shards={args.shards or 1}, "
+          f"workers={args.workers}, cache={args.cache})", flush=True)
     srv.serve_forever()
 
 

@@ -249,30 +249,38 @@ def test_column_names_resolve(tables):
         plan(BitmapIndex.build(table, k=1), col("dim0") == 1)
 
 
-# -- deprecated shims -------------------------------------------------------
+# -- structural invariances -------------------------------------------------
 
-def test_conjunction_deterministic_under_dict_order(tables):
+def test_conjunction_deterministic_under_operand_order(tables):
     table = tables["sorted"]
     idx = BitmapIndex.build(table, k=2)
     v0, v2 = int(table[7, 0]), int(table[7, 2])
-    with pytest.warns(DeprecationWarning):
-        a = q.conjunction(idx, {0: v0, 2: v2})
-        b = q.conjunction(idx, {2: v2, 0: v0})
+    a = execute(idx, (col(0) == v0) & (col(2) == v2))
+    b = execute(idx, (col(2) == v2) & (col(0) == v0))
     assert a == b
     assert np.array_equal(a.set_bits(),
                           q.naive_conjunction(table, {0: v0, 2: v2}))
+    # commutatively reordered ANDs share one canonical cache key
+    from repro.core import canonical_key
+    assert canonical_key((col(0) == v0) & (col(2) == v2)) == \
+        canonical_key((col(2) == v2) & (col(0) == v0))
 
 
-def test_in_set_deduplicates(tables):
+def test_in_deduplicates(tables):
     table = tables["sorted"]
     idx = BitmapIndex.build(table, k=1)
     vals = [int(table[0, 1]), int(table[5, 1])]
-    with pytest.warns(DeprecationWarning):
-        a = q.in_set(idx, 1, vals * 7)
-        b = q.in_set(idx, 1, vals)
+    a = execute(idx, col(1).isin(vals * 7))
+    b = execute(idx, col(1).isin(vals))
     assert a == b
+    assert canonical_key_of_in(vals) == canonical_key_of_in(vals * 7)
     want = np.flatnonzero(np.isin(table[:, 1], vals))
     assert np.array_equal(a.set_bits(), want)
+
+
+def canonical_key_of_in(vals):
+    from repro.core import canonical_key
+    return canonical_key(col(1).isin(vals))
 
 
 # -- batched execution ------------------------------------------------------

@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import BitmapIndex, lex_sort
+from repro.core import BitmapIndex, col, execute, lex_sort
 from repro.core import query as q
 from repro.core import synth
 
@@ -31,12 +31,14 @@ def test_equality_vs_oracle(table, k):
 def test_conj_disj_inset(table, k):
     idx = BitmapIndex.build(table, k=k)
     preds = {0: int(table[7, 0]), 2: int(table[7, 2])}
-    assert np.array_equal(q.conjunction(idx, preds).set_bits(),
+    e_and = (col(0) == preds[0]) & (col(2) == preds[2])
+    assert np.array_equal(execute(idx, e_and).set_bits(),
                           q.naive_conjunction(table, preds))
-    assert np.array_equal(q.disjunction(idx, preds).set_bits(),
+    e_or = (col(0) == preds[0]) | (col(2) == preds[2])
+    assert np.array_equal(execute(idx, e_or).set_bits(),
                           q.naive_disjunction(table, preds))
     vals = [int(v) for v in np.unique(table[:5, 1])]
-    got = q.in_set(idx, 1, vals).set_bits()
+    got = execute(idx, col(1).isin(vals)).set_bits()
     want = np.flatnonzero(np.isin(table[:, 1], vals))
     assert np.array_equal(got, want)
 

@@ -1,11 +1,12 @@
-"""Query-serving endpoint: wire format, service facade, HTTP round trips."""
+"""Query-serving endpoint: wire format, pooled service facade, result cache,
+HTTP round trips, sharded-index serving."""
 import json
 import urllib.request
 
 import numpy as np
 import pytest
 
-from repro.core import BitmapIndex, col, lex_sort, synth
+from repro.core import BitmapIndex, ShardedIndex, col, lex_sort, synth
 from repro.core import query as q
 from repro.serve.query_api import (QueryService, expr_to_json, parse_expr,
                                    serve_in_thread)
@@ -57,6 +58,84 @@ def test_service_batch(setup):
         assert out["count"] == len(q.naive_eval_rows(table, e))
 
 
+def test_service_cache_hits_and_is_bit_identical(setup):
+    table, idx, _ = setup
+    svc = QueryService(idx, max_rows=100, cache_entries=16)
+    e = (col(0) == int(table[5, 0])) & (col(1) == int(table[5, 1]))
+    first = svc.query(e)
+    assert first["cached"] is False
+    again = svc.query(e)
+    assert again["cached"] is True
+    # commutatively reordered query hits the same canonical cache entry
+    swapped = (col(1) == int(table[5, 1])) & (col(0) == int(table[5, 0]))
+    third = svc.query(swapped)
+    assert third["cached"] is True
+    for out in (again, third):
+        assert out["rows"] == first["rows"]
+        assert out["count"] == first["count"]
+    stats = svc.stats()["cache"]
+    assert stats["hits"] >= 2 and stats["misses"] >= 1
+    assert stats["entries"] >= 1
+    svc.close()
+
+
+def test_service_cache_invalidation_on_rebuild(setup):
+    table, idx, _ = setup
+    svc = QueryService(idx, max_rows=100, cache_entries=16)
+    e = col(0) == int(table[5, 0])
+    svc.query(e)
+    assert svc.query(e)["cached"] is True
+    # rebuild on half the table: cache must not serve stale results
+    half = table[:1600]
+    svc.set_index(BitmapIndex.build(
+        half, k=2, cards=[int(table[:, c].max()) + 1 for c in range(3)],
+        column_names=[f"dim{i}" for i in range(3)]))
+    out = svc.query(e)
+    assert out["cached"] is False
+    assert out["count"] == len(q.naive_eval_rows(half, e))
+    svc.invalidate_cache()
+    assert svc.stats()["cache"]["entries"] == 0
+    svc.close()
+
+
+def test_service_lru_eviction(setup):
+    table, idx, _ = setup
+    svc = QueryService(idx, cache_entries=2)
+    for v in range(4):
+        svc.query(col(0) == v)
+    assert svc.stats()["cache"]["entries"] == 2
+    svc.close()
+
+
+def test_pooled_batch_matches_sequential(setup):
+    table, idx, _ = setup
+    svc = QueryService(idx, pool_workers=4, cache_entries=64)
+    exprs = [col(0) == int(table[i, 0]) for i in (0, 9, 42, 0, 9)]
+    outs = svc.query_batch([expr_to_json(e) for e in exprs])
+    for e, out in zip(exprs, outs):
+        assert out["count"] == len(q.naive_eval_rows(table, e))
+    svc.close()
+
+
+def test_service_over_sharded_index(setup):
+    table, idx, _ = setup
+    sh = ShardedIndex.build(table, shard_rows=992, k=2,
+                            column_names=[f"dim{i}" for i in range(3)])
+    svc = QueryService(sh, max_rows=100)
+    e = (col("dim0") == int(table[5, 0])) | ~(col("dim2") == int(table[5, 2]))
+    out = svc.query(expr_to_json(e), explain_plan=True)
+    want = q.naive_eval_rows(
+        table, (col(0) == int(table[5, 0])) | ~(col(2) == int(table[5, 2])))
+    assert out["count"] == len(want)
+    assert out["rows"] == want[:100].tolist()
+    assert "per-shard plans" in out["plan"]
+    stats = svc.stats()
+    assert stats["n_shards"] == sh.n_shards
+    assert stats["n_rows"] == len(table)
+    assert svc.query(expr_to_json(e))["cached"] is True
+    svc.close()
+
+
 def test_http_endpoint(setup):
     table, idx, svc = setup
     srv, port = serve_in_thread(svc)
@@ -86,6 +165,17 @@ def test_http_endpoint(setup):
         outs = post({"queries": [expr_to_json(col(0) == 0),
                                  expr_to_json(col(1) == 1)]})
         assert len(outs["results"]) == 2
+
+        # repeat query is served from the Expr-keyed cache, bit-identically
+        repeat = post({"query": expr_to_json(e)})
+        assert repeat["cached"] is True
+        assert repeat["rows"] == out["rows"] and repeat["count"] == out["count"]
+        with urllib.request.urlopen(f"{base}/stats") as resp:
+            assert json.loads(resp.read())["cache"]["hits"] >= 1
+        inv = urllib.request.Request(f"{base}/admin/invalidate", data=b"")
+        with urllib.request.urlopen(inv) as resp:
+            assert json.loads(resp.read()) == {"ok": True}
+        assert post({"query": expr_to_json(e)})["cached"] is False
 
         # malformed input -> 400, not a crash
         try:

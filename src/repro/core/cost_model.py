@@ -1,0 +1,173 @@
+"""Measured EWAH-vs-kernel crossover: the executor's physical cost model.
+
+The executor picks a physical path per n-ary node: the compressed EWAH
+run-list path (cost ~ O(compressed words), Lemma 2) or the dense Pallas
+``logical_reduce`` path (cost ~ O(uncompressed words / lanes), flat in
+density).  The crossover density between the two is a property of the
+*machine* — VMEM bandwidth, interpret vs compiled Pallas, NumPy build — not
+of the data, so a guessed constant (the old ``DENSE_THRESHOLD = 0.5``) is
+wrong on any box it was not tuned on.
+
+``calibrate()`` measures both paths on synthetic operand stacks across a
+density sweep (density = compressed words / uncompressed words, the same
+ratio ``Executor._use_kernel`` computes from live index stats), finds the
+smallest density at which the kernel path wins, and returns a ``CostModel``
+whose ``dense_threshold`` is the midpoint of the bracketing samples.  The
+model persists as JSON (``save``/``load``); ``get_default()`` serves a
+process-wide instance loaded from ``$REPRO_COST_MODEL`` (or
+``~/.cache/repro/cost_model.json``) so the executor and planner read the
+calibrated value without re-measuring, falling back to the static default
+when no calibration has ever run on this machine.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import threading
+import time
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+DEFAULT_DENSE_THRESHOLD = 0.5
+ENV_PATH = "REPRO_COST_MODEL"
+
+
+def default_path() -> Path:
+    env = os.environ.get(ENV_PATH)
+    if env:
+        return Path(env)
+    cache = os.environ.get("XDG_CACHE_HOME") or (Path.home() / ".cache")
+    return Path(cache) / "repro" / "cost_model.json"
+
+
+@dataclass
+class CostModel:
+    """EWAH-vs-kernel decision parameters (possibly machine-calibrated)."""
+
+    dense_threshold: float = DEFAULT_DENSE_THRESHOLD
+    calibrated: bool = False
+    source: str = "default"           # "default" | "calibrated" | file path
+    machine: str = ""
+    n_words: int = 0                  # calibration operand size
+    n_operands: int = 0
+    samples: List[dict] = field(default_factory=list)
+
+    def save(self, path: Optional[os.PathLike] = None) -> Path:
+        p = Path(path) if path is not None else default_path()
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(asdict(self), indent=2))
+        return p
+
+    @classmethod
+    def load(cls, path: Optional[os.PathLike] = None) -> "CostModel":
+        p = Path(path) if path is not None else default_path()
+        data = json.loads(p.read_text())
+        cm = cls(**{k: v for k, v in data.items()
+                    if k in cls.__dataclass_fields__})
+        cm.source = str(p)
+        return cm
+
+
+_lock = threading.Lock()
+_default: Optional[CostModel] = None
+
+
+def get_default(refresh: bool = False) -> CostModel:
+    """Process-wide cost model: persisted calibration if present, else the
+    static default.  ``refresh=True`` re-reads the file (tests, re-calibration)."""
+    global _default
+    with _lock:
+        if _default is None or refresh:
+            p = default_path()
+            try:
+                _default = CostModel.load(p) if p.exists() else CostModel()
+            except (OSError, ValueError, TypeError):
+                _default = CostModel()
+    return _default
+
+
+def set_default(model: Optional[CostModel]) -> None:
+    """Install (or with ``None`` reset) the process-wide model directly."""
+    global _default
+    with _lock:
+        _default = model
+
+
+def _synthetic_stack(n_words: int, n_operands: int, density: float,
+                     rng: np.random.Generator):
+    """Operand stack whose compressed/uncompressed ratio ~= ``density``:
+    a fraction ``density`` of words are random dirty literals, the rest are
+    clean-zero runs — the word-level structure of a sorted fact table."""
+    from .ewah import EWAH
+    bms = []
+    for _ in range(n_operands):
+        words = np.zeros(n_words, dtype=np.uint32)
+        n_dirty = int(density * n_words)
+        if n_dirty:
+            pos = rng.choice(n_words, size=n_dirty, replace=False)
+            vals = rng.integers(1, 0xFFFFFFFF, size=n_dirty, dtype=np.uint32)
+            words[pos] = vals
+        bms.append(EWAH.from_words(words, n_words * 32))
+    return bms
+
+
+def _best_of(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def calibrate(n_words: int = 1 << 14, n_operands: int = 8,
+              densities: Sequence[float] = (0.02, 0.05, 0.1, 0.2, 0.35,
+                                            0.5, 0.7, 0.9),
+              repeats: int = 3, interpret: bool = True,
+              seed: int = 0) -> CostModel:
+    """Measure the EWAH-vs-kernel crossover on *this* machine.
+
+    For each density, times the vectorized EWAH ``and_many`` against the
+    bucketed Pallas ``logical_reduce`` (warm: the compile is triggered once
+    before timing) and brackets the smallest density where the kernel wins.
+    Returns an uninstalled ``CostModel``; call ``.save()`` + ``set_default``
+    (or ``get_default(refresh=True)`` after saving) to put it into effect.
+    """
+    from .ewah import and_many
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(seed)
+    samples: List[dict] = []
+    crossover: Optional[float] = None
+    prev_density: Optional[float] = None
+    for d in densities:
+        bms = _synthetic_stack(n_words, n_operands, d, rng)
+        mat = np.stack([bm.to_words() for bm in bms])
+        for bm in bms:
+            bm.runlist()  # decode outside the timed region, like the executor cache
+        kernel = lambda: np.asarray(  # noqa: E731
+            kops.logical_reduce(mat, op="and", interpret=interpret))
+        kernel()  # warm: compile the bucket
+        ewah_s = _best_of(lambda: and_many(bms), repeats)
+        kern_s = _best_of(kernel, repeats)
+        samples.append({"density": d, "ewah_us": ewah_s * 1e6,
+                        "kernel_us": kern_s * 1e6})
+        if crossover is None and kern_s < ewah_s:
+            crossover = d if prev_density is None else (prev_density + d) / 2
+        prev_density = d
+    if crossover is None:
+        # the kernel never won: only an explicit backend="kernel" uses it.
+        # Must be infinite, not ~1.0 — marker overhead pushes the measured
+        # density of incompressible bitmaps slightly *above* 1.0, which
+        # would dispatch exactly the slow case calibration excluded.
+        # (json round-trips float inf as Infinity.)
+        threshold = float("inf")
+    else:
+        threshold = float(crossover)
+    return CostModel(dense_threshold=threshold, calibrated=True,
+                     source="calibrated", machine=platform.node() or "?",
+                     n_words=n_words, n_operands=n_operands, samples=samples)

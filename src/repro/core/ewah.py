@@ -12,12 +12,30 @@ Paper layout (Aouiche, Lemire & Kaser 2008, §2.3), 32-bit words:
 
 Logical ops run in O(runs_1 + runs_2) marker steps with vectorized literal
 overlaps, realizing Lemma 2: clean-zero runs skip literal payloads entirely.
+
+Hot path (this module's two execution strategies):
+
+* ``binary_op`` / ``_SegCursor`` — the original per-segment Python cursor
+  merge.  Kept verbatim as the *reference oracle*: simple, obviously correct,
+  and the target the vectorized path is property-tested against.
+* The **run-list path** (default for ``&``/``|``/``^``/``andnot`` and the
+  n-ary ``and_many``/``or_many``): each bitmap's marker stream is decoded
+  *once* into a ``RunList`` — aligned NumPy arrays of interval ``bounds`` in
+  uncompressed word space, per-interval ``kinds`` (clean-0 / clean-1 /
+  literal) and a concatenated literal-word pool — memoized on the ``EWAH``
+  object.  A logical op aligns the two interval sets with one
+  ``union1d``/``searchsorted`` pass, resolves every aligned interval from a
+  9-entry kind×kind mode table, gathers/combines literal words with whole-
+  array ufuncs, and re-canonicalizes (clean-word resplit + adjacent-run
+  merge + marker emission) entirely with vectorized NumPy.  Output words are
+  bit-identical to ``binary_op``'s; n-ary reductions fold at the run-list
+  level so intermediate results never round-trip through the word codec.
 """
 from __future__ import annotations
 
 import numpy as np
 from dataclasses import dataclass
-from typing import Iterator, List, Sequence, Tuple
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 WORD_BITS = 32
 WORD_DTYPE = np.uint32
@@ -67,13 +85,21 @@ def _split_literal(words: np.ndarray) -> Iterator:
 
 
 class EWAH:
-    """An EWAH-compressed bitmap over ``n_bits`` bits."""
+    """An EWAH-compressed bitmap over ``n_bits`` bits.
 
-    __slots__ = ("words", "n_bits")
+    Instances are immutable; the decoded ``RunList`` (and the popcount) are
+    memoized on first use so repeated logical ops against the same bitmap —
+    the common case for cached index operands — pay the marker-stream decode
+    exactly once.
+    """
+
+    __slots__ = ("words", "n_bits", "_rl", "_popcnt")
 
     def __init__(self, words: np.ndarray, n_bits: int):
         self.words = np.asarray(words, dtype=WORD_DTYPE)
         self.n_bits = int(n_bits)
+        self._rl: Optional["RunList"] = None
+        self._popcnt: Optional[int] = None
 
     # -- stats ------------------------------------------------------------
     @property
@@ -184,15 +210,36 @@ class EWAH:
         pos = offs[bits]
         return pos[pos < self.n_bits]
 
+    def runlist(self) -> "RunList":
+        """Decoded interval view of this bitmap (memoized; treat read-only)."""
+        if self._rl is None:
+            self._rl = _decode_runlist(self.words)
+        return self._rl
+
     def count(self) -> int:
-        """Number of set bits (popcount), ignoring padding bits."""
+        """Number of set bits (popcount), ignoring padding bits.
+
+        Computed in the compressed domain from the run-list: clean-one runs
+        contribute ``32 * length`` without materializing words, literal words
+        are popcounted in one vectorized pass (``np.bitwise_count`` when
+        available, the byte lookup table from ``repro.kernels.popcount``
+        otherwise).  Memoized — selectivity estimation hits this repeatedly.
+        """
         if self.n_bits == 0:
             return 0
-        words = self.to_words().copy()
-        pad = self.n_words_uncompressed * WORD_BITS - self.n_bits
-        if pad:
-            words[-1] &= np.uint32((1 << (32 - pad)) - 1)
-        return int(np.unpackbits(words.view(np.uint8)).sum())
+        if self._popcnt is None:
+            rl = self.runlist()
+            lens = np.diff(rl.bounds)
+            total = 32 * int(lens[rl.kinds == KIND_CLEAN1].sum())
+            total += _popcount_words(rl.lits)
+            pad = self.n_words_uncompressed * WORD_BITS - self.n_bits
+            if pad and len(rl.kinds):
+                k = int(rl.kinds[-1])
+                last = (ALL_ONES if k == KIND_CLEAN1 else np.uint32(0)) \
+                    if k != KIND_LIT else rl.lits[-1]
+                total -= int(bin(int(last) >> (32 - pad)).count("1"))
+            self._popcnt = total
+        return self._popcnt
 
     # -- logical ops (compressed domain, Lemma 2) --------------------------
     def __invert__(self) -> "EWAH":
@@ -232,16 +279,16 @@ class EWAH:
         return EWAH(_emit(segs()), self.n_bits)
 
     def __and__(self, other: "EWAH") -> "EWAH":
-        return binary_op(self, other, "and")
+        return vec_binary_op(self, other, "and")
 
     def __or__(self, other: "EWAH") -> "EWAH":
-        return binary_op(self, other, "or")
+        return vec_binary_op(self, other, "or")
 
     def __xor__(self, other: "EWAH") -> "EWAH":
-        return binary_op(self, other, "xor")
+        return vec_binary_op(self, other, "xor")
 
     def andnot(self, other: "EWAH") -> "EWAH":
-        return binary_op(self, other, "andnot")
+        return vec_binary_op(self, other, "andnot")
 
     def __eq__(self, other) -> bool:
         return (
@@ -249,6 +296,11 @@ class EWAH:
             and self.n_bits == other.n_bits
             and np.array_equal(self.to_words(), other.to_words())
         )
+
+    def __reduce__(self):
+        # pickle only the compressed words: memoized decodes are cheap to
+        # rebuild and would bloat cross-process result transfers
+        return (EWAH, (self.words, self.n_bits))
 
     def __repr__(self) -> str:
         return f"EWAH(n_bits={self.n_bits}, words={self.size_words}/{self.n_words_uncompressed})"
@@ -439,21 +491,329 @@ def binary_op(a: EWAH, b: EWAH, op: str) -> EWAH:
     return EWAH(_emit(segs()), a.n_bits)
 
 
+# ---------------------------------------------------------------------------
+# Vectorized run-list representation (the production hot path).
+#
+# A RunList is the fully-aligned decode of a bitmap: ``bounds`` splits the
+# uncompressed word space [0, n_words) into intervals; interval i covers
+# words [bounds[i], bounds[i+1]) and is either a clean-zero run, a clean-one
+# run, or a literal stretch whose words live at
+# ``lits[lit_starts[i] : lit_starts[i] + length]``.  Canonical invariants:
+# adjacent intervals differ in kind and literal stretches contain no clean
+# words — so a RunList maps 1:1 onto canonical EWAH marker output.
+# ---------------------------------------------------------------------------
+
+KIND_CLEAN0 = 0
+KIND_CLEAN1 = 1
+KIND_LIT = 2
+
+_HAS_BITWISE_COUNT = hasattr(np, "bitwise_count")
+
+
+def _popcount_words(words: np.ndarray) -> int:
+    """Popcount a uint32 array in one vectorized pass."""
+    if len(words) == 0:
+        return 0
+    if _HAS_BITWISE_COUNT:
+        return int(np.bitwise_count(words).sum(dtype=np.int64))
+    from repro.kernels.popcount import POPCOUNT8  # byte-LUT fallback
+    return int(POPCOUNT8[np.ascontiguousarray(words).view(np.uint8)]
+               .sum(dtype=np.int64))
+
+
+@dataclass(frozen=True, eq=False)
+class RunList:
+    """Aligned interval decode of one EWAH bitmap (see section comment)."""
+    bounds: np.ndarray      # int64 (m+1,): 0 = b[0] < ... < b[m] = n_words
+    kinds: np.ndarray       # int8  (m,):   KIND_CLEAN0 | KIND_CLEAN1 | KIND_LIT
+    lit_starts: np.ndarray  # int64 (m,):   offset into ``lits`` (lit intervals)
+    lits: np.ndarray        # uint32 pool of literal words, interval order
+
+    @property
+    def n_intervals(self) -> int:
+        return len(self.kinds)
+
+    @property
+    def n_words(self) -> int:
+        return int(self.bounds[-1])
+
+
+_EMPTY_RUNLIST = RunList(np.zeros(1, np.int64), np.empty(0, np.int8),
+                         np.empty(0, np.int64), np.empty(0, WORD_DTYPE))
+
+
+def _groups_to_runlist(item_kind: np.ndarray, item_count: np.ndarray,
+                       item_word: np.ndarray) -> RunList:
+    """Canonicalize an item stream into a RunList.
+
+    Items are (kind, count[, word]) triples where literal items carry exactly
+    one word each.  Literal words that are secretly clean (0x0 / 0xFFFFFFFF)
+    are reclassified, then adjacent same-kind items merge into maximal
+    intervals — the vectorized equivalent of ``_split_literal`` + ``_emit``'s
+    run merging.
+    """
+    if len(item_kind) == 0:
+        return _EMPTY_RUNLIST
+    is_lit = item_kind == KIND_LIT
+    w = item_word
+    k = np.where(is_lit & (w == 0), np.int8(KIND_CLEAN0),
+                 np.where(is_lit & (w == ALL_ONES), np.int8(KIND_CLEAN1),
+                          item_kind)).astype(np.int8)
+    starts = np.concatenate(([0], np.flatnonzero(k[1:] != k[:-1]) + 1))
+    gkind = k[starts]
+    gcount = np.add.reduceat(item_count, starts)
+    lits = np.ascontiguousarray(w[k == KIND_LIT])
+    bounds = np.concatenate(([0], np.cumsum(gcount))).astype(np.int64)
+    lit_len = np.where(gkind == KIND_LIT, gcount, 0)
+    lit_starts = (np.concatenate(([0], np.cumsum(lit_len)))[:-1]
+                  .astype(np.int64))
+    return RunList(bounds, gkind, lit_starts, lits)
+
+
+def _decode_runlist(words: np.ndarray) -> RunList:
+    """Marker stream -> RunList.  One cheap int loop over *markers* (not
+    words), then a single vectorized canonicalization pass."""
+    n = len(words)
+    if n == 0:
+        return _EMPTY_RUNLIST
+    # vectorized field extraction; the loop below only walks the marker chain
+    bit_all = (words & 1).tolist()
+    nc_all = ((words >> np.uint32(_CLEAN_SHIFT)) & np.uint32(MAX_CLEAN)).tolist()
+    nl_all = (words >> np.uint32(_LIT_SHIFT)).tolist()
+    kinds: List[int] = []
+    counts: List[int] = []
+    lit_slices: List[Tuple[int, int]] = []
+    i = 0
+    while i < n:
+        nc = nc_all[i]
+        nl = nl_all[i]
+        if nc:
+            kinds.append(bit_all[i])
+            counts.append(nc)
+        i += 1
+        if nl:
+            kinds.append(KIND_LIT)
+            counts.append(nl)
+            lit_slices.append((i, i + nl))
+            i += nl
+    if not kinds:
+        return _EMPTY_RUNLIST
+    seg_kind = np.array(kinds, np.int8)
+    seg_count = np.array(counts, np.int64)
+    lits = (np.concatenate([words[s:e] for s, e in lit_slices])
+            if lit_slices else np.empty(0, WORD_DTYPE))
+    # expand literal stretches to per-word items for canonicalization
+    is_lit = seg_kind == KIND_LIT
+    items_per = np.where(is_lit, seg_count, 1)
+    item_kind = np.repeat(seg_kind, items_per)
+    item_count = np.where(item_kind == KIND_LIT, 1,
+                          np.repeat(seg_count, items_per))
+    item_word = np.zeros(len(item_kind), WORD_DTYPE)
+    item_word[item_kind == KIND_LIT] = lits
+    return _groups_to_runlist(item_kind, item_count, item_word)
+
+
+def _ranges(starts: np.ndarray, lens: np.ndarray) -> np.ndarray:
+    """Concatenate [s, s+len) index ranges: vectorized multi-slice gather."""
+    total = int(lens.sum())
+    if total == 0:
+        return np.empty(0, np.int64)
+    cum0 = np.concatenate(([0], np.cumsum(lens)[:-1]))
+    return np.repeat(starts - cum0, lens) + np.arange(total)
+
+
+# per-interval resolution modes for an aligned (kind_a, kind_b) pair
+_MODE_COPY_A, _MODE_COPY_B, _MODE_INV_A, _MODE_INV_B, _MODE_COMBINE = 2, 3, 4, 5, 6
+
+# mode = TABLE[op][kind_a * 3 + kind_b]; entries 0/1 are clean results
+_MODE_TABLE = {
+    "and":    np.array([0, 0, 0, 0, 1, 3, 0, 2, 6], np.int8),
+    "or":     np.array([0, 1, 3, 1, 1, 1, 2, 1, 6], np.int8),
+    "xor":    np.array([0, 1, 3, 1, 0, 5, 2, 4, 6], np.int8),
+    "andnot": np.array([0, 0, 0, 1, 0, 5, 2, 0, 6], np.int8),
+}
+
+
+def _rl_binary(ra: RunList, rb: RunList, op: str) -> RunList:
+    """Aligned-interval logical op: RunList x RunList -> canonical RunList."""
+    bounds = np.union1d(ra.bounds, rb.bounds)
+    left = bounds[:-1]
+    lens = np.diff(bounds)
+    ia = np.searchsorted(ra.bounds, left, side="right") - 1
+    ib = np.searchsorted(rb.bounds, left, side="right") - 1
+    ka = ra.kinds[ia].astype(np.int64)
+    kb = rb.kinds[ib].astype(np.int64)
+    mode = _MODE_TABLE[op][ka * 3 + kb]
+
+    # literal source offsets (valid only where that side is literal)
+    a_off = np.zeros(len(mode), np.int64)
+    sel = ka == KIND_LIT
+    a_off[sel] = ra.lit_starts[ia[sel]] + (left[sel] - ra.bounds[ia[sel]])
+    b_off = np.zeros(len(mode), np.int64)
+    sel = kb == KIND_LIT
+    b_off[sel] = rb.lit_starts[ib[sel]] + (left[sel] - rb.bounds[ib[sel]])
+
+    is_lit = mode >= _MODE_COPY_A
+    out_lens = np.where(is_lit, lens, 0)
+    dst0 = np.concatenate(([0], np.cumsum(out_lens)))[:-1]
+    out_lits = np.empty(int(out_lens.sum()), WORD_DTYPE)
+    for m, off, pool, inv in ((_MODE_COPY_A, a_off, ra.lits, False),
+                              (_MODE_INV_A, a_off, ra.lits, True),
+                              (_MODE_COPY_B, b_off, rb.lits, False),
+                              (_MODE_INV_B, b_off, rb.lits, True)):
+        msk = mode == m
+        if msk.any():
+            src = pool[_ranges(off[msk], lens[msk])]
+            out_lits[_ranges(dst0[msk], lens[msk])] = \
+                np.bitwise_not(src) if inv else src
+    msk = mode == _MODE_COMBINE
+    if msk.any():
+        av = ra.lits[_ranges(a_off[msk], lens[msk])]
+        bv = rb.lits[_ranges(b_off[msk], lens[msk])]
+        out_lits[_ranges(dst0[msk], lens[msk])] = _NPOP[op](av, bv)
+
+    items_per = np.where(is_lit, lens, 1)
+    item_kind = np.repeat(np.where(is_lit, np.int8(KIND_LIT),
+                                   mode).astype(np.int8), items_per)
+    item_count = np.where(item_kind == KIND_LIT, 1, np.repeat(lens, items_per))
+    item_word = np.zeros(len(item_kind), WORD_DTYPE)
+    item_word[item_kind == KIND_LIT] = out_lits
+    return _groups_to_runlist(item_kind, item_count, item_word)
+
+
+def _rl_emit(rl: RunList) -> np.ndarray:
+    """Canonical RunList -> EWAH word stream, fully vectorized.
+
+    Mirrors ``_emit`` exactly: segments are (clean run, literal stretch)
+    pairs; runs longer than MAX_CLEAN spill into extra run-only markers, and
+    literal stretches longer than MAX_LIT continue under zero-run markers.
+    """
+    n_groups = len(rl.kinds)
+    if n_groups == 0:
+        return np.array([make_marker(0, 0, 0)], WORD_DTYPE)
+    gkind = rl.kinds
+    gcount = np.diff(rl.bounds)
+    is_lit_g = gkind == KIND_LIT
+    seg_start = ~is_lit_g
+    seg_start[0] = True  # a leading literal stretch opens a run-less segment
+    seg_of_group = np.cumsum(seg_start) - 1
+    n_seg = int(seg_of_group[-1]) + 1
+    run_bit = np.zeros(n_seg, np.int64)
+    run_cnt = np.zeros(n_seg, np.int64)
+    nlit = np.zeros(n_seg, np.int64)
+    starts = np.flatnonzero(seg_start)
+    sk = gkind[starts]
+    clean_seg = sk != KIND_LIT
+    run_bit[clean_seg] = sk[clean_seg]
+    run_cnt[clean_seg] = gcount[starts][clean_seg]
+    # each segment holds at most one literal group (adjacent ones merged)
+    nlit[seg_of_group[is_lit_g]] = gcount[is_lit_g]
+
+    q = np.maximum(1, -(-run_cnt // MAX_CLEAN))   # run markers per segment
+    nchunk = np.maximum(1, -(-nlit // MAX_LIT))   # literal chunks per segment
+    m = q + nchunk - 1                            # total markers per segment
+    rem_run = run_cnt - (q - 1) * MAX_CLEAN
+    rem_lit = nlit - (nchunk - 1) * MAX_LIT
+    total_m = int(m.sum())
+    seg_of = np.repeat(np.arange(n_seg), m)
+    mcum0 = np.concatenate(([0], np.cumsum(m)[:-1]))
+    j = np.arange(total_m) - np.repeat(mcum0, m)  # marker index within segment
+    qs = q[seg_of]
+    ms = m[seg_of]
+    clean_part = np.where(j < qs - 1, MAX_CLEAN,
+                          np.where(j == qs - 1, rem_run[seg_of], 0))
+    lit_part = np.where(j < qs - 1, 0,
+                        np.where(j == ms - 1, rem_lit[seg_of], MAX_LIT))
+    bit_part = np.where(j <= qs - 1, run_bit[seg_of], 0)
+    markers = (bit_part | (clean_part << _CLEAN_SHIFT)
+               | (lit_part << _LIT_SHIFT)).astype(WORD_DTYPE)
+
+    total = total_m + len(rl.lits)
+    out = np.empty(total, WORD_DTYPE)
+    mpos = np.concatenate(([0], np.cumsum(1 + lit_part)[:-1])).astype(np.int64)
+    is_marker = np.zeros(total, bool)
+    is_marker[mpos] = True
+    out[is_marker] = markers
+    out[~is_marker] = rl.lits
+    return out
+
+
+def _rl_wrap(rl: RunList, n_bits: int) -> EWAH:
+    out = EWAH(_rl_emit(rl), n_bits)
+    out._rl = rl
+    return out
+
+
+def _empty_ewah(n_bits: int) -> EWAH:
+    """The canonical zero-word bitmap: a single (0, 0, 0) marker."""
+    return EWAH(np.array([make_marker(0, 0, 0)], WORD_DTYPE), n_bits)
+
+
+def vec_binary_op(a: EWAH, b: EWAH, op: str) -> EWAH:
+    """Vectorized logical op — bit-identical to ``binary_op`` (the oracle)."""
+    assert a.n_bits == b.n_bits, (a.n_bits, b.n_bits)
+    if a.n_words_uncompressed == 0:
+        return _empty_ewah(a.n_bits)
+    return _rl_wrap(_rl_binary(a.runlist(), b.runlist(), op), a.n_bits)
+
+
+def _rl_is_zero(rl: RunList) -> bool:
+    return rl.n_intervals == 1 and rl.kinds[0] == KIND_CLEAN0
+
+
+def _rl_is_ones(rl: RunList) -> bool:
+    return rl.n_intervals == 1 and rl.kinds[0] == KIND_CLEAN1
+
+
 def or_many(bitmaps: Sequence[EWAH]) -> EWAH:
-    """OR-reduce many bitmaps (tree order keeps intermediate results small)."""
+    """OR-reduce many bitmaps (tree order keeps intermediate results small).
+
+    Folds at the run-list level: operands decode once (memoized) and only
+    the final result is re-encoded to EWAH words.  Short-circuits when an
+    intermediate union saturates to all-ones.
+    """
     assert bitmaps
-    items = list(bitmaps)
+    bitmaps = list(bitmaps)
+    if len(bitmaps) == 1:
+        return bitmaps[0]
+    n_bits = bitmaps[0].n_bits
+    assert all(bm.n_bits == n_bits for bm in bitmaps), \
+        [bm.n_bits for bm in bitmaps]
+    if bitmaps[0].n_words_uncompressed == 0:
+        return _empty_ewah(n_bits)
+    items = [bm.runlist() for bm in bitmaps]
     while len(items) > 1:
-        items = [
-            items[i] | items[i + 1] if i + 1 < len(items) else items[i]
-            for i in range(0, len(items), 2)
-        ]
-    return items[0]
+        nxt = []
+        for i in range(0, len(items) - 1, 2):
+            rl = _rl_binary(items[i], items[i + 1], "or")
+            if _rl_is_ones(rl):
+                return _rl_wrap(rl, n_bits)
+            nxt.append(rl)
+        if len(items) % 2:
+            nxt.append(items[-1])
+        items = nxt
+    return _rl_wrap(items[0], n_bits)
 
 
 def and_many(bitmaps: Sequence[EWAH]) -> EWAH:
+    """AND-reduce many bitmaps accumulatively (cheapest-first callers win).
+
+    Run-list-level fold with an all-zero short-circuit: once the
+    intersection empties — the common case for selective conjunctions over a
+    sorted table — the remaining operands are never touched.
+    """
     assert bitmaps
-    res = bitmaps[0]
+    bitmaps = list(bitmaps)
+    if len(bitmaps) == 1:
+        return bitmaps[0]
+    n_bits = bitmaps[0].n_bits
+    assert all(bm.n_bits == n_bits for bm in bitmaps), \
+        [bm.n_bits for bm in bitmaps]
+    if bitmaps[0].n_words_uncompressed == 0:
+        return _empty_ewah(n_bits)
+    acc = bitmaps[0].runlist()
     for bm in bitmaps[1:]:
-        res = res & bm
-    return res
+        acc = _rl_binary(acc, bm.runlist(), "and")
+        if _rl_is_zero(acc):
+            break
+    return _rl_wrap(acc, n_bits)

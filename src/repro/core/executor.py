@@ -5,13 +5,25 @@ physical representation per operation, by density, not globally): an n-ary
 AND/OR whose operands are mostly *dense* (compressed size close to the
 uncompressed word count, so EWAH's run-skipping buys nothing) is offloaded
 to the Pallas ``word_logical`` kernel as a dense tree reduction; sparse
-operands stay on the compressed EWAH path where cost is O(non-zero words)
-(Lemma 2).  The decision reads the operands' actual compressed sizes, which
-the index already tracks — no sampling pass.
+operands stay on the compressed EWAH path — the vectorized run-list ops in
+``repro.core.ewah`` — where cost is O(non-zero words) (Lemma 2).  The
+decision reads the operands' actual compressed sizes, which the index
+already tracks, against the **measured** crossover density from
+``repro.core.cost_model`` (calibrated per machine; static 0.5 fallback
+when no calibration has run).
+
+Kernel-path operands are padded to power-of-two word-count buckets and
+cached *with* their per-row clean-tile flags (``("dense", col, bid,
+bucket)`` entries), so one compiled Pallas program serves every operand
+shape in a bucket and the clean sideband is computed once per bitmap, not
+once per query (see ``repro.kernels.ops``).
 
 ``QueryBatch`` evaluates many expressions in one pass over a shared operand
-cache: physical bitmaps (and their dense decompressions, when the kernel
-path is taken) are loaded once and reused across all plans in the batch.
+cache: physical bitmaps (and their bucketed dense decompressions + flags,
+when the kernel path is taken) are loaded once and reused across all plans
+in the batch.  Constant plan nodes memoize their full-length bitmaps in the
+same cache.  Sharded execution forwards an optional worker pool for
+shard-parallel fan-out (``repro.core.shard``).
 """
 from __future__ import annotations
 
@@ -19,32 +31,48 @@ from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from . import cost_model as _cm
 from .ewah import EWAH, and_many, or_many
 from .expr import Expr
 from .index import BitmapIndex
 from .planner import PAnd, PBitmap, PConst, PDiff, PNot, POr, PlanNode, plan
 
-# operands denser than this fraction of their uncompressed size go to the
-# dense kernel path; EWAH on near-incompressible bitmaps degenerates to a
-# literal-word scan with marker overhead, which the VMEM-tiled kernel beats
-DENSE_THRESHOLD = 0.5
+# the historical static threshold, kept as the uncalibrated fallback; the
+# live value comes from ``repro.core.cost_model`` (measured crossover when a
+# calibration has been persisted on this machine)
+DENSE_THRESHOLD = _cm.DEFAULT_DENSE_THRESHOLD
 
 Backend = str  # "auto" | "ewah" | "kernel"
 
 
-def _const_bitmap(index: BitmapIndex, value: bool) -> EWAH:
-    return EWAH.from_bool(np.full(index.n_rows, value, dtype=bool))
+def _const_bitmap(index: BitmapIndex, value: bool,
+                  cache: Optional[Dict] = None) -> EWAH:
+    """All-ones / all-zeros bitmap over the index's rows, memoized per
+    (index rows, value) in the operand cache — constant plan nodes used to
+    rebuild a full-length EWAH on every evaluation."""
+    key = ("const", index.n_rows, value)
+    if cache is not None:
+        bm = cache.get(key)
+        if bm is not None:
+            return bm
+    bm = EWAH.from_bool(np.full(index.n_rows, value, dtype=bool))
+    if cache is not None:
+        cache[key] = bm
+    return bm
 
 
 class Executor:
     def __init__(self, index: BitmapIndex, backend: Backend = "auto",
                  cache: Optional[Dict] = None,
-                 dense_threshold: float = DENSE_THRESHOLD):
+                 dense_threshold: Optional[float] = None):
         assert backend in ("auto", "ewah", "kernel"), backend
         self.index = index
         self.backend = backend
         self.cache = cache if cache is not None else {}
-        self.dense_threshold = dense_threshold
+        # None -> the process cost model (calibrated crossover if available)
+        self.dense_threshold = (
+            _cm.get_default().dense_threshold
+            if dense_threshold is None else dense_threshold)
 
     # -- operand loading (shared across a batch via ``cache``) ------------
     def _load(self, node: PBitmap) -> EWAH:
@@ -55,20 +83,36 @@ class Executor:
             self.cache[key] = bm
         return bm
 
-    def _dense_words(self, node: PlanNode, bm: EWAH) -> np.ndarray:
+    def _dense_operand(self, node: PlanNode, bm: EWAH):
+        """(bucket-padded words, per-row clean flags) for the kernel path.
+
+        Both are cached per bitmap *and bucket* so repeated dense queries
+        decompress once and never recompute the clean-tile sideband; the
+        power-of-two bucket keeps the compiled-kernel universe small (see
+        ``repro.kernels.ops``)."""
+        from repro.kernels import ops as kops  # lazy: jax only on this path
+        cp = kops.bucket_cols(bm.n_words_uncompressed)
         if isinstance(node, PBitmap):
-            key = ("words", node.col, node.bitmap_id)
-            w = self.cache.get(key)
-            if w is None:
-                w = bm.to_words()
-                self.cache[key] = w
-            return w
-        return bm.to_words()
+            key = ("dense", node.col, node.bitmap_id, cp)
+            hit = self.cache.get(key)
+            if hit is None:
+                hit = self._pad_and_flags(bm, cp)
+                self.cache[key] = hit
+            return hit
+        return self._pad_and_flags(bm, cp)
+
+    @staticmethod
+    def _pad_and_flags(bm: EWAH, cp: int):
+        from repro.kernels import ops as kops
+        w = bm.to_words()
+        if len(w) < cp:
+            w = np.pad(w, (0, cp - len(w)))
+        return w, kops.np_row_flags(w)
 
     # -- evaluation --------------------------------------------------------
     def run(self, node: PlanNode) -> EWAH:
         if isinstance(node, PConst):
-            return _const_bitmap(self.index, node.value)
+            return _const_bitmap(self.index, node.value, self.cache)
         if isinstance(node, PBitmap):
             return self._load(node)
         if isinstance(node, PNot):
@@ -90,13 +134,16 @@ class Executor:
         neg = [(ch, self.run(ch)) for ch in node.neg]
         if self._use_kernel([bm for _, bm in pos + neg]):
             from repro.kernels import ops as kops
-            pmat = np.stack([self._dense_words(n, bm) for n, bm in pos])
-            nmat = np.stack([self._dense_words(n, bm) for n, bm in neg])
-            a = kops.logical_reduce(pmat, op="and")
-            b = kops.logical_reduce(nmat, op="or")
+            pw, pf = zip(*[self._dense_operand(n, bm) for n, bm in pos])
+            nw, nf = zip(*[self._dense_operand(n, bm) for n, bm in neg])
+            a = kops.logical_reduce(np.stack(pw), op="and",
+                                    row_flags=np.stack(pf))
+            b = kops.logical_reduce(np.stack(nw), op="or",
+                                    row_flags=np.stack(nf))
             out = np.asarray(kops.word_logical(a[None, :], b[None, :],
                                                "andnot"))[0]
-            return EWAH.from_words(out, pos[0][1].n_bits)
+            n_words = pos[0][1].n_words_uncompressed
+            return EWAH.from_words(out[:n_words], pos[0][1].n_bits)
         acc = and_many([bm for _, bm in pos])
         for _, bm in neg:
             acc = acc.andnot(bm)
@@ -117,19 +164,23 @@ class Executor:
 
     def _reduce_kernel(self, children, op: str) -> EWAH:
         from repro.kernels import ops as kops  # lazy: jax only on this path
-        mat = np.stack([self._dense_words(node, bm) for node, bm in children])
-        out = np.asarray(kops.logical_reduce(mat, op=op))
+        ws, fs = zip(*[self._dense_operand(node, bm) for node, bm in children])
+        out = np.asarray(kops.logical_reduce(np.stack(ws), op=op,
+                                             row_flags=np.stack(fs)))
         n_bits = children[0][1].n_bits
-        return EWAH.from_words(out, n_bits)
+        n_words = children[0][1].n_words_uncompressed
+        return EWAH.from_words(out[:n_words], n_bits)
 
 
 def execute(index, e: Union[Expr, PlanNode],
             backend: Backend = "auto", optimize: bool = True,
-            cache: Optional[Dict] = None) -> EWAH:
+            cache: Optional[Dict] = None, pool=None) -> EWAH:
     """Plan (unless given a plan) and evaluate one expression -> EWAH.
 
     Accepts a monolithic ``BitmapIndex`` or a ``ShardedIndex``; the sharded
-    path plans and executes per shard, then concatenates the EWAH results.
+    path plans and executes per shard — concurrently when ``pool`` (a
+    ``concurrent.futures`` executor) is given — then concatenates the EWAH
+    results.
     """
     from .shard import ShardedIndex  # local: shard imports this module
     if isinstance(index, ShardedIndex):
@@ -140,7 +191,7 @@ def execute(index, e: Union[Expr, PlanNode],
             caches = [cache.setdefault(("shard", i), {})
                       for i in range(index.n_shards)]
         return index.execute(e, backend=backend, optimize=optimize,
-                             caches=caches)
+                             caches=caches, pool=pool)
     node = plan(index, e, optimize=optimize) if isinstance(e, Expr) else e
     return Executor(index, backend=backend, cache=cache).run(node)
 
@@ -165,20 +216,21 @@ class QueryBatch:
         self.exprs = list(exprs)
 
     def execute(self, index, backend: Backend = "auto",
-                optimize: bool = True) -> List[EWAH]:
+                optimize: bool = True, pool=None) -> List[EWAH]:
         from .shard import ShardedIndex
         if isinstance(index, ShardedIndex):
             # one operand cache per shard, shared across the whole batch
             caches: List[Dict] = [{} for _ in index.shards]
             return [index.execute(e, backend=backend, optimize=optimize,
-                                  caches=caches) for e in self.exprs]
+                                  caches=caches, pool=pool)
+                    for e in self.exprs]
         plans = [plan(index, e, optimize=optimize) for e in self.exprs]
         cache: Dict = {}
         ex = Executor(index, backend=backend, cache=cache)
         return [ex.run(p) for p in plans]
 
     def execute_rows(self, index, backend: Backend = "auto",
-                     optimize: bool = True) -> List[np.ndarray]:
+                     optimize: bool = True, pool=None) -> List[np.ndarray]:
         return [bm.set_bits()
                 for bm in self.execute(index, backend=backend,
-                                       optimize=optimize)]
+                                       optimize=optimize, pool=pool)]

@@ -1,0 +1,93 @@
+"""Thread-safe LRU cache with entry-count *and* byte-budget eviction.
+
+Shared by the serving layer's result cache and ``ShardedIndex``'s per-shard
+result caches.  Cached values here are EWAH bitmaps whose sizes span orders
+of magnitude (a selective AND is a handful of words, a broad OR is most of
+the index), so evicting by entry count alone lets a few giant results blow
+the memory budget while thousands of tiny ones would have fit.  ``max_bytes``
++ ``sizeof`` bound the *total payload size*; eviction pops least-recently
+used entries until both the entry cap and the byte budget hold.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Callable, Dict, Optional
+
+
+class LRUCache:
+    """LRU with hit/miss counters, optional entry cap and byte budget.
+
+    ``capacity=None`` means unbounded entries; ``capacity=0`` disables the
+    cache entirely (every ``put`` is a no-op).  ``max_bytes`` bounds
+    ``sum(sizeof(value))`` over live entries; ``sizeof`` defaults to 0 per
+    entry (byte budget inert unless a sizer is supplied).
+    """
+
+    _MISS = object()
+
+    def __init__(self, capacity: Optional[int] = None,
+                 max_bytes: Optional[int] = None,
+                 sizeof: Optional[Callable[[object], int]] = None):
+        self.capacity = None if capacity is None else max(int(capacity), 0)
+        self.max_bytes = None if max_bytes is None else max(int(max_bytes), 0)
+        self._sizeof = sizeof or (lambda _v: 0)
+        self._od: "OrderedDict" = OrderedDict()
+        self._sizes: Dict = {}
+        self._bytes = 0
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key):
+        with self._lock:
+            val = self._od.get(key, self._MISS)
+            if val is self._MISS:
+                self.misses += 1
+                return None
+            self._od.move_to_end(key)
+            self.hits += 1
+            return val
+
+    def put(self, key, val) -> None:
+        if self.capacity == 0:
+            return
+        size = int(self._sizeof(val))
+        with self._lock:
+            if key in self._od:
+                self._bytes -= self._sizes[key]
+            self._od[key] = val
+            self._sizes[key] = size
+            self._bytes += size
+            self._od.move_to_end(key)
+            while len(self._od) > 1 and (
+                    (self.capacity is not None and len(self._od) > self.capacity)
+                    or (self.max_bytes is not None and self._bytes > self.max_bytes)):
+                k, _ = self._od.popitem(last=False)
+                self._bytes -= self._sizes.pop(k)
+                self.evictions += 1
+            # a single entry larger than the whole byte budget is not worth
+            # keeping either
+            if (self.max_bytes is not None and self._bytes > self.max_bytes
+                    and len(self._od) == 1):
+                k, _ = self._od.popitem(last=False)
+                self._bytes -= self._sizes.pop(k)
+                self.evictions += 1
+
+    def clear(self) -> None:
+        with self._lock:
+            self._od.clear()
+            self._sizes.clear()
+            self._bytes = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._od)
+
+    def stats(self) -> Dict:
+        with self._lock:
+            return {"entries": len(self._od), "capacity": self.capacity,
+                    "bytes": self._bytes, "max_bytes": self.max_bytes,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions}

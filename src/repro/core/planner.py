@@ -43,6 +43,12 @@ from .index import BitmapIndex
 @dataclass
 class PlanNode:
     est_words: int = field(default=0, init=False)
+    # advisory physical-path hint from the planner's cost model: True when
+    # the estimated operand density clears the (calibrated) EWAH-vs-kernel
+    # crossover.  The executor re-decides from the operands' *actual*
+    # compressed sizes; the hint makes ``explain`` output honest about the
+    # expected physical path.
+    kernel_hint: bool = field(default=False, init=False)
 
 
 @dataclass
@@ -143,9 +149,14 @@ def flatten(e: Expr) -> Expr:
 # ---------------------------------------------------------------------------
 
 class Planner:
-    def __init__(self, index: BitmapIndex, optimize: bool = True):
+    def __init__(self, index: BitmapIndex, optimize: bool = True,
+                 cost_model=None):
+        from . import cost_model as _cm
         self.index = index
         self.optimize = optimize
+        # calibrated EWAH-vs-kernel crossover (see repro.core.cost_model)
+        self.cost_model = cost_model if cost_model is not None \
+            else _cm.get_default()
         self._sizes: dict = {}  # col -> np.ndarray of per-bitmap words
 
     # -- stats ------------------------------------------------------------
@@ -301,6 +312,10 @@ class Planner:
         else:
             node.est_words = min(sum(ch.est_words for ch in children),
                                  self._n_words)
+        if self._n_words:
+            density = (sum(ch.est_words for ch in children)
+                       / (len(children) * self._n_words))
+            node.kernel_hint = density >= self.cost_model.dense_threshold
         return node
 
 
@@ -326,6 +341,7 @@ def explain(node: PlanNode, depth: int = 0) -> str:
         lines += [explain(ch, depth + 2) for ch in node.neg]
         return "\n".join(lines)
     name = "AND" if isinstance(node, PAnd) else "OR"
-    lines = [f"{pad}{name} ~{node.est_words}w"]
+    path = " [kernel]" if node.kernel_hint else ""
+    lines = [f"{pad}{name} ~{node.est_words}w{path}"]
     lines += [explain(ch, depth + 1) for ch in node.children]
     return "\n".join(lines)

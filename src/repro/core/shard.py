@@ -12,51 +12,91 @@ invariant the paper's 256 MB blocks rely on, one level up).
 This is the coarse-grained unit for scale-out: shards can live on different
 workers, be built independently by streaming ``IndexBuilder``s, and be
 appended/retired without touching their siblings.
+
+Execution is shard-parallel when a worker pool is supplied (``execute(...,
+pool=...)``): shards are embarrassingly independent.  Two pool flavours are
+accepted interchangeably — any ``concurrent.futures`` executor (the serving
+layer hands down its own thread pool), or a ``ShardProcessPool``, which
+forks workers that inherit the shards by copy-on-write so CPU-bound EWAH
+work escapes the GIL without ever pickling an index; only the compressed
+results cross process boundaries.  Each shard also keeps a *shard-local*
+LRU of its own EWAH results keyed by the expression's canonical structural
+key — ``replace_shard`` (a single-shard rebuild) invalidates only that
+slice, so the other shards' warm results survive an incremental reindex
+(and bumps the index generation, which makes process pools re-fork).
 """
 from __future__ import annotations
 
+import itertools
+import multiprocessing
+import os
+import threading
+from concurrent.futures import ProcessPoolExecutor
 from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from .ewah import EWAH
-from .expr import Expr
+from .expr import Expr, canonical_key
 from .index import (BitmapIndex, IndexBuilder, WORD_ROWS, concat_bitmaps,
                     validate_partition_rows)
+from .lru import LRUCache
+
+# per-shard result-cache defaults (entries + byte budget per shard)
+SHARD_CACHE_ENTRIES = 64
+SHARD_CACHE_BYTES = 16 << 20
 
 
 class ShardedIndex:
     """A list of row-contiguous ``BitmapIndex`` shards with offset bookkeeping."""
 
     def __init__(self, shards: Sequence[BitmapIndex],
-                 column_names: Optional[Sequence[str]] = None):
+                 column_names: Optional[Sequence[str]] = None,
+                 cache_entries: int = SHARD_CACHE_ENTRIES,
+                 cache_bytes: Optional[int] = SHARD_CACHE_BYTES):
         shards = list(shards)
         if not shards:
             raise ValueError("ShardedIndex needs at least one shard")
         ref = shards[0]
         for i, sh in enumerate(shards):
-            if len(sh.columns) != len(ref.columns):
-                raise ValueError(
-                    f"shard {i} has {len(sh.columns)} columns, expected "
-                    f"{len(ref.columns)}")
-            for c, (a, b) in enumerate(zip(sh.columns, ref.columns)):
-                ea, eb = a.encoder, b.encoder
-                if (ea.card, ea.k, ea.L) != (eb.card, eb.k, eb.L):
-                    raise ValueError(
-                        f"shard {i} column {c} encoder {ea!r} differs from "
-                        f"shard 0's {eb!r}; shards must share global "
-                        f"cardinalities")
-            if i + 1 < len(shards) and sh.n_rows % WORD_ROWS:
-                raise ValueError(
-                    f"interior shard {i} has {sh.n_rows} rows, not a "
-                    f"multiple of {WORD_ROWS}; results could not be "
-                    f"concatenated exactly")
+            self._validate_shard(i, sh, ref, interior=i + 1 < len(shards))
         self.shards = shards
         self.offsets = np.concatenate(
             [[0], np.cumsum([sh.n_rows for sh in shards])]).astype(np.int64)
         names = list(column_names) if column_names is not None \
             else ref.column_names
         self.column_names = names
+        self._cache_entries = cache_entries
+        self._cache_bytes = cache_bytes
+        self._result_caches = [self._new_cache() for _ in shards]
+        # bumped on every shard replacement; process pools forked against an
+        # older generation re-fork before serving (never a stale shard)
+        self.generation = 0
+
+    def _new_cache(self) -> LRUCache:
+        return LRUCache(capacity=self._cache_entries,
+                        max_bytes=self._cache_bytes,
+                        sizeof=lambda bm: bm.size_bytes)
+
+    @staticmethod
+    def _validate_shard(i: int, sh: BitmapIndex, ref: BitmapIndex,
+                        interior: bool) -> None:
+        if len(sh.columns) != len(ref.columns):
+            raise ValueError(
+                f"shard {i} has {len(sh.columns)} columns, expected "
+                f"{len(ref.columns)}")
+        for c, (a, b) in enumerate(zip(sh.columns, ref.columns)):
+            ea, eb = a.encoder, b.encoder
+            if (ea.card, ea.k, ea.L) != (eb.card, eb.k, eb.L):
+                raise ValueError(
+                    f"shard {i} column {c} encoder {ea!r} differs from "
+                    f"shard 0's {eb!r}; shards must share global "
+                    f"cardinalities")
+        if interior and sh.n_rows % WORD_ROWS:
+            raise ValueError(
+                f"interior shard {i} has {sh.n_rows} rows, not a "
+                f"multiple of {WORD_ROWS}; results could not be "
+                f"concatenated exactly")
 
     @classmethod
     def build(
@@ -69,6 +109,8 @@ class ShardedIndex:
         partition_rows: Optional[int] = None,
         apply_heuristic: bool = True,
         column_names: Optional[Sequence[str]] = None,
+        cache_entries: int = SHARD_CACHE_ENTRIES,
+        cache_bytes: Optional[int] = SHARD_CACHE_BYTES,
     ) -> "ShardedIndex":
         """Cut ``table`` into row shards of ``shard_rows`` and index each.
 
@@ -89,7 +131,8 @@ class ShardedIndex:
                                    apply_heuristic=apply_heuristic,
                                    column_names=column_names)
             shards.append(builder.append(table[s:s + shard_rows]).finish())
-        return cls(shards, column_names=column_names)
+        return cls(shards, column_names=column_names,
+                   cache_entries=cache_entries, cache_bytes=cache_bytes)
 
     # -- stats (mirrors BitmapIndex) ---------------------------------------
     @property
@@ -146,22 +189,180 @@ class ShardedIndex:
     def equality_rows(self, col: int, value_rank: int) -> np.ndarray:
         return self.equality_bitmap(col, value_rank).set_bits()
 
+    def replace_shard(self, i: int, shard: BitmapIndex) -> None:
+        """Swap in a rebuilt shard; only *its* result-cache slice drops.
+
+        The incremental-reindex primitive: sibling shards keep their warm
+        cached results, offsets are recomputed (the new shard may have a
+        different row count as long as word alignment holds for interior
+        shards).
+        """
+        if not (0 <= i < len(self.shards)):
+            raise IndexError(f"shard {i} out of range [0, {len(self.shards)})")
+        ref = self.shards[0] if i else (self.shards[1] if len(self.shards) > 1
+                                        else shard)
+        self._validate_shard(i, shard, ref,
+                             interior=i + 1 < len(self.shards))
+        self.shards[i] = shard
+        self.offsets = np.concatenate(
+            [[0], np.cumsum([sh.n_rows for sh in self.shards])]).astype(np.int64)
+        self._result_caches[i] = self._new_cache()
+        self.generation += 1
+
+    def cache_stats(self) -> List[Dict]:
+        return [c.stats() for c in self._result_caches]
+
     def execute(self, e, backend: str = "auto", optimize: bool = True,
-                caches: Optional[List[Dict]] = None) -> EWAH:
+                caches: Optional[List[Dict]] = None, pool=None) -> EWAH:
         """Plan per shard, execute per shard, concatenate the EWAH results.
 
         ``caches`` (one operand dict per shard) lets a batch share loaded
         bitmaps across queries, exactly like ``Executor``'s cache does for a
-        monolithic index.
+        monolithic index.  ``pool`` (any ``concurrent.futures`` executor)
+        runs shards concurrently; shard tasks submit no further work, so a
+        dedicated pool is deadlock-free by construction.  Per-shard results
+        of ``Expr`` queries are memoized in the shard-local LRU keyed by
+        ``canonical_key`` — a repeat (or commutatively reordered) query only
+        re-executes shards whose cache was invalidated.
         """
         from .executor import Executor  # local: executor also dispatches here
         from .planner import plan
-        parts = []
-        for i, sh in enumerate(self.shards):
+        key = ((backend, bool(optimize), canonical_key(e))
+               if isinstance(e, Expr) else None)
+        # snapshot caches *before* shards: replace_shard writes the shard
+        # first, then installs a fresh cache, so reading in the opposite
+        # order means a racing replacement can pair an old cache with a new
+        # shard — and a result computed on a replaced shard then lands in
+        # the *retired* LRU object, which no future query reads (fresh-cache
+        # poisoning is impossible in either interleaving).  Process pools
+        # execute against their forked copy and re-fork on the next
+        # generation check; whole-result staleness across a mid-query
+        # replace is the serving layer's generation counter's job.
+        rcaches = list(self._result_caches)
+        shards = list(self.shards)
+
+        parts: List[Optional[EWAH]] = [None] * len(shards)
+        if key is not None:
+            for i in range(len(shards)):
+                parts[i] = rcaches[i].get(key)
+        missing = [i for i, p in enumerate(parts) if p is None]
+
+        def run_shard(i: int) -> EWAH:
+            sh = shards[i]
             node = plan(sh, e, optimize=optimize) if isinstance(e, Expr) else e
             cache = caches[i] if caches is not None else None
-            parts.append(Executor(sh, backend=backend, cache=cache).run(node))
+            return Executor(sh, backend=backend, cache=cache).run(node)
+
+        if isinstance(pool, ShardProcessPool) and len(missing) > 1:
+            fresh = pool.run_shards(e, missing, backend=backend,
+                                    optimize=optimize)
+        elif pool is not None and not isinstance(pool, ShardProcessPool) \
+                and len(missing) > 1:
+            fresh = list(pool.map(run_shard, missing))
+        else:
+            fresh = [run_shard(i) for i in missing]
+        for i, res in zip(missing, fresh):
+            parts[i] = res
+            if key is not None:
+                rcaches[i].put(key, res)
         return concat_bitmaps(parts)
+
+
+# ---------------------------------------------------------------------------
+# Fork-based shard execution: CPU-bound EWAH work beyond the GIL.
+# ---------------------------------------------------------------------------
+
+# indexes visible to forked workers, keyed per pool.  Entries are written in
+# the parent *before* its pool forks, so every worker inherits its own
+# pool's index by copy-on-write; keys are never reused across pools.
+_FORK_STATE: Dict[int, "ShardedIndex"] = {}
+_FORK_CACHES: Dict = {}
+_fork_keys = itertools.count()
+
+
+def _forked_run(args) -> EWAH:
+    """Worker-side shard execution (operand caches live per worker)."""
+    from .executor import Executor
+    from .planner import plan
+    pool_key, shard_i, e, backend, optimize = args
+    sh = _FORK_STATE[pool_key].shards[shard_i]
+    node = plan(sh, e, optimize=optimize) if isinstance(e, Expr) else e
+    cache = _FORK_CACHES.setdefault((pool_key, shard_i), {})
+    return Executor(sh, backend=backend, cache=cache).run(node)
+
+
+class ShardProcessPool:
+    """Fork-based worker pool for shard-parallel query execution.
+
+    A thread pool only overlaps shard work while NumPy holds the GIL
+    released; the compressed-domain hot path interleaves many small array
+    ops with Python control flow, so threads mostly serialize.  This pool
+    forks processes that inherit the whole ``ShardedIndex`` by
+    copy-on-write — the index is never pickled, a query ships as a tiny
+    (shard, expr) tuple and only compressed EWAH results cross the process
+    boundary (``EWAH.__reduce__`` keeps them words-only).  Pass an instance
+    as ``ShardedIndex.execute(..., pool=...)`` wherever a thread pool is
+    accepted.
+
+    Workers fork lazily on first use and automatically re-fork when the
+    index ``generation`` changes (``replace_shard``), so a worker never
+    serves a stale shard.  Per-worker operand caches persist across queries.
+    Note: forked workers should stay on the EWAH backend — a jax runtime
+    initialized in the parent is not fork-safe to reuse.
+    """
+
+    def __init__(self, index: "ShardedIndex", workers: Optional[int] = None):
+        if "fork" not in multiprocessing.get_all_start_methods():
+            raise RuntimeError(
+                "ShardProcessPool needs the 'fork' start method (POSIX); "
+                "use a thread pool on this platform")
+        self.index = index
+        self.workers = max(int(workers or (os.cpu_count() or 2)), 1)
+        self._key = next(_fork_keys)
+        self._executor: Optional[ProcessPoolExecutor] = None
+        self._forked_generation = -1
+        self._lock = threading.Lock()
+
+    def _ensure(self) -> ProcessPoolExecutor:
+        with self._lock:
+            if (self._executor is None
+                    or self._forked_generation != self.index.generation):
+                if self._executor is not None:
+                    self._executor.shutdown(wait=False)
+                    self._executor = None
+                _FORK_STATE[self._key] = self.index
+                self._executor = ProcessPoolExecutor(
+                    max_workers=min(self.workers, self.index.n_shards),
+                    mp_context=multiprocessing.get_context("fork"))
+                self._forked_generation = self.index.generation
+            return self._executor
+
+    def run_shards(self, e, shard_ids: Sequence[int],
+                   backend: str = "auto", optimize: bool = True) -> List[EWAH]:
+        args = [(self._key, i, e, backend, optimize) for i in shard_ids]
+        # a concurrent generation bump can shut this executor down between
+        # _ensure() and map(); re-ensure (against the new fork) and retry
+        for attempt in (0, 1):
+            ex = self._ensure()
+            try:
+                return list(ex.map(_forked_run, args))
+            except RuntimeError:
+                if attempt:
+                    raise
+        raise AssertionError("unreachable")
+
+    def shutdown(self, wait: bool = False) -> None:
+        with self._lock:
+            if self._executor is not None:
+                self._executor.shutdown(wait=wait)
+                self._executor = None
+            _FORK_STATE.pop(self._key, None)
+
+    def __del__(self):  # best effort; shutdown() is the real API
+        try:
+            self.shutdown()
+        except Exception:
+            pass
 
 
 AnyIndex = Union[BitmapIndex, ShardedIndex]

@@ -3,10 +3,21 @@
 `interpret=True` by default: this container is CPU-only; on TPU pass
 ``interpret=False`` (the kernels are written against TPU tiling rules:
 multiples of (8, 128) for 32-bit types).
+
+Shape bucketing (the JIT cold-start fix): ``jax.jit`` compiles one program
+per operand shape, so a query stream whose bitmaps span many distinct word
+counts used to trigger a fresh Pallas compile per count.  The wrappers now
+pad the word dimension up to power-of-two multiples of ``block_cols``
+(``bucket_cols``) and the operand dimension up to a power of two filled with
+the op's identity word, collapsing the compiled-shape universe to
+O(log max_words x log max_operands) entries that are reused across shards,
+queries, and index generations.  Callers that already hold bucketed operands
+can pass precomputed per-row clean flags (``np_row_flags``) so the sideband
+is not recomputed per query — the executor caches them next to the words.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +27,47 @@ from . import word_logical as _wl
 from . import popcount as _pc
 from . import bitpack_kernel as _bp
 from . import grad_compress as _gc
+
+_ALL_ONES = np.uint32(0xFFFFFFFF)
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (>= 1)."""
+    return 1 << max(0, int(x) - 1).bit_length() if x > 1 else 1
+
+
+def bucket_cols(n_words: int, block_cols: int = 1024) -> int:
+    """Bucketed (padded) word count: block_cols x next power of two.
+
+    All operands whose word counts fall in the same bucket share one
+    compiled kernel; padding words are zero and sliced away by the caller.
+    """
+    return block_cols * next_pow2(-(-max(int(n_words), 1) // block_cols))
+
+
+def np_row_flags(words: np.ndarray, block_cols: int = 1024) -> np.ndarray:
+    """Host-side per-row clean flags for a bucketed word row (or matrix).
+
+    ``words``' last axis must be a multiple of ``block_cols``; returns
+    DIRTY/CLEAN0/CLEAN1 per ``block_cols`` span.  Cacheable alongside the
+    padded words (one cheap pass at load time instead of one per query).
+    """
+    t = words.reshape(words.shape[:-1] + (-1, block_cols))
+    all0 = (t == 0).all(axis=-1)
+    all1 = (t == _ALL_ONES).all(axis=-1)
+    return np.where(all0, _wl.CLEAN0,
+                    np.where(all1, _wl.CLEAN1, _wl.DIRTY)).astype(np.int32)
+
+
+def _combine_row_flags(rf: np.ndarray, block_rows: int) -> np.ndarray:
+    """Conservatively merge (R, gc) per-row flags into (R/br, gc) tile flags
+    (a tile mixing clean values — or any dirty row — is DIRTY)."""
+    R, gc = rf.shape
+    t = rf.reshape(R // block_rows, block_rows, gc)
+    all0 = (t == _wl.CLEAN0).all(axis=1)
+    all1 = (t == _wl.CLEAN1).all(axis=1)
+    return np.where(all0, _wl.CLEAN0,
+                    np.where(all1, _wl.CLEAN1, _wl.DIRTY)).astype(np.int32)
 
 
 def _pad2(a: jax.Array, br: int, bc: int, fill=0) -> Tuple[jax.Array, Tuple[int, int]]:
@@ -27,45 +79,102 @@ def _pad2(a: jax.Array, br: int, bc: int, fill=0) -> Tuple[jax.Array, Tuple[int,
     return a, (R, C)
 
 
+def _pad_rows_np(rf: Optional[np.ndarray], rows: int, br: int) -> Optional[np.ndarray]:
+    pad = -(-rows // br) * br - rows
+    if rf is None or pad == 0:
+        return rf
+    # zero-filled pad rows are clean-zero
+    return np.pad(rf, ((0, pad), (0, 0)), constant_values=_wl.CLEAN0)
+
+
 def word_logical(a, b, op: str = "and", interpret: bool = True,
-                 block_rows: int = 8, block_cols: int = 1024) -> jax.Array:
+                 block_rows: int = 8, block_cols: int = 1024,
+                 bucket: bool = True,
+                 row_flags_a: Optional[np.ndarray] = None,
+                 row_flags_b: Optional[np.ndarray] = None) -> jax.Array:
     """Word-aligned logical op over (L, n_words) uint32 arrays.
 
-    Computes the clean-tile sideband and dispatches the skipping kernel —
-    the device-side equivalent of EWAH's Lemma 2.
+    Dispatches the clean-tile-skipping kernel — the device-side equivalent
+    of EWAH's Lemma 2.  With ``bucket`` (default) the word dimension pads to
+    a power-of-two bucket so one compiled kernel serves every operand count
+    in the bucket.  ``row_flags_*`` are optional precomputed ``np_row_flags``
+    sidebands for the (bucketed) inputs; absent, flags are computed on
+    device.
     """
     a = jnp.asarray(a, jnp.uint32)
     b = jnp.asarray(b, jnp.uint32)
-    ap, orig = _pad2(a, block_rows, block_cols)
-    bp_, _ = _pad2(b, block_rows, block_cols)
-    fa = _wl.tile_flags(ap, block_rows, block_cols)
-    fb = _wl.tile_flags(bp_, block_rows, block_cols)
+    bc_pad = bucket_cols(a.shape[1], block_cols) if bucket else block_cols
+    ap, orig = _pad2(a, block_rows, bc_pad)
+    bp_, _ = _pad2(b, block_rows, bc_pad)
+    if row_flags_a is None:
+        fa = _wl.tile_flags(ap, block_rows, block_cols)
+    else:
+        fa = jnp.asarray(_combine_row_flags(
+            _pad_rows_np(row_flags_a, orig[0], block_rows), block_rows))
+    if row_flags_b is None:
+        fb = _wl.tile_flags(bp_, block_rows, block_cols)
+    else:
+        fb = jnp.asarray(_combine_row_flags(
+            _pad_rows_np(row_flags_b, orig[0], block_rows), block_rows))
     out = _wl.word_logical(ap, bp_, fa, fb, op=op, block_rows=block_rows,
                            block_cols=block_cols, interpret=interpret)
     return out[: orig[0], : orig[1]]
 
 
 def logical_reduce(mat, op: str = "and", interpret: bool = True,
-                   block_rows: int = 8, block_cols: int = 1024) -> jax.Array:
+                   block_rows: int = 8, block_cols: int = 1024,
+                   bucket: bool = True,
+                   row_flags: Optional[np.ndarray] = None) -> jax.Array:
     """Reduce the rows of an (L, n_words) uint32 matrix to one word row.
 
     Tree reduction: each round halves the operand count by running the
     clean-tile-skipping ``word_logical`` kernel on the two matrix halves, so
     an L-way AND/OR costs ceil(log2 L) kernel launches over ever-smaller
     stacks — the dense executor path for n-ary query nodes.
+
+    With ``bucket`` (default) the words pad to a power-of-two column bucket
+    and the rows pad to a power of two filled with the op's identity word
+    (all-ones for AND, zero for OR/XOR), so every round halves exactly and
+    the compiled kernel shapes depend only on (pow2 rows, bucketed cols) —
+    reused across queries regardless of the precise operand count.
+    ``row_flags`` is the optional (L, cols/block_cols) precomputed clean
+    sideband of the input rows; it accelerates the first (widest) round,
+    later rounds recompute flags on device for their intermediate results.
     """
     assert op in ("and", "or", "xor"), op  # associative ops only
     mat = jnp.asarray(mat, jnp.uint32)
     assert mat.ndim == 2 and mat.shape[0] >= 1, mat.shape
+    L, C = mat.shape
+    if bucket:
+        Cp = bucket_cols(C, block_cols)
+        Lp = next_pow2(L)
+        identity = _ALL_ONES if op == "and" else np.uint32(0)
+        if Cp != C:
+            mat = jnp.pad(mat, ((0, 0), (0, Cp - C)))
+        if Lp != L:
+            mat = jnp.concatenate(
+                [mat, jnp.full((Lp - L, Cp), identity, jnp.uint32)], axis=0)
+        if row_flags is not None:
+            pad_flag = _wl.CLEAN1 if op == "and" else _wl.CLEAN0
+            row_flags = np.pad(row_flags, ((0, Lp - L), (0, 0)),
+                               constant_values=pad_flag)
+    first = True
     while mat.shape[0] > 1:
         half = mat.shape[0] // 2
+        rfa = rfb = None
+        if first and row_flags is not None:
+            # word_logical row-pads flags itself (CLEAN0, matching _pad2's
+            # zero rows), so any half size works
+            rfa, rfb = row_flags[:half], row_flags[half:2 * half]
         red = word_logical(mat[:half], mat[half:2 * half], op,
                            interpret=interpret, block_rows=block_rows,
-                           block_cols=block_cols)
+                           block_cols=block_cols, bucket=bucket,
+                           row_flags_a=rfa, row_flags_b=rfb)
         if mat.shape[0] % 2:  # odd row carries to the next round
             red = jnp.concatenate([red, mat[2 * half:]], axis=0)
         mat = red
-    return mat[0]
+        first = False
+    return mat[0][:C]
 
 
 def popcount_total(a, interpret: bool = True) -> jax.Array:

@@ -10,10 +10,15 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 BLOCK_ROWS = 8
 BLOCK_COLS = 1024
+
+# byte-wise popcount lookup: the host-side fallback used by
+# ``repro.core.ewah`` when NumPy lacks ``bitwise_count`` (numpy < 2.0)
+POPCOUNT8 = np.array([bin(i).count("1") for i in range(256)], dtype=np.uint8)
 
 
 def _popcount_u32(v):

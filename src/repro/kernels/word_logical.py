@@ -10,6 +10,17 @@ granularity, which is the granularity a TPU can actually skip at.
 
 Tiling: (SUBLANES=8, LANES=128) words per VREG op for 32-bit types; default
 block (8, 1024) = 32 KiB/operand in VMEM.
+
+Compilation contract: ``word_logical`` is jit-compiled once per *input
+shape* (plus static block/op params).  Callers must therefore keep the
+shape universe small — ``repro.kernels.ops`` pads the word dimension to
+power-of-two multiples of ``block_cols`` and operand stacks to power-of-two
+row counts, so one compiled program here serves every operand count and
+word count in a bucket, across shards, queries, and index rebuilds.  The
+``tile_flags`` sideband can equally be produced host-side per row
+(``ops.np_row_flags``) and cached by the executor; a conservative merge of
+row flags into tile flags is valid because DIRTY only means "read the
+words".
 """
 from __future__ import annotations
 

@@ -8,9 +8,15 @@ Production-shaped serving on a dependency-free stack (stdlib ``http.server``
   Results are memoized in an LRU cache keyed by the *structural* canonical
   key of the expression (``repro.core.expr.canonical_key``), so a repeated —
   or commutatively reordered — query is served from cache without touching
-  a bitmap.  Swapping in a rebuilt index (``set_index``) invalidates the
-  cache atomically via a generation counter.  The index may be a monolithic
-  ``BitmapIndex`` or a ``ShardedIndex``; execution dispatches per shard.
+  a bitmap.  The cache evicts by **total EWAH bytes** (``cache_bytes``), not
+  just entry count — results span orders of magnitude in size — and the
+  byte budget + live usage are exposed in ``/stats``.  Swapping in a rebuilt
+  index (``set_index``) invalidates the cache atomically via a generation
+  counter; ``replace_shard`` swaps one shard and keeps the other shards'
+  local result caches warm.  The index may be a monolithic ``BitmapIndex``
+  or a ``ShardedIndex``; sharded execution fans out on a dedicated shard
+  pool (shard tasks submit no further work, so the two pools cannot
+  deadlock).
 * ``serve()`` — a threaded HTTP server exposing the service:
     POST /query             {"query": <expr>}          -> one result
     POST /query             {"queries": [<expr>, ...]} -> batched results
@@ -33,7 +39,6 @@ from __future__ import annotations
 import argparse
 import json
 import threading
-from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, List, Optional, Sequence
@@ -43,7 +48,10 @@ import numpy as np
 from repro.core import BitmapIndex, ShardedIndex, lex_sort, synth
 from repro.core.expr import And, Eq, Expr, In, Not, Or, Range, canonical_key
 from repro.core.executor import execute
+from repro.core.lru import LRUCache
 from repro.core.planner import explain, plan
+
+DEFAULT_CACHE_BYTES = 64 << 20  # total EWAH payload budget for the result LRU
 
 
 def parse_expr(obj: Dict) -> Expr:
@@ -93,66 +101,45 @@ def expr_to_json(e: Expr) -> Dict:
     raise TypeError(f"cannot serialize {e!r}")
 
 
-class _LRUCache:
-    """Thread-safe LRU with hit/miss counters (stdlib-only)."""
-
-    _MISS = object()
-
-    def __init__(self, capacity: int):
-        self.capacity = max(int(capacity), 0)
-        self._od: "OrderedDict" = OrderedDict()
-        self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
-
-    def get(self, key):
-        with self._lock:
-            val = self._od.get(key, self._MISS)
-            if val is self._MISS:
-                self.misses += 1
-                return None
-            self._od.move_to_end(key)
-            self.hits += 1
-            return val
-
-    def put(self, key, val):
-        if self.capacity == 0:
-            return
-        with self._lock:
-            self._od[key] = val
-            self._od.move_to_end(key)
-            while len(self._od) > self.capacity:
-                self._od.popitem(last=False)
-
-    def clear(self):
-        with self._lock:
-            self._od.clear()
-
-    def stats(self) -> Dict:
-        with self._lock:
-            return {"entries": len(self._od), "capacity": self.capacity,
-                    "hits": self.hits, "misses": self.misses}
-
-
 class QueryService:
     """Pooled, caching query service over one (re-buildable) index.
 
     Every query executes on a bounded worker pool; results are cached by the
     canonical structural key of the expression (plus backend and an index
     *generation* counter, so a rebuilt index can never serve stale rows).
+    The result cache is size-aware: eviction honours both an entry cap and a
+    byte budget over the cached EWAH payloads.  Sharded indexes execute
+    shard-parallel on a second, dedicated pool.
     """
 
     def __init__(self, index, backend: str = "auto",
                  max_rows: int = 10_000, pool_workers: int = 4,
-                 cache_entries: int = 256):
+                 cache_entries: int = 256,
+                 cache_bytes: Optional[int] = DEFAULT_CACHE_BYTES,
+                 shard_processes: int = 0):
         self.index = index
         self.backend = backend
         self.max_rows = max_rows  # cap rows per response, count is exact
-        self.cache = _LRUCache(cache_entries)
+        self.cache = LRUCache(capacity=cache_entries, max_bytes=cache_bytes,
+                              sizeof=lambda bm: bm.size_bytes)
         self._generation = 0
-        self._pool = ThreadPoolExecutor(max_workers=max(int(pool_workers), 1),
-                                        thread_name_prefix="query")
         self.pool_workers = max(int(pool_workers), 1)
+        self._pool = ThreadPoolExecutor(max_workers=self.pool_workers,
+                                        thread_name_prefix="query")
+        # shard fan-out pool: query workers wait on shard tasks, shard tasks
+        # submit nothing, so the wait graph is acyclic (no pool deadlock).
+        # ``shard_processes`` > 0 swaps in a fork-based ShardProcessPool so
+        # CPU-bound EWAH shard work runs beyond the GIL (EWAH backend only —
+        # a parent jax runtime is not fork-safe).
+        self.shard_processes = int(shard_processes)
+        self._shard_pool = self._make_shard_pool()
+
+    def _make_shard_pool(self):
+        if self.shard_processes > 0 and isinstance(self.index, ShardedIndex):
+            from repro.core.shard import ShardProcessPool
+            return ShardProcessPool(self.index, workers=self.shard_processes)
+        return ThreadPoolExecutor(max_workers=self.pool_workers,
+                                  thread_name_prefix="shard")
 
     # -- lifecycle ---------------------------------------------------------
     def set_index(self, index) -> None:
@@ -169,12 +156,29 @@ class QueryService:
         self.index = index
         self._generation += 1
         self.cache.clear()
+        self._shard_pool.shutdown(wait=False)
+        self._shard_pool = self._make_shard_pool()
+
+    def replace_shard(self, i: int, shard) -> None:
+        """Swap one shard of a ``ShardedIndex`` in place.
+
+        The full-result cache is retired via the generation counter (a
+        cached result spans all shards), but the *other* shards' local
+        result caches stay warm — re-running a cached query only recomputes
+        the replaced slice."""
+        idx = self.index
+        if not isinstance(idx, ShardedIndex):
+            raise TypeError("replace_shard needs a ShardedIndex")
+        idx.replace_shard(i, shard)
+        self._generation += 1
+        self.cache.clear()
 
     def invalidate_cache(self) -> None:
         self.cache.clear()
 
     def close(self) -> None:
         self._pool.shutdown(wait=False)
+        self._shard_pool.shutdown(wait=False)
 
     # -- execution ---------------------------------------------------------
     def _snapshot(self):
@@ -190,7 +194,8 @@ class QueryService:
         bm = self.cache.get(key)
         if bm is not None:
             return bm, True
-        bm = execute(idx, e, backend=self.backend, cache=op_cache)
+        pool = self._shard_pool if isinstance(idx, ShardedIndex) else None
+        bm = execute(idx, e, backend=self.backend, cache=op_cache, pool=pool)
         self.cache.put(key, bm)
         return bm, False
 
@@ -255,6 +260,7 @@ class QueryService:
         if isinstance(idx, ShardedIndex):
             out["n_shards"] = idx.n_shards
             out["shard_rows"] = np.diff(idx.offsets).tolist()
+            out["shard_caches"] = idx.cache_stats()
         return out
 
 
@@ -347,10 +353,16 @@ def main(argv=None):
                     help="query worker pool size")
     ap.add_argument("--cache", type=int, default=256,
                     help="LRU result-cache entries (0 disables)")
+    ap.add_argument("--cache-mb", type=float, default=DEFAULT_CACHE_BYTES / 2**20,
+                    help="result-cache byte budget in MiB (total EWAH bytes)")
+    ap.add_argument("--shard-procs", type=int, default=0,
+                    help="shard-parallel worker *processes* (0 = thread pool)")
     args = ap.parse_args(argv)
     service = QueryService(_demo_index(args.rows, args.shards),
                            backend=args.backend, pool_workers=args.workers,
-                           cache_entries=args.cache)
+                           cache_entries=args.cache,
+                           cache_bytes=int(args.cache_mb * 2**20),
+                           shard_processes=args.shard_procs)
     srv = make_server(service, args.host, args.port)
     print(f"[query_api] serving {args.rows} rows on "
           f"http://{args.host}:{srv.server_address[1]} "

@@ -1,0 +1,164 @@
+"""Vectorized EWAH run-list path vs the segment-cursor reference oracle.
+
+The contract is *word identity*: for any inputs, the vectorized ops must
+produce exactly the words ``binary_op`` (the retained ``_SegCursor`` merge)
+produces — not merely the same boolean content — so the compressed streams
+stay canonical and cache/equality semantics are preserved.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ewah import (EWAH, RunList, and_many, binary_op, or_many,
+                             vec_binary_op)
+
+OPS = ("and", "or", "xor", "andnot")
+
+
+def structured_bits(seed: int, n: int, style: int) -> np.ndarray:
+    """Random bitmaps spanning the codec's regimes: uniform noise, clean-run
+    dominated, literal fringes, and degenerate all-0 / all-1."""
+    rng = np.random.default_rng(seed)
+    if style == 0:      # uniform density
+        return rng.random(n) < rng.uniform(0, 1)
+    if style == 1:      # all zeros
+        return np.zeros(n, bool)
+    if style == 2:      # all ones
+        return np.ones(n, bool)
+    # clean runs interleaved with literal stretches (sorted-table shape)
+    out = np.zeros(n, bool)
+    pos = 0
+    while pos < n:
+        seg = int(rng.integers(1, max(2, n // 4)))
+        kind = rng.integers(0, 3)
+        if kind == 1:
+            out[pos:pos + seg] = True
+        elif kind == 2:
+            out[pos:pos + min(seg, n - pos)] = \
+                rng.random(min(seg, n - pos)) < 0.5
+        pos += seg
+    return out
+
+
+def bitmap_pair_strategy(max_n=4096):
+    return st.builds(
+        lambda seed, n, sa, sb: (structured_bits(seed, n, sa),
+                                 structured_bits(seed + 1, n, sb)),
+        st.integers(0, 2**31), st.integers(0, max_n),
+        st.integers(0, 3), st.integers(0, 3))
+
+
+@settings(max_examples=200, deadline=None)
+@given(bitmap_pair_strategy())
+def test_binary_ops_word_identical_to_cursor_oracle(pair):
+    a, b = pair
+    A, B = EWAH.from_bool(a), EWAH.from_bool(b)
+    for op in OPS:
+        ref = binary_op(A, B, op)
+        got = vec_binary_op(A, B, op)
+        assert got.n_bits == ref.n_bits
+        assert np.array_equal(got.words, ref.words), op
+        # boolean semantics as a second, independent check
+        assert np.array_equal(got.to_bool(), ref.to_bool()), op
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2**31), st.integers(1, 2048), st.integers(2, 9))
+def test_nary_word_identical_to_cursor_folds(seed, n, k):
+    mats = [structured_bits(seed + i, n, (seed + i) % 4) for i in range(k)]
+    bms = [EWAH.from_bool(m) for m in mats]
+    ref_and = bms[0]
+    for bm in bms[1:]:
+        ref_and = binary_op(ref_and, bm, "and")
+    items = list(bms)
+    while len(items) > 1:
+        items = [binary_op(items[i], items[i + 1], "or")
+                 if i + 1 < len(items) else items[i]
+                 for i in range(0, len(items), 2)]
+    assert np.array_equal(and_many(bms).words, ref_and.words)
+    assert np.array_equal(or_many(bms).words, items[0].words)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 2**31), st.integers(0, 4096), st.integers(0, 3))
+def test_count_matches_boolean_popcount(seed, n, style):
+    bits = structured_bits(seed, n, style)
+    e = EWAH.from_bool(bits)
+    assert e.count() == int(bits.sum())
+    assert e.count() == e.count()  # memoized second read
+
+
+def test_zero_row_bitmaps():
+    z = EWAH.from_bool(np.zeros(0, bool))
+    for op in OPS:
+        ref = binary_op(z, z, op)
+        got = vec_binary_op(z, z, op)
+        assert np.array_equal(got.words, ref.words)
+        assert got.n_bits == 0
+    assert and_many([z, z]).n_bits == 0
+    assert or_many([z, z]).n_bits == 0
+    assert z.count() == 0
+
+
+def test_all_ones_and_all_zero_runs():
+    n = 10_000_000  # multi-marker clean runs (MAX_CLEAN splitting)
+    one = EWAH.from_bool(np.ones(n, bool))
+    zero = EWAH.from_bool(np.zeros(n, bool))
+    for op in OPS:
+        for x, y in ((one, zero), (zero, one), (one, one), (zero, zero)):
+            assert np.array_equal(vec_binary_op(x, y, op).words,
+                                  binary_op(x, y, op).words), op
+    assert (one | zero).size_words == one.size_words
+    assert one.count() == n
+
+
+def test_unaligned_tail_padding():
+    # n_bits not a multiple of 32: pad bits must stay clear through the ops
+    for n in (1, 31, 33, 95, 1027):
+        rng = np.random.default_rng(n)
+        a, b = rng.random(n) < 0.5, rng.random(n) < 0.2
+        A, B = EWAH.from_bool(a), EWAH.from_bool(b)
+        for op in OPS:
+            assert np.array_equal(vec_binary_op(A, B, op).words,
+                                  binary_op(A, B, op).words)
+        assert (A | B).count() == int((a | b).sum())
+
+
+def test_runlist_is_memoized_and_canonical():
+    rng = np.random.default_rng(7)
+    bits = rng.random(5000) < 0.3
+    e = EWAH.from_bool(bits)
+    rl = e.runlist()
+    assert e.runlist() is rl  # memoized
+    assert isinstance(rl, RunList)
+    assert rl.bounds[0] == 0 and rl.n_words == e.n_words_uncompressed
+    # canonical: adjacent intervals differ in kind, literals have no clean words
+    assert (np.diff(rl.bounds) > 0).all()
+    assert (rl.kinds[1:] != rl.kinds[:-1]).all()
+    assert not np.isin(rl.lits, (0, 0xFFFFFFFF)).any()
+
+
+def test_nary_short_circuits_stay_exact():
+    n = 64 * 1024
+    a = np.zeros(n, bool); a[:100] = True
+    b = np.zeros(n, bool); b[-100:] = True
+    bms = [EWAH.from_bool(a), EWAH.from_bool(b),
+           EWAH.from_bool(np.ones(n, bool))]
+    # AND empties after the first fold; OR saturates with the all-ones operand
+    assert and_many(bms).count() == 0
+    full = or_many([EWAH.from_bool(np.ones(n, bool))] * 3)
+    assert full.count() == n
+    ref = binary_op(binary_op(bms[0], bms[1], "and"), bms[2], "and")
+    assert np.array_equal(and_many(bms).words, ref.words)
+
+
+@pytest.mark.parametrize("op", OPS)
+def test_result_runlist_reuse(op):
+    # results carry their run-list so chained ops skip re-decoding
+    rng = np.random.default_rng(3)
+    A = EWAH.from_bool(rng.random(3000) < 0.4)
+    B = EWAH.from_bool(rng.random(3000) < 0.6)
+    out = vec_binary_op(A, B, op)
+    assert out._rl is not None
+    chained = out & A
+    assert np.array_equal(chained.words, binary_op(out, A, "and").words)

@@ -1,0 +1,197 @@
+"""Durable store benchmark: warm start vs cold rebuild, spill-sort memory.
+
+Measures (and asserts) the two storage claims of the durable-store PR:
+
+* **Warm start** — opening a saved index with ``load(mmap=True)`` must be at
+  least 10x faster than a cold rebuild (external sort + streaming build);
+  in practice it is orders of magnitude faster, since open touches only the
+  preamble + JSON TOC while rebuild touches every row.  Queries on the
+  mmap'd index are asserted bit-identical to the in-memory build.
+* **Bounded sort memory** — the spill-to-disk external sort's Python-level
+  buffering (``SortStats.peak_buffer_bytes``: chunk key/perm buffers + the
+  bounded k-way merge windows) must stay under the configured run budget,
+  and a subprocess RSS probe records end-to-end peak memory of spilled vs
+  in-memory sorting for the JSON artifact.
+
+Writes ``BENCH_store.json`` (uploaded as a CI artifact alongside
+``BENCH_exec.json``).
+
+    PYTHONPATH=src python benchmarks/bench_store.py [--tiny] \
+        [--out BENCH_store.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import (IndexBuilder, ShardedIndex, SortStats, col, execute,
+                        external_merge_sort_perm, external_sorted_chunks,
+                        load, synth)
+
+try:  # package-style and script-style execution both work
+    from .common import emit
+except ImportError:  # pragma: no cover
+    from common import emit
+
+SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+
+# child-process RSS probe: sort a memmapped table, report peak RSS in KiB
+_CHILD = r"""
+import json, resource, sys
+import numpy as np
+sys.path.insert(0, {src!r})
+from repro.core import SortStats, external_merge_sort_perm
+table = np.load({table!r}, mmap_mode="r")
+stats = SortStats()
+external_merge_sort_perm(table, {chunk!r}, spill_dir={spill!r}, stats=stats)
+print(json.dumps({{
+    "maxrss_kib": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss,
+    "peak_buffer_bytes": stats.peak_buffer_bytes,
+    "n_runs": stats.n_runs,
+}}))
+"""
+
+
+def _make_table(n: int, rng: np.random.Generator) -> np.ndarray:
+    t = np.stack([rng.integers(0, 7, n),
+                  (rng.pareto(1.5, n) * 40).astype(np.int64) % 2000,
+                  rng.integers(0, 40_000, n)], axis=1)
+    table, _ = synth.factorize(t)
+    return table[rng.permutation(n)]
+
+
+def _rss_probe(table_path: str, chunk_rows: int, spill_dir) -> dict:
+    code = _CHILD.format(src=os.path.abspath(SRC), table=table_path,
+                         chunk=chunk_rows, spill=spill_dir)
+    out = subprocess.run([sys.executable, "-c", code], check=True,
+                         capture_output=True, text=True)
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def _query_suite():
+    return [
+        (col(0) == 2) & col(1).between(0, 50),
+        col(2).isin([1, 5, 9]) | (col(0) == 0),
+        ~(col(1) == 3) & (col(0) == 1),
+    ]
+
+
+def run(n: int = 200_000, chunk_rows: int = 8192,
+        out_path: str = "BENCH_store.json") -> dict:
+    rng = np.random.default_rng(0)
+    table = _make_table(n, rng)
+    cards = [int(table[:, c].max()) + 1 for c in range(table.shape[1])]
+    results: dict = {"n_rows": n, "chunk_rows": chunk_rows}
+
+    with tempfile.TemporaryDirectory() as tmp:
+        store_path = os.path.join(tmp, "index.ridx")
+
+        def cold_rebuild(store: bool):
+            builder = IndexBuilder(
+                cards, k=2, partition_rows=((n // 4) // 32) * 32 or None,
+                store_path=store_path if store else None)
+            for chunk in external_sorted_chunks(
+                    table, chunk_rows, spill_dir=os.path.join(tmp, "runs")):
+                builder.append(chunk)
+            return builder.finish()
+
+        t0 = time.perf_counter()
+        idx_mem = cold_rebuild(store=False)
+        rebuild_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        cold_rebuild(store=True)  # also persists the store file
+        rebuild_store_s = time.perf_counter() - t0
+
+        opens = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            idx_mm = load(store_path, mmap=True)
+            opens.append(time.perf_counter() - t0)
+        open_s = sorted(opens)[len(opens) // 2]
+
+        for e in _query_suite():
+            assert execute(idx_mm, e) == execute(idx_mem, e), e
+        speedup = rebuild_s / open_s
+        results["warm_start"] = {
+            "rebuild_s": round(rebuild_s, 4),
+            "rebuild_and_persist_s": round(rebuild_store_s, 4),
+            "mmap_open_s": round(open_s, 6),
+            "speedup": round(speedup, 1),
+            "store_bytes": os.path.getsize(store_path),
+        }
+        emit("store_mmap_open", open_s * 1e6, f"{speedup:.0f}x_vs_rebuild")
+        assert speedup >= 10, (
+            f"warm start must be >=10x faster than cold rebuild, got "
+            f"{speedup:.1f}x ({open_s:.4f}s open vs {rebuild_s:.4f}s rebuild)")
+
+        # sharded warm start: open the same data as a 4-shard directory
+        shard_rows = (-(-n // 4) // 32) * 32
+        sharded = ShardedIndex.build(table, shard_rows=shard_rows, k=2,
+                                     cards=cards)
+        shard_dir = os.path.join(tmp, "shards")
+        sharded.save(shard_dir)
+        t0 = time.perf_counter()
+        sh_mm = ShardedIndex.load(shard_dir, mmap=True)
+        sharded_open_s = time.perf_counter() - t0
+        assert sh_mm.execute(_query_suite()[0]) == \
+            execute(sharded, _query_suite()[0])
+        results["warm_start"]["sharded_open_s"] = round(sharded_open_s, 6)
+
+        # spilled-sort memory: structural budget assert + subprocess RSS probe
+        table_path = os.path.join(tmp, "table.npy")
+        np.save(table_path, table)
+        stats = SortStats()
+        perm = external_merge_sort_perm(table, chunk_rows,
+                                        spill_dir=os.path.join(tmp, "r2"),
+                                        stats=stats)
+        assert len(perm) == n
+        row_bytes = table.dtype.itemsize * table.shape[1]
+        # run generation: chunk keys+perm; merge: per-run windows + out block
+        budget = max(chunk_rows * (16 + row_bytes),
+                     (stats.n_runs + 1) * stats.merge_block_rows * 8
+                     + stats.merge_block_rows * 8)
+        assert stats.peak_buffer_bytes <= budget, (
+            f"sorter buffered {stats.peak_buffer_bytes} bytes, budget "
+            f"{budget}")
+        spill = _rss_probe(table_path, chunk_rows, os.path.join(tmp, "r3"))
+        full = _rss_probe(table_path, n + 1, None)  # in-memory full sort
+        results["spill_sort"] = {
+            "n_runs": stats.n_runs,
+            "merge_block_rows": stats.merge_block_rows,
+            "peak_buffer_bytes": stats.peak_buffer_bytes,
+            "budget_bytes": budget,
+            "spilled_bytes": stats.spilled_bytes,
+            "child_spill_maxrss_kib": spill["maxrss_kib"],
+            "child_fullsort_maxrss_kib": full["maxrss_kib"],
+        }
+        emit("spill_sort_peak_buffer", stats.peak_buffer_bytes,
+             f"budget_{budget}")
+        emit("spill_vs_full_rss_kib", spill["maxrss_kib"],
+             f"full_{full['maxrss_kib']}")
+
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_path}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized run (fast, same asserts)")
+    ap.add_argument("--rows", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_store.json")
+    args = ap.parse_args()
+    n = args.rows or (40_000 if args.tiny else 200_000)
+    run(n, chunk_rows=4096 if args.tiny else 8192, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,19 +1,40 @@
-"""Quickstart: sorted EWAH bitmap indexes — streaming builds, sharded
-execution, the composable query API, and the cached, pooled query service.
+"""Quickstart: sorted EWAH bitmap indexes — spill-to-disk sorting, durable
+memory-mapped stores, the composable query API, and warm-start serving.
+
+The build-once / serve-many flow this walks through:
+
+    sort (spilled runs) -> stream into IndexBuilder(store_path=...) ->
+    durable .ridx files -> ShardedIndex.load(dir, mmap=True) ->
+    QueryService.from_dir(dir)   (or:  python -m repro.serve.query_api
+                                       --index-dir DIR)
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
+import shutil
+import tempfile
+import time
+
 import numpy as np
 
 from repro.core import (BitmapIndex, IndexBuilder, QueryBatch, ShardedIndex,
-                        col, execute, explain, external_sorted_chunks,
-                        lex_sort, order_columns, plan, random_shuffle)
+                        SortStats, col, execute, explain,
+                        external_sorted_chunks, lex_sort, order_columns,
+                        plan, random_shuffle)
 from repro.core import query as q
 from repro.core import synth
 from repro.serve.query_api import QueryService
 
 
 def main():
+    workdir = tempfile.mkdtemp(prefix="repro-quickstart-")
+    try:
+        _run(workdir)
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+def _run(workdir):
     rng = np.random.default_rng(0)
 
     # A fact table: 50k facts, 3 dimensions of very different cardinalities
@@ -22,25 +43,34 @@ def main():
     cards = [len(u) for u in uniques]
     print(f"fact table: {len(ranked)} rows, cardinalities {cards}")
 
-    # --- the paper's recipe, at streaming scale -----------------------------
+    # --- the paper's recipe, at out-of-core scale ---------------------------
     # 1. order columns (high-cardinality first when values repeat >= 32x)
     order = order_columns(cards, "card_desc")
     # 2. sort the fact table lexicographically *without* holding it in
-    #    memory: chunk-sorted runs + k-way merge (external merge sort).
-    #    Block-wise sorting — sort chunks, concatenate — would lose most of
-    #    the compression (paper §4.4); the merge recovers the full sort.
-    # 3. stream the sorted chunks into an incremental IndexBuilder.
+    #    memory: chunk-sorted runs spill to disk as packed-uint64 key +
+    #    permutation memmap files, then a bounded-memory k-way merge
+    #    recovers the full sort (block-wise sorting — sort chunks,
+    #    concatenate — would lose most of the compression, paper §4.4).
+    # 3. stream the merged chunks into an IndexBuilder that emits every
+    #    completed partition straight into a durable store file: the table
+    #    is sorted, indexed AND persisted in O(chunk + partition) memory.
     names = ["region", "day", "user"]
-    builder = IndexBuilder(cards, k=1, column_names=names)
-    for chunk in external_sorted_chunks(ranked, chunk_rows=8192,
-                                        col_order=order):
+    store_path = os.path.join(workdir, "index.ridx")
+    stats = SortStats()
+    builder = IndexBuilder(cards, k=1, column_names=names,
+                           partition_rows=8192, store_path=store_path)
+    for chunk in external_sorted_chunks(
+            ranked, chunk_rows=8192, col_order=order,
+            spill_dir=os.path.join(workdir, "runs"), stats=stats):
         builder.append(chunk)
-    idx_sorted = builder.finish()
+    idx_sorted = builder.finish()  # the store, reopened mmap'd + zero-copy
+    print(f"spilled {stats.n_runs} runs ({stats.spilled_bytes / 1e6:.1f} MB) "
+          f"to disk; peak sort buffering {stats.peak_buffer_bytes / 1e3:.0f} KB")
 
-    # identical to the one-shot in-memory build
+    # identical to the one-shot in-memory build (same partitioning)
     sorted_table = ranked[lex_sort(ranked, order)]
-    assert idx_sorted.size_words == \
-        BitmapIndex.build(sorted_table, k=1, cards=cards).size_words
+    assert idx_sorted.size_words == BitmapIndex.build(
+        sorted_table, k=1, cards=cards, partition_rows=8192).size_words
 
     # versus an unsorted baseline
     shuffled = ranked[random_shuffle(ranked, rng)]
@@ -66,7 +96,7 @@ def main():
     print("plan:")
     print(explain(plan(idx_sorted, expr)))
 
-    hits = execute(idx_sorted, expr)
+    hits = execute(idx_sorted, expr)  # operands are mmap'd file views
     print(f"-> {hits.count()} rows, result bitmap {hits.size_words} words")
 
     # bit-identical to a naive row scan
@@ -75,14 +105,23 @@ def main():
                                                   names=names))
     print("verified against the row-scan oracle.")
 
-    # --- sharded execution --------------------------------------------------
+    # --- sharded execution + a durable shard directory ----------------------
     # split rows into shards (the scale-out unit): per-shard plans adapt to
-    # each shard's compressed sizes, results concatenate exactly
+    # each shard's compressed sizes, results concatenate exactly.  Saving
+    # writes one atomic store file per shard + a manifest; replace one
+    # shard's file and live services pick it up via /admin/reload.
     sharded = ShardedIndex.build(sorted_table, shard_rows=8192, k=1,
                                  cards=cards, column_names=names)
     assert execute(sharded, expr) == hits
+    shard_dir = os.path.join(workdir, "shards")
+    sharded.save(shard_dir)
+    t0 = time.perf_counter()
+    warm = ShardedIndex.load(shard_dir, mmap=True)
+    open_s = time.perf_counter() - t0
+    assert execute(warm, expr) == hits
     print(f"\nsharded: {sharded.n_shards} shards, "
-          f"{sharded.size_words} words total — same bits, same answer")
+          f"{sharded.size_words} words total — saved to {shard_dir}, "
+          f"reopened mmap'd in {open_s * 1e3:.1f} ms, same bits, same answer")
 
     # --- batched execution shares loaded operands ---------------------------
     batch = QueryBatch([
@@ -90,20 +129,24 @@ def main():
         (col("region") == v_region) | (col("day") == v_day),
         ~(col("region") == v_region) & col("day").between(0, 9),
     ])
-    for e, bm in zip(batch.exprs, batch.execute(sharded)):
+    for e, bm in zip(batch.exprs, batch.execute(warm)):
         print(f"batch {e}: {bm.count()} rows")
 
-    # --- the cached, pooled query service -----------------------------------
-    # worker pool + LRU result cache keyed by the *canonical* structural key
-    # of the expression, so a repeat (or commutatively reordered) query never
-    # touches a bitmap; swapping in a rebuilt index invalidates the cache
-    svc = QueryService(sharded, pool_workers=4, cache_entries=128)
+    # --- warm-start serving -------------------------------------------------
+    # the service opens the saved shard files (mmap) instead of rebuilding:
+    # restart-to-serving is milliseconds.  Results are cached by canonical
+    # expression key with an optional TTL; /admin/reload swaps in shards
+    # whose files changed on disk, keeping sibling shard caches warm.
+    # Same thing from the CLI:  python -m repro.serve.query_api --index-dir
+    svc = QueryService.from_dir(shard_dir, pool_workers=4,
+                                cache_entries=128, cache_ttl=300.0)
     first = svc.query(expr)
     again = svc.query(expr)
     stats = svc.stats()["cache"]
     print(f"\nservice: count={first['count']} cached={first['cached']} "
           f"then cached={again['cached']} "
-          f"(cache {stats['hits']} hits / {stats['misses']} misses)")
+          f"(cache {stats['hits']} hits / {stats['misses']} misses, "
+          f"ttl={stats['ttl']}s)")
     assert again["rows"] == first["rows"]
     svc.close()
 

@@ -10,12 +10,15 @@ from .ewah import EWAH, binary_op, and_many, or_many
 from .wah import WAH
 from .encoding import ColumnEncoder, bitmaps_needed, choose_k, unrank_lex, revolving_door
 from .sorting import (
-    lex_sort, gray_sort, lex_sort_bits, random_sort, random_shuffle,
-    block_sort, external_merge_sort_perm, external_sorted_chunks,
-    order_columns, order_columns_freq_aware,
+    SortStats, lex_sort, gray_sort, lex_sort_bits, random_sort,
+    random_shuffle, block_sort, external_merge_sort_perm,
+    external_sorted_chunks, order_columns, order_columns_freq_aware,
 )
 from .index import (BitmapIndex, ColumnIndex, IndexBuilder, concat_bitmaps,
                     validate_partition_rows)
+from .store import (StoreCorruptError, StoreError, StoreVersionError,
+                    StoreWriter, load, load_sharded, save, save_sharded,
+                    write_shard_file)
 from .expr import (And, Col, Const, Eq, Expr, In, Not, Or, Range,
                    canonical_key, col)
 from .planner import explain, plan
@@ -28,11 +31,13 @@ __all__ = [
     "pack_bits", "unpack_bits", "pack_matrix",
     "EWAH", "binary_op", "and_many", "or_many", "WAH",
     "ColumnEncoder", "bitmaps_needed", "choose_k", "unrank_lex", "revolving_door",
-    "lex_sort", "gray_sort", "lex_sort_bits", "random_sort", "random_shuffle",
-    "block_sort", "external_merge_sort_perm", "external_sorted_chunks",
-    "order_columns", "order_columns_freq_aware",
+    "SortStats", "lex_sort", "gray_sort", "lex_sort_bits", "random_sort",
+    "random_shuffle", "block_sort", "external_merge_sort_perm",
+    "external_sorted_chunks", "order_columns", "order_columns_freq_aware",
     "BitmapIndex", "ColumnIndex", "IndexBuilder", "ShardedIndex",
     "concat_bitmaps", "validate_partition_rows",
+    "StoreError", "StoreVersionError", "StoreCorruptError", "StoreWriter",
+    "save", "load", "save_sharded", "load_sharded", "write_shard_file",
     "Expr", "Col", "col", "Eq", "In", "Range", "And", "Or", "Not", "Const",
     "canonical_key",
     "plan", "explain", "execute", "execute_rows", "QueryBatch",

@@ -135,10 +135,23 @@ class EWAH:
 
     @classmethod
     def from_positions(cls, positions: np.ndarray, n_bits: int) -> "EWAH":
-        """Build directly from sorted set-bit positions — O(set bits)."""
+        """Build directly from sorted set-bit positions — O(set bits).
+
+        Emits a ``RunList`` directly (no ``_emit`` round-trip): each touched
+        word becomes a literal item, gaps between touched words become
+        clean-zero runs, and one vectorized canonicalization pass merges /
+        reclassifies — so the words come out identical to the historical
+        segment path *and* the freshly built bitmap's run-list memo is
+        already warm for its first logical op.
+        """
         positions = np.asarray(positions, dtype=np.int64)
+        n_words = -(-n_bits // WORD_BITS)
         if positions.size == 0:
-            return cls(_emit(iter([("run", 0, -(-n_bits // WORD_BITS))])), n_bits)
+            rl = (_groups_to_runlist(
+                np.array([KIND_CLEAN0], np.int8),
+                np.array([n_words], np.int64),
+                np.zeros(1, WORD_DTYPE)) if n_words else _EMPTY_RUNLIST)
+            return _rl_wrap(rl, n_bits)
         word_idx = positions >> 5
         bit_val = np.uint32(1) << (positions & 31).astype(np.uint32)
         # or-reduce duplicate word indices
@@ -146,24 +159,26 @@ class EWAH:
         vals = np.zeros(len(uniq), dtype=np.uint64)
         np.bitwise_or.at(vals, inv, bit_val.astype(np.uint64))
         vals = vals.astype(WORD_DTYPE)
-        n_words = -(-n_bits // WORD_BITS)
-
-        def segs():
-            prev_end = 0
-            # group consecutive word indices into stretches
-            brk = np.flatnonzero(np.diff(uniq) != 1) + 1
-            starts = np.concatenate(([0], brk))
-            ends = np.concatenate((brk, [len(uniq)]))
-            for s, e in zip(starts, ends):
-                gap = int(uniq[s]) - prev_end
-                if gap:
-                    yield ("run", 0, gap)
-                yield from _split_literal(vals[s:e])
-                prev_end = int(uniq[e - 1]) + 1
-            if prev_end < n_words:
-                yield ("run", 0, n_words - prev_end)
-
-        return cls(_emit(segs()), n_bits)
+        m = len(uniq)
+        # item stream: [zero-gap?] literal per touched word, then a tail gap;
+        # canonicalization merges adjacent words and re-classifies 0xFFFFFFFF
+        gap = np.diff(np.concatenate(([-1], uniq))) - 1  # zeros before word i
+        has_gap = gap > 0
+        tail = n_words - int(uniq[-1]) - 1
+        lit_at = np.arange(m) + np.cumsum(has_gap)
+        n_items = m + int(has_gap.sum()) + (1 if tail > 0 else 0)
+        item_kind = np.full(n_items, KIND_LIT, np.int8)
+        item_count = np.ones(n_items, np.int64)
+        item_word = np.zeros(n_items, WORD_DTYPE)
+        item_word[lit_at] = vals
+        gap_at = lit_at[has_gap] - 1
+        item_kind[gap_at] = KIND_CLEAN0
+        item_count[gap_at] = gap[has_gap]
+        if tail > 0:
+            item_kind[-1] = KIND_CLEAN0
+            item_count[-1] = tail
+        return _rl_wrap(_groups_to_runlist(item_kind, item_count, item_word),
+                        n_bits)
 
     # -- decompression ----------------------------------------------------
     def segments(self) -> Iterator:
@@ -245,38 +260,50 @@ class EWAH:
     def __invert__(self) -> "EWAH":
         """Bitwise complement over ``n_bits`` (padding bits stay clear).
 
-        Runs in the compressed domain: clean runs flip type, literals are
-        inverted wholesale.  Only the final word needs care — after
-        complementing, the pad bits past ``n_bits`` would read 1, so the
-        segment holding it is split and the word masked (``_emit``
-        re-canonicalizes if the masked word comes out clean).
+        Runs on the run-list: clean intervals flip kind, the literal pool is
+        inverted in one ufunc pass, and only the final word needs care —
+        after complementing, the pad bits past ``n_bits`` would read 1, so
+        the last item is masked (and re-canonicalized if it comes out
+        clean).  Like the binary ops, the result is emitted from the
+        run-list directly, so the complement's memoized decode is warm.
         """
         n_words = self.n_words_uncompressed
+        if n_words == 0:
+            return _rl_wrap(_EMPTY_RUNLIST, self.n_bits)
         pad = n_words * WORD_BITS - self.n_bits
         tail_mask = np.uint32((1 << (WORD_BITS - pad)) - 1) if pad else ALL_ONES
 
-        def segs():
-            pos = 0
-            for seg in self.segments():
-                if seg[0] == "run":
-                    _, bit, cnt = seg
-                    nb = bit ^ 1
-                    if pad and pos + cnt == n_words:
-                        if cnt > 1:
-                            yield ("run", nb, cnt - 1)
-                        last = (ALL_ONES if nb else np.uint32(0)) & tail_mask
-                        yield ("lit", np.array([last], dtype=WORD_DTYPE))
-                    else:
-                        yield ("run", nb, cnt)
-                    pos += cnt
+        rl = self.runlist()
+        flipped = np.where(rl.kinds == KIND_CLEAN0, np.int8(KIND_CLEAN1),
+                           np.where(rl.kinds == KIND_CLEAN1,
+                                    np.int8(KIND_CLEAN0), rl.kinds))
+        lens = np.diff(rl.bounds)
+        is_lit = flipped == KIND_LIT
+        items_per = np.where(is_lit, lens, 1)
+        item_kind = np.repeat(flipped, items_per)
+        item_count = np.where(item_kind == KIND_LIT, 1,
+                              np.repeat(lens, items_per))
+        item_word = np.zeros(len(item_kind), WORD_DTYPE)
+        item_word[item_kind == KIND_LIT] = np.bitwise_not(rl.lits)
+        if pad:
+            # mask the final word: split it off its run if it was clean
+            k = int(item_kind[-1])
+            if k == KIND_LIT:
+                item_word[-1] &= tail_mask
+            else:
+                word = (ALL_ONES if k == KIND_CLEAN1 else np.uint32(0)) \
+                    & tail_mask
+                if item_count[-1] > 1:
+                    item_count[-1] -= 1
+                    item_kind = np.append(item_kind, np.int8(KIND_LIT))
+                    item_count = np.append(item_count, np.int64(1))
+                    item_word = np.append(item_word, word)
                 else:
-                    lit = np.bitwise_not(seg[1])
-                    if pad and pos + len(lit) == n_words:
-                        lit[-1] &= tail_mask
-                    yield ("lit", lit)
-                    pos += len(lit)
-
-        return EWAH(_emit(segs()), self.n_bits)
+                    item_kind[-1] = KIND_LIT
+                    item_count[-1] = 1
+                    item_word[-1] = word
+        return _rl_wrap(_groups_to_runlist(item_kind, item_count, item_word),
+                        self.n_bits)
 
     def __and__(self, other: "EWAH") -> "EWAH":
         return vec_binary_op(self, other, "and")
@@ -681,6 +708,52 @@ def _rl_binary(ra: RunList, rb: RunList, op: str) -> RunList:
     return _groups_to_runlist(item_kind, item_count, item_word)
 
 
+def _rl_and_many(rls: Sequence[RunList]) -> RunList:
+    """One-pass k-way AND: intersect interval coverage across *all* operands.
+
+    The pairwise fold aligns, resolves and re-canonicalizes k-1 times; this
+    merges every operand's bounds once, classifies each aligned interval in
+    one shot (any clean-zero operand → zero; all clean-one → one; else a
+    literal AND that starts from all-ones and folds each literal operand in
+    with a whole-array ufunc), and canonicalizes a single time at the end.
+    """
+    bounds = np.unique(np.concatenate([rl.bounds for rl in rls]))
+    left = bounds[:-1]
+    lens = np.diff(bounds)
+    m = len(left)
+    if m == 0:
+        return _EMPTY_RUNLIST
+    # per-operand aligned interval ids and kinds
+    idxs = [np.searchsorted(rl.bounds, left, side="right") - 1 for rl in rls]
+    kinds = [rl.kinds[i] for rl, i in zip(rls, idxs)]
+    any_zero = np.zeros(m, bool)
+    all_one = np.ones(m, bool)
+    for k in kinds:
+        any_zero |= k == KIND_CLEAN0
+        all_one &= k == KIND_CLEAN1
+    out_kind = np.where(any_zero, np.int8(KIND_CLEAN0),
+                        np.where(all_one, np.int8(KIND_CLEAN1),
+                                 np.int8(KIND_LIT)))
+    is_lit = out_kind == KIND_LIT
+    out_lens = np.where(is_lit, lens, 0)
+    dst0 = np.concatenate(([0], np.cumsum(out_lens)))[:-1]
+    out_lits = np.full(int(out_lens.sum()), ALL_ONES, WORD_DTYPE)
+    for rl, idx, k in zip(rls, idxs, kinds):
+        msk = is_lit & (k == KIND_LIT)  # clean-one operands are identity
+        if not msk.any():
+            continue
+        off = rl.lit_starts[idx[msk]] + (left[msk] - rl.bounds[idx[msk]])
+        src = rl.lits[_ranges(off, lens[msk])]
+        dst = _ranges(dst0[msk], lens[msk])
+        out_lits[dst] &= src
+    items_per = np.where(is_lit, lens, 1)
+    item_kind = np.repeat(out_kind, items_per)
+    item_count = np.where(item_kind == KIND_LIT, 1, np.repeat(lens, items_per))
+    item_word = np.zeros(len(item_kind), WORD_DTYPE)
+    item_word[item_kind == KIND_LIT] = out_lits
+    return _groups_to_runlist(item_kind, item_count, item_word)
+
+
 def _rl_emit(rl: RunList) -> np.ndarray:
     """Canonical RunList -> EWAH word stream, fully vectorized.
 
@@ -796,11 +869,13 @@ def or_many(bitmaps: Sequence[EWAH]) -> EWAH:
 
 
 def and_many(bitmaps: Sequence[EWAH]) -> EWAH:
-    """AND-reduce many bitmaps accumulatively (cheapest-first callers win).
+    """AND-reduce many bitmaps in one k-way pass (cheapest-first callers win).
 
-    Run-list-level fold with an all-zero short-circuit: once the
-    intersection empties — the common case for selective conjunctions over a
-    sorted table — the remaining operands are never touched.
+    All operands' run-lists are intersected simultaneously by
+    ``_rl_and_many`` — one bounds merge, one classification, one
+    canonicalization — instead of folding pairwise (which re-aligns and
+    re-canonicalizes at every step).  All-zero operands short-circuit
+    immediately and all-one operands drop out before the pass.
     """
     assert bitmaps
     bitmaps = list(bitmaps)
@@ -811,9 +886,15 @@ def and_many(bitmaps: Sequence[EWAH]) -> EWAH:
         [bm.n_bits for bm in bitmaps]
     if bitmaps[0].n_words_uncompressed == 0:
         return _empty_ewah(n_bits)
-    acc = bitmaps[0].runlist()
-    for bm in bitmaps[1:]:
-        acc = _rl_binary(acc, bm.runlist(), "and")
-        if _rl_is_zero(acc):
-            break
-    return _rl_wrap(acc, n_bits)
+    live: List[EWAH] = []
+    for bm in bitmaps:
+        rl = bm.runlist()
+        if _rl_is_zero(rl):
+            return _rl_wrap(rl, n_bits)  # intersection is empty
+        if not _rl_is_ones(rl):
+            live.append(bm)
+    if not live:          # every operand was all-ones
+        return bitmaps[0]
+    if len(live) == 1:
+        return live[0]
+    return _rl_wrap(_rl_and_many([bm.runlist() for bm in live]), n_bits)

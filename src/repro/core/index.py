@@ -100,6 +100,13 @@ class IndexBuilder:
     therefore yields *full-sort* compression for tables that never fit in
     memory at once.
 
+    With ``store_path`` set, every completed partition is emitted straight
+    into a durable ``repro.core.store`` writer instead of being retained in
+    memory — the streaming build becomes a streaming *persist*, peak memory
+    stays O(partition) end to end, and ``finish()`` returns the index
+    reopened from the store as read-only memmap views (zero-copy warm
+    start over the file just written).
+
     Cardinalities must be known up front (they size the k-of-N encoders);
     chunk values are validated against them as they arrive.
     """
@@ -108,7 +115,8 @@ class IndexBuilder:
                  allocation: str = "alpha",
                  partition_rows: Optional[int] = None,
                  apply_heuristic: bool = True,
-                 column_names: Optional[Sequence[str]] = None):
+                 column_names: Optional[Sequence[str]] = None,
+                 store_path: Optional[str] = None):
         self.cards = [int(c) for c in cards]
         d = len(self.cards)
         names = list(column_names) if column_names is not None else None
@@ -127,6 +135,13 @@ class IndexBuilder:
         self._bounds: List[int] = [0]
         self._n_rows = 0
         self._finished = False
+        self.store_path = store_path
+        self._writer = None
+        if store_path is not None:
+            from .store import StoreWriter  # local: store imports this module
+            self._writer = StoreWriter(
+                store_path, [c.encoder for c in self.columns],
+                self.column_names)
 
     def append(self, chunk: np.ndarray) -> "IndexBuilder":
         """Add a chunk of rows (any length, including ragged); returns self."""
@@ -154,17 +169,32 @@ class IndexBuilder:
                 self._close_partition(self._take(self.partition_rows))
         return self
 
-    def finish(self) -> BitmapIndex:
-        """Flush the tail partition and return the finished index."""
+    def finish(self, mmap: bool = True) -> BitmapIndex:
+        """Flush the tail partition and return the finished index.
+
+        In store mode the writer is finalized (header + atomic rename) and
+        the index returned is the store *reopened* — memmap-backed when
+        ``mmap`` (the default), so the build's partitions are already gone
+        from memory by the time the caller sees the result."""
         if self._finished:
             raise RuntimeError("IndexBuilder.finish() was already called")
         if self._buffered:
             self._close_partition(self._take(self._buffered))
         self._finished = True
+        if self._writer is not None:
+            from .store import load
+            self._writer.close()
+            return load(self.store_path, mmap=mmap)
         return BitmapIndex(
             n_rows=self._n_rows, columns=self.columns,
             partition_bounds=np.asarray(self._bounds, dtype=np.int64),
             column_names=self.column_names)
+
+    def abort(self) -> None:
+        """Discard the build (removes a store writer's temp file)."""
+        self._finished = True
+        if self._writer is not None:
+            self._writer.abort()
 
     # -- internals ---------------------------------------------------------
     def _take(self, n: int) -> np.ndarray:
@@ -186,8 +216,12 @@ class IndexBuilder:
 
     def _close_partition(self, part: np.ndarray) -> None:
         """Compile one partition of rows into per-column EWAH bitmaps
-        (Algorithm 3: scatter (row, bitmap) pairs, group, append runs)."""
+        (Algorithm 3: scatter (row, bitmap) pairs, group, append runs).
+
+        In store mode the partition's bitmaps go straight to the writer and
+        are dropped — the builder never holds more than this one partition."""
         rows_part = len(part)
+        part_sink: List[List[EWAH]] = []
         for c, col in enumerate(self.columns):
             enc = col.encoder
             codes = enc.codes(part[:, c])  # (rows_part, k)
@@ -201,8 +235,13 @@ class IndexBuilder:
             for b in range(enc.L):
                 pos = rows_s[idx[b]: idx[b + 1]]
                 bms.append(EWAH.from_positions(pos, rows_part))
-            col.bitmaps.append(bms)
-            col.invalidate_sizes()
+            if self._writer is None:
+                col.bitmaps.append(bms)
+                col.invalidate_sizes()
+            else:
+                part_sink.append(bms)
+        if self._writer is not None:
+            self._writer.add_partition(part_sink, rows_part)
         self._bounds.append(self._bounds[-1] + rows_part)
 
 

@@ -11,39 +11,61 @@ used entries until both the entry cap and the byte budget hold.
 from __future__ import annotations
 
 import threading
+import time
 from collections import OrderedDict
 from typing import Callable, Dict, Optional
 
 
 class LRUCache:
-    """LRU with hit/miss counters, optional entry cap and byte budget.
+    """LRU with hit/miss counters, optional entry cap, byte budget and TTL.
 
     ``capacity=None`` means unbounded entries; ``capacity=0`` disables the
     cache entirely (every ``put`` is a no-op).  ``max_bytes`` bounds
     ``sum(sizeof(value))`` over live entries; ``sizeof`` defaults to 0 per
-    entry (byte budget inert unless a sizer is supplied).
+    entry (byte budget inert unless a sizer is supplied).  ``ttl`` (seconds)
+    makes entries expire *lazily*: a lookup past the deadline drops the
+    entry and counts as both ``expired`` and a miss — no sweeper thread, so
+    an idle cache costs nothing.  ``clock`` is injectable for tests
+    (monotonic seconds).
     """
 
     _MISS = object()
 
     def __init__(self, capacity: Optional[int] = None,
                  max_bytes: Optional[int] = None,
-                 sizeof: Optional[Callable[[object], int]] = None):
+                 sizeof: Optional[Callable[[object], int]] = None,
+                 ttl: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic):
         self.capacity = None if capacity is None else max(int(capacity), 0)
         self.max_bytes = None if max_bytes is None else max(int(max_bytes), 0)
         self._sizeof = sizeof or (lambda _v: 0)
+        self.ttl = None if not ttl or ttl <= 0 else float(ttl)
+        self._clock = clock
         self._od: "OrderedDict" = OrderedDict()
         self._sizes: Dict = {}
+        self._stamps: Dict = {}
         self._bytes = 0
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.expired = 0
+
+    def _drop(self, key) -> None:
+        del self._od[key]
+        self._bytes -= self._sizes.pop(key)
+        self._stamps.pop(key, None)
 
     def get(self, key):
         with self._lock:
             val = self._od.get(key, self._MISS)
             if val is self._MISS:
+                self.misses += 1
+                return None
+            if (self.ttl is not None
+                    and self._clock() - self._stamps[key] > self.ttl):
+                self._drop(key)
+                self.expired += 1
                 self.misses += 1
                 return None
             self._od.move_to_end(key)
@@ -59,6 +81,7 @@ class LRUCache:
                 self._bytes -= self._sizes[key]
             self._od[key] = val
             self._sizes[key] = size
+            self._stamps[key] = self._clock()
             self._bytes += size
             self._od.move_to_end(key)
             while len(self._od) > 1 and (
@@ -66,6 +89,7 @@ class LRUCache:
                     or (self.max_bytes is not None and self._bytes > self.max_bytes)):
                 k, _ = self._od.popitem(last=False)
                 self._bytes -= self._sizes.pop(k)
+                self._stamps.pop(k, None)
                 self.evictions += 1
             # a single entry larger than the whole byte budget is not worth
             # keeping either
@@ -73,12 +97,14 @@ class LRUCache:
                     and len(self._od) == 1):
                 k, _ = self._od.popitem(last=False)
                 self._bytes -= self._sizes.pop(k)
+                self._stamps.pop(k, None)
                 self.evictions += 1
 
     def clear(self) -> None:
         with self._lock:
             self._od.clear()
             self._sizes.clear()
+            self._stamps.clear()
             self._bytes = 0
 
     def __len__(self) -> int:
@@ -89,5 +115,6 @@ class LRUCache:
         with self._lock:
             return {"entries": len(self._od), "capacity": self.capacity,
                     "bytes": self._bytes, "max_bytes": self.max_bytes,
-                    "hits": self.hits, "misses": self.misses,
-                    "evictions": self.evictions}
+                    "ttl": self.ttl, "hits": self.hits,
+                    "misses": self.misses, "evictions": self.evictions,
+                    "expired": self.expired}

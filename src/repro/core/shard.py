@@ -134,6 +134,46 @@ class ShardedIndex:
         return cls(shards, column_names=column_names,
                    cache_entries=cache_entries, cache_bytes=cache_bytes)
 
+    # -- durability (repro.core.store) ---------------------------------------
+    def save(self, dir_path: str) -> str:
+        """Persist as a directory of per-shard store files + manifest.
+
+        Each shard file is written atomically; ``load(dir, mmap=True)``
+        reopens the whole index as zero-copy memmap views."""
+        from .store import save_sharded
+        return save_sharded(self, dir_path)
+
+    @classmethod
+    def load(cls, dir_path: str, mmap: bool = True,
+             verify: Optional[bool] = None,
+             cache_entries: int = SHARD_CACHE_ENTRIES,
+             cache_bytes: Optional[int] = SHARD_CACHE_BYTES) -> "ShardedIndex":
+        """Open a saved sharded index; with ``mmap`` (default) shard bitmaps
+        are read-only file views and open time is metadata-only."""
+        from .store import load_sharded
+        return load_sharded(dir_path, mmap=mmap, verify=verify,
+                            cache_entries=cache_entries,
+                            cache_bytes=cache_bytes)
+
+    def replace_shard_file(self, dir_path: str, i: int,
+                           shard: BitmapIndex) -> str:
+        """Atomically rewrite shard ``i``'s store file *and* swap the shard
+        in this live index (single-file incremental reindex).
+
+        The shard is validated *before* anything is written: a rejected
+        shard must never reach the directory, or the next ``load`` /
+        ``/admin/reload`` would pick up data the live index refused.
+        """
+        from .store import write_shard_file
+        if not (0 <= i < len(self.shards)):
+            raise IndexError(f"shard {i} out of range [0, {len(self.shards)})")
+        ref = self.shards[0] if i else (self.shards[1] if len(self.shards) > 1
+                                        else shard)
+        self._validate_shard(i, shard, ref, interior=i + 1 < len(self.shards))
+        path = write_shard_file(dir_path, i, shard)
+        self.replace_shard(i, shard)
+        return path
+
     # -- stats (mirrors BitmapIndex) ---------------------------------------
     @property
     def n_rows(self) -> int:
@@ -274,10 +314,30 @@ class ShardedIndex:
 
 # indexes visible to forked workers, keyed per pool.  Entries are written in
 # the parent *before* its pool forks, so every worker inherits its own
-# pool's index by copy-on-write; keys are never reused across pools.
-_FORK_STATE: Dict[int, "ShardedIndex"] = {}
+# pool's index by copy-on-write — or, when the pool was given an
+# ``index_dir``, the entry is ``("dir", path)`` and each worker *opens the
+# shard store files via mmap* on first use: the bitmap pages are then
+# file-backed and shared between all workers by the page cache instead of
+# depending on fork-time COW of anonymous memory (and a worker can outlive
+# parent-side mutations of the in-memory index).  Keys are never reused
+# across pools.
+_FORK_STATE: Dict[int, object] = {}
 _FORK_CACHES: Dict = {}
+_FORK_LOADED: Dict[int, "ShardedIndex"] = {}  # worker-side mmap opens
 _fork_keys = itertools.count()
+
+
+def _fork_index(pool_key: int) -> "ShardedIndex":
+    """Resolve a worker's index: inherited object, or lazy mmap open."""
+    entry = _FORK_STATE[pool_key]
+    if not (isinstance(entry, tuple) and entry and entry[0] == "dir"):
+        return entry  # COW-inherited ShardedIndex
+    idx = _FORK_LOADED.get(pool_key)
+    if idx is None:
+        from .store import load_sharded
+        idx = load_sharded(entry[1], mmap=True)
+        _FORK_LOADED[pool_key] = idx
+    return idx
 
 
 def _forked_run(args) -> EWAH:
@@ -285,7 +345,7 @@ def _forked_run(args) -> EWAH:
     from .executor import Executor
     from .planner import plan
     pool_key, shard_i, e, backend, optimize = args
-    sh = _FORK_STATE[pool_key].shards[shard_i]
+    sh = _fork_index(pool_key).shards[shard_i]
     node = plan(sh, e, optimize=optimize) if isinstance(e, Expr) else e
     cache = _FORK_CACHES.setdefault((pool_key, shard_i), {})
     return Executor(sh, backend=backend, cache=cache).run(node)
@@ -309,14 +369,22 @@ class ShardProcessPool:
     serves a stale shard.  Per-worker operand caches persist across queries.
     Note: forked workers should stay on the EWAH backend — a jax runtime
     initialized in the parent is not fork-safe to reuse.
+
+    With ``index_dir`` (a saved ``ShardedIndex`` store directory), workers
+    do not rely on fork-time copy-on-write of the parent's heap at all:
+    each worker mmap-opens the shard store files on first use, so bitmap
+    words are shared page-cache pages across every worker and the parent —
+    one physical copy of the index regardless of pool size.
     """
 
-    def __init__(self, index: "ShardedIndex", workers: Optional[int] = None):
+    def __init__(self, index: "ShardedIndex", workers: Optional[int] = None,
+                 index_dir: Optional[str] = None):
         if "fork" not in multiprocessing.get_all_start_methods():
             raise RuntimeError(
                 "ShardProcessPool needs the 'fork' start method (POSIX); "
                 "use a thread pool on this platform")
         self.index = index
+        self.index_dir = index_dir
         self.workers = max(int(workers or (os.cpu_count() or 2)), 1)
         self._key = next(_fork_keys)
         self._executor: Optional[ProcessPoolExecutor] = None
@@ -330,7 +398,9 @@ class ShardProcessPool:
                 if self._executor is not None:
                     self._executor.shutdown(wait=False)
                     self._executor = None
-                _FORK_STATE[self._key] = self.index
+                _FORK_STATE[self._key] = (
+                    ("dir", self.index_dir) if self.index_dir is not None
+                    else self.index)
                 self._executor = ProcessPoolExecutor(
                     max_workers=min(self.workers, self.index.n_shards),
                     mp_context=multiprocessing.get_context("fork"))

@@ -8,6 +8,8 @@ allocation — lexicographic table sort == lexicographic sort of index rows.
 from __future__ import annotations
 
 import heapq
+import os
+from dataclasses import dataclass, field
 from typing import Iterator, List, Optional, Sequence
 
 import numpy as np
@@ -111,12 +113,45 @@ def block_sort(table: np.ndarray, n_blocks: int,
 # it loses most of the compression benefit (Table 8).  The classical fix is an
 # external merge sort: sort chunks into runs, then k-way merge the runs by the
 # column-order key, which recovers the *full* lexicographic order and hence
-# full-sort compression.  This module simulates that algorithm faithfully
-# (run generation + streaming k-way merge over run cursors) on in-memory
-# arrays; only O(chunk_rows) rows are ever sorted at once and the merge
-# consumes runs through cursors, so the structure maps 1:1 onto a spill-to-
-# disk implementation.
+# full-sort compression.
+#
+# Two run stores are supported.  Without ``spill_dir`` the runs stay in
+# memory (the original simulation: run generation + streaming k-way merge
+# over run cursors).  With ``spill_dir`` each chunk-sorted run is *written to
+# disk* — a packed-uint64 key file plus an int64 permutation file, reopened
+# as read-only ``np.memmap``s — and the k-way merge reads them back through
+# bounded windows of ``merge_block_rows`` keys per run, so the sorter's
+# memory ceiling is enforced, not simulated: peak Python-level buffering is
+# O(chunk_rows + n_runs * merge_block_rows) regardless of table size, and
+# ``SortStats.peak_buffer_bytes`` reports the measured bound.
 # ---------------------------------------------------------------------------
+
+def _key_cards(table: np.ndarray, order: Sequence[int]) -> Optional[List[int]]:
+    """Per-column key cardinalities (max+1) over the whole table, or ``None``
+    when the combined key space overflows a uint64."""
+    cards = []
+    capacity = 1
+    for c in order:
+        lo = int(table[:, c].min())
+        if lo < 0:
+            raise ValueError(f"column {c} has negative rank {lo}")
+        card = int(table[:, c].max()) + 1
+        cards.append(card)
+        capacity *= card
+    if capacity >= 1 << 64:
+        return None
+    return cards
+
+
+def _pack_rows(rows: np.ndarray, order: Sequence[int],
+               cards: Sequence[int]) -> np.ndarray:
+    """Pack each row's sort key into one uint64 using *global* cardinalities
+    (so per-chunk keys from different runs compare consistently)."""
+    key = np.zeros(len(rows), dtype=np.uint64)
+    for c, card in zip(order, cards):
+        key = key * np.uint64(card) + rows[:, c].astype(np.uint64)
+    return key
+
 
 def _pack_keys(table: np.ndarray, order: Sequence[int]) -> Optional[np.ndarray]:
     """Pack each row's sort key into one uint64 (None if it would overflow).
@@ -127,19 +162,10 @@ def _pack_keys(table: np.ndarray, order: Sequence[int]) -> Optional[np.ndarray]:
     table = np.asarray(table)
     if len(table) == 0:
         return np.zeros(0, dtype=np.uint64)
-    capacity = 1
-    for c in order:
-        lo = int(table[:, c].min())
-        if lo < 0:
-            raise ValueError(f"column {c} has negative rank {lo}")
-        capacity *= int(table[:, c].max()) + 1
-    if capacity >= 1 << 64:
+    cards = _key_cards(table, order)
+    if cards is None:
         return None
-    key = np.zeros(len(table), dtype=np.uint64)
-    for c in order:
-        card = np.uint64(int(table[:, c].max()) + 1)
-        key = key * card + table[:, c].astype(np.uint64)
-    return key
+    return _pack_rows(table, order, cards)
 
 
 def _merge_runs_packed(keys: List[np.ndarray], runs: List[np.ndarray]) -> np.ndarray:
@@ -188,46 +214,257 @@ def _merge_runs_tuples(table: np.ndarray, order: Sequence[int],
                        count=sum(len(r) for r in runs))
 
 
+@dataclass
+class SortStats:
+    """Accounting for one external sort (filled when passed in).
+
+    ``peak_buffer_bytes`` counts the arrays the sorter itself allocates —
+    chunk key/permutation buffers during run generation, per-run merge
+    windows and the output block during the merge — i.e. the memory the
+    ``chunk_rows`` / ``merge_block_rows`` budget is supposed to bound.  The
+    input table (often a caller-owned memmap) and ``np.lexsort``'s internal
+    scratch, both O(chunk) on the spill path, are outside it.
+    """
+    n_runs: int = 0
+    spilled_bytes: int = 0
+    peak_buffer_bytes: int = 0
+    merge_block_rows: int = 0
+    run_files: List[str] = field(default_factory=list)
+
+    def bump(self, n_bytes: int) -> None:
+        self.peak_buffer_bytes = max(self.peak_buffer_bytes, int(n_bytes))
+
+
+class _SpillCursor:
+    """Bounded-window reader over one on-disk run.
+
+    Holds at most ``block`` keys in memory at a time (an explicit copy out
+    of the key memmap); the permutation memmap is only sliced in ``take``,
+    in pieces of at most ``block`` rows.
+    """
+
+    __slots__ = ("keys", "perm", "n", "pos", "block", "_w0", "_wkeys")
+
+    def __init__(self, keys_mm: np.ndarray, perm_mm: np.ndarray, block: int):
+        assert len(keys_mm) == len(perm_mm)
+        self.keys = keys_mm
+        self.perm = perm_mm
+        self.n = len(keys_mm)
+        self.pos = 0
+        self.block = max(int(block), 1)
+        self._w0 = 0
+        self._wkeys = np.empty(0, np.uint64)
+
+    def _window(self, start: int) -> None:
+        self._w0 = start
+        # a real copy, not a memmap view: the window IS the merge's bounded
+        # buffer, and SortStats counts these bytes as allocated
+        self._wkeys = np.array(self.keys[start:start + self.block],
+                               dtype=np.uint64, copy=True)
+
+    def head(self) -> int:
+        if not (self._w0 <= self.pos < self._w0 + len(self._wkeys)):
+            self._window(self.pos)
+        return int(self._wkeys[self.pos - self._w0])
+
+    def scan_until(self, bound: int, side: str) -> int:
+        """First index e >= pos+1 where keys[pos:e] may all precede ``bound``
+        (searchsorted semantics per ``side``), scanning window by window."""
+        e = self.pos
+        if not (self._w0 <= e <= self._w0 + len(self._wkeys)):
+            self._window(e)
+        while True:
+            if e >= self.n:
+                return self.n
+            if e >= self._w0 + len(self._wkeys):
+                self._window(e)
+            local = int(np.searchsorted(self._wkeys[e - self._w0:],
+                                        bound, side=side))
+            e += local
+            if e < self._w0 + len(self._wkeys) or e >= self.n:
+                return max(e, self.pos + 1)
+            # boundary ran off the loaded window: more qualifying keys may
+            # follow — slide the window and keep scanning
+
+
+def _merge_spilled(cursors: List[_SpillCursor],
+                   stats: Optional[SortStats] = None) -> Iterator[np.ndarray]:
+    """K-way merge over spilled runs, yielding permutation blocks.
+
+    Same galloping strategy (and exact tie order) as ``_merge_runs_packed``:
+    take from the smallest head the whole prefix that may precede every
+    other head, but never more than one cursor window at a time is resident
+    per run and each yielded block copies at most ``block`` rows.
+    """
+    heap = [(c.head(), r) for r, c in enumerate(cursors) if c.n]
+    heapq.heapify(heap)
+    while heap:
+        _, r = heapq.heappop(heap)
+        c = cursors[r]
+        if heap:
+            nxt_key, nxt_run = heap[0]
+            side = "right" if r < nxt_run else "left"
+            end = c.scan_until(nxt_key, side)
+        else:
+            end = c.n
+        pos = c.pos
+        while pos < end:
+            take = min(end - pos, c.block)
+            block = np.array(c.perm[pos:pos + take], dtype=np.int64,
+                             copy=True)
+            if stats is not None:
+                stats.bump(sum(len(x._wkeys) for x in cursors) * 8
+                           + block.nbytes)
+            yield block
+            pos += take
+        c.pos = end
+        if end < c.n:
+            heapq.heappush(heap, (c.head(), r))
+
+
+def _spill_runs(table: np.ndarray, chunk_rows: int, order: Sequence[int],
+                spill_dir: str, merge_block_rows: Optional[int],
+                stats: SortStats) -> List[_SpillCursor]:
+    """Chunk-sort ``table`` into on-disk runs; return merge cursors.
+
+    Each run is two flat files in ``spill_dir`` — ``run-NNNNN.keys`` (packed
+    uint64 sort keys, ascending) and ``run-NNNNN.perm`` (global row ids in
+    key order, int64) — reopened as read-only memmaps.  The caller owns the
+    directory; run files are left for post-mortem inspection and reuse.
+    """
+    n = len(table)
+    cards = _key_cards(table, order)
+    if cards is None:
+        raise ValueError(
+            "spill-to-disk merge needs the sort key packed into a uint64, "
+            "but the key space overflows 64 bits; sort in memory "
+            "(spill_dir=None) or reduce the column order")
+    os.makedirs(spill_dir, exist_ok=True)
+    cursors: List[_SpillCursor] = []
+    n_runs = -(-n // chunk_rows)
+    if merge_block_rows is None:
+        # split roughly one chunk's worth of key memory across the runs
+        merge_block_rows = max(min(chunk_rows, 1024),
+                               chunk_rows // max(n_runs, 1))
+    stats.merge_block_rows = int(merge_block_rows)
+    for run_id, s in enumerate(range(0, n, chunk_rows)):
+        chunk = table[s:s + chunk_rows]
+        perm_c = lex_sort(chunk, order)
+        keys_c = _pack_rows(np.asarray(chunk)[perm_c], order, cards)
+        stats.bump(keys_c.nbytes + perm_c.nbytes)
+        kpath = os.path.join(spill_dir, f"run-{run_id:05d}.keys")
+        ppath = os.path.join(spill_dir, f"run-{run_id:05d}.perm")
+        keys_c.tofile(kpath)
+        (s + perm_c).astype(np.int64).tofile(ppath)
+        stats.run_files += [kpath, ppath]
+        stats.spilled_bytes += keys_c.nbytes + perm_c.nbytes
+        del keys_c, perm_c
+        rows_run = min(chunk_rows, n - s)
+        keys_mm = np.memmap(kpath, dtype=np.uint64, mode="r",
+                            shape=(rows_run,))
+        perm_mm = np.memmap(ppath, dtype=np.int64, mode="r",
+                            shape=(rows_run,))
+        cursors.append(_SpillCursor(keys_mm, perm_mm, merge_block_rows))
+    stats.n_runs = len(cursors)
+    return cursors
+
+
 def external_merge_sort_perm(table: np.ndarray, chunk_rows: int,
-                             col_order: Optional[Sequence[int]] = None) -> np.ndarray:
+                             col_order: Optional[Sequence[int]] = None,
+                             spill_dir: Optional[str] = None,
+                             merge_block_rows: Optional[int] = None,
+                             stats: Optional[SortStats] = None) -> np.ndarray:
     """Row permutation of an external-merge lexicographic sort.
 
     Equivalent to ``lex_sort`` (bit-identical permutation, including tie
     order) but only ever sorts ``chunk_rows`` rows at a time: chunks become
     sorted runs, then a streaming k-way merge recovers the global order.
+    With ``spill_dir`` the runs live on disk as memmapped key/permutation
+    files and the merge reads them through ``merge_block_rows``-sized
+    windows, so peak buffering is bounded by the chunk/window budget (the
+    returned permutation itself is still O(n); use
+    ``external_sorted_chunks`` to stream without materializing it).
     """
     table = np.asarray(table)
     n, d = table.shape
     if chunk_rows <= 0:
         raise ValueError(f"chunk_rows must be positive, got {chunk_rows}")
     order = list(range(d)) if col_order is None else list(col_order)
-    if n <= chunk_rows:
+    if stats is None:
+        stats = SortStats()
+    if n <= chunk_rows or spill_dir is None:
+        if n > chunk_rows:
+            runs = []
+            for s in range(0, n, chunk_rows):
+                chunk = table[s:s + chunk_rows]
+                runs.append(s + lex_sort(chunk, order))
+            keys = _pack_keys(table, order)
+            stats.n_runs = len(runs)
+            if keys is None:
+                return _merge_runs_tuples(table, order, runs)
+            return _merge_runs_packed([keys[r] for r in runs], runs)
+        stats.n_runs = 1 if n else 0
         return lex_sort(table, order)
-    runs = []
-    for s in range(0, n, chunk_rows):
-        chunk = table[s:s + chunk_rows]
-        runs.append(s + lex_sort(chunk, order))
-    keys = _pack_keys(table, order)
-    if keys is None:
-        return _merge_runs_tuples(table, order, runs)
-    return _merge_runs_packed([keys[r] for r in runs], runs)
+    cursors = _spill_runs(table, chunk_rows, order, spill_dir,
+                          merge_block_rows, stats)
+    out = np.empty(n, dtype=np.int64)
+    w = 0
+    for block in _merge_spilled(cursors, stats):
+        out[w:w + len(block)] = block
+        w += len(block)
+    assert w == n, (w, n)
+    return out
 
 
 def external_sorted_chunks(table: np.ndarray, chunk_rows: int,
                            col_order: Optional[Sequence[int]] = None,
-                           out_rows: Optional[int] = None) -> Iterator[np.ndarray]:
+                           out_rows: Optional[int] = None,
+                           spill_dir: Optional[str] = None,
+                           merge_block_rows: Optional[int] = None,
+                           stats: Optional[SortStats] = None) -> Iterator[np.ndarray]:
     """Yield the externally merge-sorted table in chunks of ``out_rows`` rows.
 
     The natural producer for ``IndexBuilder.append``: chunks stream out in
     global lexicographic order, so the index gets full-sort compression even
-    though no step ever sorted more than ``chunk_rows`` rows.
+    though no step ever sorted more than ``chunk_rows`` rows.  With
+    ``spill_dir`` the chunks stream *straight off the merged on-disk runs* —
+    the full permutation is never materialized, so the whole
+    sort→build pipeline runs in O(chunk + merge windows + partition) memory.
     """
-    perm = external_merge_sort_perm(table, chunk_rows, col_order)
     step = out_rows or chunk_rows
     if step <= 0:
         raise ValueError(f"out_rows must be positive, got {step}")
-    for s in range(0, len(perm), step):
-        yield np.asarray(table)[perm[s:s + step]]
+    table_arr = np.asarray(table)
+    n = len(table_arr)
+    if spill_dir is None or n <= chunk_rows:
+        perm = external_merge_sort_perm(table, chunk_rows, col_order,
+                                        spill_dir=spill_dir,
+                                        merge_block_rows=merge_block_rows,
+                                        stats=stats)
+        for s in range(0, len(perm), step):
+            yield table_arr[perm[s:s + step]]
+        return
+    if stats is None:
+        stats = SortStats()
+    d = table_arr.shape[1]
+    order = list(range(d)) if col_order is None else list(col_order)
+    cursors = _spill_runs(table_arr, chunk_rows, order, spill_dir,
+                          merge_block_rows, stats)
+    pending: List[np.ndarray] = []
+    pending_rows = 0
+    for block in _merge_spilled(cursors, stats):
+        pending.append(block)
+        pending_rows += len(block)
+        while pending_rows >= step:
+            perm_chunk = np.concatenate(pending) if len(pending) > 1 \
+                else pending[0]
+            head, tail = perm_chunk[:step], perm_chunk[step:]
+            pending = [tail] if len(tail) else []
+            pending_rows = len(tail)
+            yield table_arr[head]
+    if pending_rows:
+        yield table_arr[np.concatenate(pending) if len(pending) > 1
+                        else pending[0]]
 
 
 def order_columns(cards: Sequence[int], strategy: str = "card_desc") -> list:

@@ -1,0 +1,404 @@
+"""Durable, versioned, memory-mapped index store.
+
+The on-disk format makes the paper's storage premise real — bitmap indexes
+"rely mostly on sequential input/output" — by laying every EWAH word stream
+out contiguously and 32-bit-word aligned, so an index opens by *mapping* the
+file, not parsing it (the Roaring line's zero-parse lesson, arXiv:1402.6407):
+
+    offset  size  field
+    0       8     magic  b"REPROIDX"
+    8       4     format version (uint32 LE)
+    12      4     flags (reserved, 0)
+    16      8     header offset (uint64 LE, patched at close)
+    24      8     header length (uint64 LE)
+    32      4     header CRC32 (uint32 LE)
+    36      28    zero padding (payload starts 64-byte aligned)
+    64      ...   payload: concatenated EWAH word segments, each a raw
+                  little-endian uint32 array, 4-byte aligned
+    hdr_off ...   JSON header (metadata + per-column TOC, see below)
+
+The JSON header records ``n_rows``, ``partition_bounds``, ``column_names``,
+per-column encoder parameters (card / k / allocation / L), and a TOC:
+``toc[col][partition][bitmap_id] == [byte_offset, n_words, crc32]``.  The
+header lives *after* the payload so ``StoreWriter`` can stream partitions to
+disk as a builder closes them — nothing is buffered beyond the TOC itself —
+and the preamble is patched last, then the temp file atomically renamed into
+place: a crashed writer never leaves a file that passes validation.
+
+``load(path, mmap=True)`` returns a ``BitmapIndex`` whose ``EWAH.words`` are
+read-only ``np.memmap`` views straight into the file — zero-copy, no word
+touched until a query touches it; the run-list decode memoization layers on
+top unchanged.  ``mmap=False`` reads the payload into memory and verifies
+every segment checksum (``verify`` overrides either default).
+
+A *sharded* index is a directory: one store file per shard plus a
+``manifest.json`` naming them in row order.  ``write_shard_file`` replaces a
+single shard atomically (write-temp + ``os.replace``), which is what makes
+incremental reindex safe under live readers: an open mmap keeps the old
+inode alive, and any fresh ``load`` sees either the old or the new file,
+never a torn one.
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+import zlib
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .encoding import ColumnEncoder
+from .ewah import EWAH, WORD_DTYPE
+from .index import BitmapIndex, ColumnIndex
+
+MAGIC = b"REPROIDX"
+VERSION = 1
+_PREAMBLE = struct.Struct("<8sIIQQI")  # magic, version, flags, off, len, crc
+PAYLOAD_START = 64  # 64-byte aligned payload keeps every segment word-aligned
+
+MANIFEST_NAME = "manifest.json"
+SHARD_FILE_FMT = "shard-{:05d}.ridx"
+
+
+class StoreError(Exception):
+    """Base class for store format violations."""
+
+
+def _fsync_dir(dir_path: str) -> None:
+    """Flush a directory entry so an atomic rename survives power loss."""
+    try:
+        fd = os.open(dir_path or ".", os.O_RDONLY)
+    except OSError:  # e.g. platforms without directory fds
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+class StoreVersionError(StoreError):
+    """File carries an unknown magic or format version."""
+
+
+class StoreCorruptError(StoreError):
+    """File is truncated or fails a checksum."""
+
+
+def _encoder_meta(enc: ColumnEncoder) -> Dict:
+    return {"card": enc.card, "k": enc.k,
+            "allocation": enc.allocation, "L": enc.L}
+
+
+class StoreWriter:
+    """Streaming writer: partitions in, one durable store file out.
+
+    ``add_partition`` appends every bitmap's words to the payload as soon as
+    the partition closes — the natural sink for ``IndexBuilder``, which then
+    never holds more than one partition of bitmaps in memory.  ``close``
+    writes the JSON header + TOC, patches the preamble, fsyncs and atomically
+    renames the temp file over ``path``.
+    """
+
+    def __init__(self, path: str, encoders: Sequence[ColumnEncoder],
+                 column_names: Optional[Sequence[str]] = None):
+        self.path = str(path)
+        self._tmp = f"{self.path}.tmp.{os.getpid()}"
+        self._encoders = list(encoders)
+        self._names = list(column_names) if column_names is not None else None
+        self._f = open(self._tmp, "wb")
+        self._f.write(b"\0" * PAYLOAD_START)  # preamble patched at close
+        self._pos = PAYLOAD_START
+        # toc[col][partition][bitmap] = [offset, n_words, crc32]
+        self._toc: List[List[List[List[int]]]] = [[] for _ in self._encoders]
+        self._bounds: List[int] = [0]
+        self._closed = False
+
+    def add_partition(self, bitmaps_per_column: Sequence[Sequence[EWAH]],
+                      rows_part: int) -> None:
+        assert not self._closed
+        if len(bitmaps_per_column) != len(self._encoders):
+            raise ValueError(
+                f"partition has {len(bitmaps_per_column)} columns, writer "
+                f"expects {len(self._encoders)}")
+        for c, (enc, bms) in enumerate(zip(self._encoders,
+                                           bitmaps_per_column)):
+            if len(bms) != enc.L:
+                raise ValueError(
+                    f"column {c} partition has {len(bms)} bitmaps, encoder "
+                    f"needs {enc.L}")
+            entries = []
+            for bm in bms:
+                if bm.n_bits != rows_part:
+                    raise ValueError(
+                        f"bitmap over {bm.n_bits} bits in a {rows_part}-row "
+                        f"partition")
+                raw = np.ascontiguousarray(bm.words, dtype=WORD_DTYPE)
+                data = raw.tobytes()
+                entries.append([self._pos, len(raw),
+                                zlib.crc32(data) & 0xFFFFFFFF])
+                self._f.write(data)
+                self._pos += len(data)
+            self._toc[c].append(entries)
+        self._bounds.append(self._bounds[-1] + int(rows_part))
+
+    def close(self) -> str:
+        assert not self._closed
+        header = json.dumps({
+            "n_rows": self._bounds[-1],
+            "partition_bounds": self._bounds,
+            "column_names": self._names,
+            "columns": [_encoder_meta(e) for e in self._encoders],
+            "toc": self._toc,
+        }, separators=(",", ":")).encode()
+        hdr_off = self._pos
+        self._f.write(header)
+        self._f.seek(0)
+        self._f.write(_PREAMBLE.pack(MAGIC, VERSION, 0, hdr_off,
+                                     len(header), zlib.crc32(header)))
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        self._f.close()
+        os.replace(self._tmp, self.path)  # atomic: never a half-written store
+        _fsync_dir(os.path.dirname(os.path.abspath(self.path)))
+        self._closed = True
+        return self.path
+
+    def abort(self) -> None:
+        if not self._closed:
+            self._closed = True
+            self._f.close()
+            try:
+                os.unlink(self._tmp)
+            except OSError:
+                pass
+
+    def __enter__(self) -> "StoreWriter":
+        return self
+
+    def __exit__(self, exc_type, *_exc):
+        if exc_type is not None:
+            self.abort()
+        elif not self._closed:
+            self.close()
+
+
+def save(index: BitmapIndex, path: str) -> str:
+    """Write a finished in-memory index as one store file (atomic)."""
+    writer = StoreWriter(path, [c.encoder for c in index.columns],
+                         index.column_names)
+    try:
+        bounds = index.partition_bounds
+        for p in range(index.n_partitions):
+            writer.add_partition([col.bitmaps[p] for col in index.columns],
+                                 int(bounds[p + 1] - bounds[p]))
+        return writer.close()
+    except BaseException:
+        writer.abort()
+        raise
+
+
+def _parse_header(data: np.ndarray, path: str) -> Dict:
+    """Validate preamble + header out of the (mapped or read) file bytes.
+
+    All reads come from ``data`` — one open of one inode — so a concurrent
+    atomic shard replacement can never mix one file's header with another's
+    payload; a loader sees the old store or the new one, whole.
+    """
+    size = int(data.size)
+    if size < PAYLOAD_START:
+        raise StoreCorruptError(f"{path}: {size} bytes, shorter than the "
+                                f"{PAYLOAD_START}-byte preamble")
+    magic, version, _flags, hdr_off, hdr_len, hdr_crc = \
+        _PREAMBLE.unpack(data[:_PREAMBLE.size].tobytes())
+    if magic != MAGIC:
+        raise StoreVersionError(f"{path}: bad magic {magic!r}")
+    if version != VERSION:
+        raise StoreVersionError(
+            f"{path}: format version {version}, this build reads "
+            f"{VERSION}")
+    if hdr_off + hdr_len > size:
+        raise StoreCorruptError(
+            f"{path}: header [{hdr_off}, {hdr_off + hdr_len}) past EOF "
+            f"({size} bytes) — truncated file")
+    raw = data[hdr_off:hdr_off + hdr_len].tobytes()
+    if (zlib.crc32(raw) & 0xFFFFFFFF) != hdr_crc:
+        raise StoreCorruptError(f"{path}: header checksum mismatch")
+    try:
+        meta = json.loads(raw)
+    except ValueError as exc:
+        raise StoreCorruptError(f"{path}: unparseable header: {exc}") from exc
+    meta["_header_off"] = hdr_off
+    meta["_file_size"] = size
+    return meta
+
+
+def load(path: str, mmap: bool = True,
+         verify: Optional[bool] = None) -> BitmapIndex:
+    """Open a store file as a ``BitmapIndex``.
+
+    ``mmap=True`` (the warm-start path) wraps every bitmap in a read-only
+    memmap view — open time is O(TOC), no payload page is read until a query
+    touches it.  ``verify`` forces (or skips) per-segment CRC checks; the
+    default verifies on the in-memory path and trusts the mapped payload on
+    the mmap path (header and TOC bounds are *always* validated, so
+    truncation is caught either way).
+    """
+    if mmap:
+        try:
+            data = np.memmap(path, dtype=np.uint8, mode="r")
+        except (ValueError, OSError) as exc:
+            raise StoreCorruptError(f"{path}: cannot map: {exc}") from exc
+    else:
+        with open(path, "rb") as f:
+            data = np.frombuffer(f.read(), dtype=np.uint8)
+    meta = _parse_header(data, path)
+    if verify is None:
+        verify = not mmap
+    payload_end = meta["_header_off"]
+    encoders = []
+    for c, cm in enumerate(meta["columns"]):
+        enc = ColumnEncoder(cm["card"], cm["k"], cm["allocation"])
+        if enc.L != cm["L"]:
+            raise StoreCorruptError(
+                f"{path}: column {c} encoder derives L={enc.L} but the file "
+                f"records L={cm['L']}")
+        encoders.append(enc)
+    bounds = np.asarray(meta["partition_bounds"], dtype=np.int64)
+    toc = meta["toc"]
+    if len(toc) != len(encoders):
+        raise StoreCorruptError(f"{path}: TOC covers {len(toc)} columns for "
+                                f"{len(encoders)} encoders")
+    columns: List[ColumnIndex] = []
+    for c, enc in enumerate(encoders):
+        if len(toc[c]) != len(bounds) - 1:
+            raise StoreCorruptError(
+                f"{path}: column {c} TOC has {len(toc[c])} partitions, "
+                f"bounds imply {len(bounds) - 1}")
+        parts: List[List[EWAH]] = []
+        for p, entries in enumerate(toc[c]):
+            rows_part = int(bounds[p + 1] - bounds[p])
+            if len(entries) != enc.L:
+                raise StoreCorruptError(
+                    f"{path}: column {c} partition {p} TOC has "
+                    f"{len(entries)} bitmaps, encoder needs {enc.L}")
+            bms = []
+            for b, (off, n_words, crc) in enumerate(entries):
+                end = off + 4 * n_words
+                if off < PAYLOAD_START or end > payload_end or off % 4:
+                    raise StoreCorruptError(
+                        f"{path}: segment (col {c}, part {p}, bitmap {b}) "
+                        f"spans [{off}, {end}), outside the word-aligned "
+                        f"payload [{PAYLOAD_START}, {payload_end})")
+                words = data[off:end].view(WORD_DTYPE)
+                if verify and (zlib.crc32(words.tobytes()) & 0xFFFFFFFF) != crc:
+                    raise StoreCorruptError(
+                        f"{path}: checksum mismatch in segment (col {c}, "
+                        f"part {p}, bitmap {b})")
+                bms.append(EWAH(words, rows_part))
+            parts.append(bms)
+        columns.append(ColumnIndex(encoder=enc, bitmaps=parts))
+    names = meta["column_names"]
+    return BitmapIndex(n_rows=int(meta["n_rows"]), columns=columns,
+                       partition_bounds=bounds,
+                       column_names=list(names) if names else None)
+
+
+# ---------------------------------------------------------------------------
+# Sharded layout: a directory of per-shard store files + a manifest.
+# ---------------------------------------------------------------------------
+
+def shard_path(dir_path: str, i: int) -> str:
+    return os.path.join(dir_path, SHARD_FILE_FMT.format(i))
+
+
+def _write_manifest(dir_path: str, shard_files: List[str],
+                    column_names: Optional[Sequence[str]]) -> None:
+    body = json.dumps({
+        "version": VERSION,
+        "shards": shard_files,
+        "column_names": list(column_names) if column_names else None,
+    }, indent=1).encode()
+    tmp = os.path.join(dir_path, f".{MANIFEST_NAME}.tmp.{os.getpid()}")
+    with open(tmp, "wb") as f:
+        f.write(body)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(dir_path, MANIFEST_NAME))
+    _fsync_dir(dir_path)
+
+
+def save_sharded(index, dir_path: str) -> str:
+    """Write a ``ShardedIndex`` (or a 1-shard ``BitmapIndex``) as a
+    directory of atomic per-shard store files plus a manifest."""
+    from .shard import ShardedIndex  # local: shard imports store lazily too
+    os.makedirs(dir_path, exist_ok=True)
+    shards = index.shards if isinstance(index, ShardedIndex) else [index]
+    names = index.column_names
+    files = []
+    for i, sh in enumerate(shards):
+        save(sh, shard_path(dir_path, i))
+        files.append(SHARD_FILE_FMT.format(i))
+    _write_manifest(dir_path, files, names)
+    return dir_path
+
+
+def write_shard_file(dir_path: str, i: int, shard: BitmapIndex) -> str:
+    """Atomically replace shard ``i``'s store file (write-temp + rename).
+
+    The file-level half of incremental reindex: readers holding the old
+    mmap keep serving the old inode; ``ShardedIndex.load`` / ``reload``
+    picks up the new file whole or not at all.
+    """
+    path = shard_path(dir_path, i)
+    if not os.path.exists(os.path.join(dir_path, MANIFEST_NAME)):
+        raise StoreError(f"{dir_path} has no {MANIFEST_NAME}; save the "
+                         f"sharded index first")
+    return save(shard, path)
+
+
+def _read_manifest(dir_path: str) -> Dict:
+    manifest_path = os.path.join(dir_path, MANIFEST_NAME)
+    try:
+        with open(manifest_path, "rb") as f:
+            manifest = json.loads(f.read())
+    except OSError as exc:
+        raise StoreError(f"{dir_path}: no readable {MANIFEST_NAME} "
+                         f"({exc})") from exc
+    except ValueError as exc:
+        raise StoreCorruptError(
+            f"{manifest_path}: unparseable manifest: {exc}") from exc
+    if manifest.get("version") != VERSION:
+        raise StoreVersionError(
+            f"{manifest_path}: manifest version {manifest.get('version')}, "
+            f"this build reads {VERSION}")
+    return manifest
+
+
+def load_sharded(dir_path: str, mmap: bool = True,
+                 verify: Optional[bool] = None, **shard_kwargs):
+    """Open a sharded store directory as a ``ShardedIndex``.
+
+    Extra keyword arguments (e.g. ``cache_entries`` / ``cache_bytes``) are
+    forwarded to the ``ShardedIndex`` constructor."""
+    from .shard import ShardedIndex
+    manifest = _read_manifest(dir_path)
+    shards = [load(os.path.join(dir_path, name), mmap=mmap, verify=verify)
+              for name in manifest["shards"]]
+    return ShardedIndex(shards, column_names=manifest.get("column_names"),
+                        **shard_kwargs)
+
+
+def shard_fingerprints(dir_path: str) -> List[tuple]:
+    """(name, mtime_ns, size) per shard file — the change detector behind
+    ``/admin/reload``: a rename updates both fields atomically."""
+    manifest = _read_manifest(dir_path)
+    out = []
+    for name in manifest["shards"]:
+        try:
+            st = os.stat(os.path.join(dir_path, name))
+        except OSError as exc:
+            raise StoreError(
+                f"{dir_path}: shard file {name} unreadable ({exc})") from exc
+        out.append((name, st.st_mtime_ns, st.st_size))
+    return out

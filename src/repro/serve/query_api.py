@@ -17,10 +17,20 @@ Production-shaped serving on a dependency-free stack (stdlib ``http.server``
   or a ``ShardedIndex``; sharded execution fans out on a dedicated shard
   pool (shard tasks submit no further work, so the two pools cannot
   deadlock).
+* **Warm start** — ``--index-dir`` opens a saved, memory-mapped sharded
+  store (``repro.core.store``) at boot: no sort, no rebuild, serving starts
+  in milliseconds and bitmap pages fault in on first touch.  ``--save-index``
+  builds the demo index once, persists it, and serves from the mmap — the
+  build-once / serve-many flow.  ``POST /admin/reload`` re-stats the shard
+  files and swaps in any that changed on disk (an atomically-replaced shard
+  file from an out-of-band reindex), keeping the *other* shards' caches
+  warm.  Result-cache entries can also expire after ``--cache-ttl`` seconds
+  (lazily, on lookup), with hit/miss/expired counters in ``/stats``.
 * ``serve()`` — a threaded HTTP server exposing the service:
     POST /query             {"query": <expr>}          -> one result
     POST /query             {"queries": [<expr>, ...]} -> batched results
     POST /admin/invalidate                             -> drop the result cache
+    POST /admin/reload                                 -> reopen changed shards
     GET  /healthz                                      -> liveness
     GET  /stats                                        -> index + cache stats
 
@@ -33,12 +43,17 @@ Wire format for expressions (mirrors the AST):
 
 Run standalone against a synthetic sorted table:
     PYTHONPATH=src python -m repro.serve.query_api --port 8321 --shards 4
+Build once, then warm-start serve:
+    PYTHONPATH=src python -m repro.serve.query_api --shards 4 --save-index /tmp/idx
+    PYTHONPATH=src python -m repro.serve.query_api --index-dir /tmp/idx
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, List, Optional, Sequence
@@ -46,6 +61,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core import BitmapIndex, ShardedIndex, lex_sort, synth
+from repro.core import store as index_store
 from repro.core.expr import And, Eq, Expr, In, Not, Or, Range, canonical_key
 from repro.core.executor import execute
 from repro.core.lru import LRUCache
@@ -116,16 +132,30 @@ class QueryService:
                  max_rows: int = 10_000, pool_workers: int = 4,
                  cache_entries: int = 256,
                  cache_bytes: Optional[int] = DEFAULT_CACHE_BYTES,
-                 shard_processes: int = 0):
+                 cache_ttl: Optional[float] = None,
+                 shard_processes: int = 0,
+                 index_dir: Optional[str] = None,
+                 fingerprints: Optional[List[tuple]] = None):
         self.index = index
         self.backend = backend
         self.max_rows = max_rows  # cap rows per response, count is exact
         self.cache = LRUCache(capacity=cache_entries, max_bytes=cache_bytes,
-                              sizeof=lambda bm: bm.size_bytes)
+                              sizeof=lambda bm: bm.size_bytes,
+                              ttl=cache_ttl)
         self._generation = 0
         self.pool_workers = max(int(pool_workers), 1)
         self._pool = ThreadPoolExecutor(max_workers=self.pool_workers,
                                         thread_name_prefix="query")
+        # warm-start bookkeeping: the store directory this service was
+        # opened from (if any) and the shard-file fingerprints, so
+        # /admin/reload can swap exactly the shards whose files changed.
+        # ``from_dir`` snapshots the fingerprints *before* loading — a shard
+        # replaced between stat and load then just looks changed and gets
+        # reloaded, never silently skipped.
+        self.index_dir = index_dir
+        if index_dir and fingerprints is None:
+            fingerprints = index_store.shard_fingerprints(index_dir)
+        self._fingerprints = fingerprints
         # shard fan-out pool: query workers wait on shard tasks, shard tasks
         # submit nothing, so the wait graph is acyclic (no pool deadlock).
         # ``shard_processes`` > 0 swaps in a fork-based ShardProcessPool so
@@ -134,10 +164,26 @@ class QueryService:
         self.shard_processes = int(shard_processes)
         self._shard_pool = self._make_shard_pool()
 
+    @classmethod
+    def from_dir(cls, index_dir: str, mmap: bool = True,
+                 **kwargs) -> "QueryService":
+        """Warm start: open a saved sharded store directory and serve it.
+
+        With ``mmap`` (default) open time is metadata-only — bitmap words
+        stay on disk until queries touch them."""
+        # fingerprints BEFORE the load: a file replaced mid-open reads as
+        # changed on the next /admin/reload instead of invisibly current
+        prints = index_store.shard_fingerprints(index_dir)
+        index = ShardedIndex.load(index_dir, mmap=mmap)
+        return cls(index, index_dir=index_dir, fingerprints=prints, **kwargs)
+
     def _make_shard_pool(self):
         if self.shard_processes > 0 and isinstance(self.index, ShardedIndex):
             from repro.core.shard import ShardProcessPool
-            return ShardProcessPool(self.index, workers=self.shard_processes)
+            # with a store directory, workers mmap-open the shard files
+            # themselves instead of depending on fork-COW of the parent heap
+            return ShardProcessPool(self.index, workers=self.shard_processes,
+                                    index_dir=self.index_dir)
         return ThreadPoolExecutor(max_workers=self.pool_workers,
                                   thread_name_prefix="shard")
 
@@ -165,13 +211,55 @@ class QueryService:
         The full-result cache is retired via the generation counter (a
         cached result spans all shards), but the *other* shards' local
         result caches stay warm — re-running a cached query only recomputes
-        the replaced slice."""
+        the replaced slice.
+
+        For a store-directory-backed service the shard file is rewritten
+        (atomically) *first*: the directory is the source of truth — mmap
+        process-pool workers re-open shards from it after the generation
+        bump, and a restart must come back with the same data the live
+        service answered with."""
         idx = self.index
         if not isinstance(idx, ShardedIndex):
             raise TypeError("replace_shard needs a ShardedIndex")
-        idx.replace_shard(i, shard)
+        if self.index_dir:
+            idx.replace_shard_file(self.index_dir, i, shard)
+            self._fingerprints = index_store.shard_fingerprints(
+                self.index_dir)
+        else:
+            idx.replace_shard(i, shard)
         self._generation += 1
         self.cache.clear()
+
+    def reload_from_dir(self, mmap: bool = True) -> Dict:
+        """Re-stat the store directory and swap in shards whose files
+        changed on disk (atomically replaced by an out-of-band reindex).
+
+        Unchanged shards keep their objects *and* their warm shard-local
+        result caches; a shard-count change falls back to a full
+        ``set_index``.  Returns a summary for the ``/admin/reload`` caller.
+        """
+        if not self.index_dir:
+            raise ValueError("service was not opened from an index dir")
+        new_prints = index_store.shard_fingerprints(self.index_dir)
+        old_prints = self._fingerprints or []
+        if (not isinstance(self.index, ShardedIndex)
+                or len(new_prints) != len(old_prints)):
+            self.set_index(ShardedIndex.load(self.index_dir, mmap=mmap))
+            self._fingerprints = new_prints
+            return {"reloaded": list(range(len(new_prints))), "full": True,
+                    "n_shards": len(new_prints)}
+        changed = [i for i, (a, b) in enumerate(zip(old_prints, new_prints))
+                   if a != b]
+        for i in changed:
+            shard = index_store.load(
+                os.path.join(self.index_dir, new_prints[i][0]), mmap=mmap)
+            # in-memory swap only: the directory already holds this shard
+            self.index.replace_shard(i, shard)
+            self._generation += 1
+            self.cache.clear()
+        self._fingerprints = new_prints
+        return {"reloaded": changed, "full": False,
+                "n_shards": len(new_prints)}
 
     def invalidate_cache(self) -> None:
         self.cache.clear()
@@ -288,6 +376,15 @@ class _Handler(BaseHTTPRequestHandler):
             self.service.invalidate_cache()
             self._send(200, {"ok": True})
             return
+        if self.path == "/admin/reload":
+            try:
+                out = self.service.reload_from_dir()
+            except (ValueError, index_store.StoreError) as exc:
+                self._send(400, {"error": str(exc)})
+                return
+            out["ok"] = True
+            self._send(200, out)
+            return
         if self.path != "/query":
             self._send(404, {"error": f"unknown path {self.path}"})
             return
@@ -355,19 +452,46 @@ def main(argv=None):
                     help="LRU result-cache entries (0 disables)")
     ap.add_argument("--cache-mb", type=float, default=DEFAULT_CACHE_BYTES / 2**20,
                     help="result-cache byte budget in MiB (total EWAH bytes)")
+    ap.add_argument("--cache-ttl", type=float, default=0,
+                    help="result-cache entry TTL in seconds (0 = no expiry)")
     ap.add_argument("--shard-procs", type=int, default=0,
                     help="shard-parallel worker *processes* (0 = thread pool)")
+    ap.add_argument("--index-dir", default=None,
+                    help="warm start: serve a saved index store directory "
+                         "(mmap'd; skips the demo build entirely)")
+    ap.add_argument("--save-index", default=None, metavar="DIR",
+                    help="build the demo index, persist it to DIR, then "
+                         "serve from the saved (mmap'd) files")
     args = ap.parse_args(argv)
-    service = QueryService(_demo_index(args.rows, args.shards),
-                           backend=args.backend, pool_workers=args.workers,
-                           cache_entries=args.cache,
-                           cache_bytes=int(args.cache_mb * 2**20),
-                           shard_processes=args.shard_procs)
+    kw = dict(backend=args.backend, pool_workers=args.workers,
+              cache_entries=args.cache,
+              cache_bytes=int(args.cache_mb * 2**20),
+              cache_ttl=args.cache_ttl or None,
+              shard_processes=args.shard_procs)
+    if args.index_dir:
+        t0 = time.perf_counter()
+        service = QueryService.from_dir(args.index_dir, **kw)
+        origin = (f"warm start {args.index_dir} "
+                  f"({time.perf_counter() - t0:.3f}s open)")
+    else:
+        index = _demo_index(args.rows, args.shards)
+        if args.save_index:
+            if not isinstance(index, ShardedIndex):
+                index = ShardedIndex([index])
+            index.save(args.save_index)
+            service = QueryService.from_dir(args.save_index, **kw)
+            origin = f"built + saved to {args.save_index}, serving mmap'd"
+        else:
+            service = QueryService(index, **kw)
+            origin = f"built {args.rows} rows in memory"
+    idx = service.index
     srv = make_server(service, args.host, args.port)
-    print(f"[query_api] serving {args.rows} rows on "
+    print(f"[query_api] {origin}; serving {idx.n_rows} rows on "
           f"http://{args.host}:{srv.server_address[1]} "
-          f"(backend={args.backend}, shards={args.shards or 1}, "
-          f"workers={args.workers}, cache={args.cache})", flush=True)
+          f"(backend={args.backend}, "
+          f"shards={getattr(idx, 'n_shards', 1)}, "
+          f"workers={args.workers}, cache={args.cache}, "
+          f"ttl={args.cache_ttl or 'off'})", flush=True)
     srv.serve_forever()
 
 

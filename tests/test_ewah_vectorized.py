@@ -162,3 +162,52 @@ def test_result_runlist_reuse(op):
     assert out._rl is not None
     chained = out & A
     assert np.array_equal(chained.words, binary_op(out, A, "and").words)
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(0, 2**31), st.integers(0, 3000), st.integers(2, 7))
+def test_kway_and_many_mixed_operands(seed, n, k):
+    """One-pass k-way AND vs the cursor-oracle fold, with degenerate
+    operands (all-zero / all-one) mixed in so the short-circuit and
+    identity-drop paths are hit alongside the aligned intersection."""
+    rng = np.random.default_rng(seed)
+    bms = []
+    for i in range(k):
+        style = int(rng.integers(0, 4))
+        bms.append(EWAH.from_bool(structured_bits(seed + 7 * i, n, style)))
+    ref = bms[0]
+    for bm in bms[1:]:
+        ref = binary_op(ref, bm, "and")
+    got = and_many(bms)
+    assert got.n_bits == ref.n_bits
+    assert np.array_equal(got.words, ref.words)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 2**31), st.integers(0, 4096), st.integers(0, 3))
+def test_from_positions_runlist_direct(seed, n, style):
+    """``from_positions`` must emit words identical to the dense build and
+    come out with its run-list memo already populated (no ``_emit``
+    round-trip, no cold decode on first use)."""
+    bits = structured_bits(seed, n, style)
+    direct = EWAH.from_positions(np.flatnonzero(bits), n)
+    dense = EWAH.from_bool(bits)
+    assert np.array_equal(direct.words, dense.words)
+    assert direct._rl is not None  # memo warm at construction
+    assert np.array_equal(direct.runlist().bounds, dense.runlist().bounds)
+    assert np.array_equal(direct.to_bool(), bits)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 2**31), st.integers(0, 4096), st.integers(0, 3))
+def test_invert_runlist_direct(seed, n, style):
+    """``~`` runs on the run-list: word-identical to the dense complement
+    (pad bits clear), memo warm, and an involution on the words."""
+    bits = structured_bits(seed, n, style)
+    e = EWAH.from_bool(bits)
+    inv = ~e
+    assert np.array_equal(inv.words, EWAH.from_bool(~bits).words)
+    assert inv._rl is not None
+    assert np.array_equal((~inv).words, e.words)
+    if n:
+        assert inv.count() == n - e.count()  # pad bits stayed clear

@@ -1,12 +1,19 @@
-"""Quickstart: sorted EWAH bitmap indexes — spill-to-disk sorting, durable
-memory-mapped stores, the composable query API, and warm-start serving.
+"""Quickstart: the ``Dataset`` façade — sort, index, persist, query and
+aggregate a fact table with one object.
 
-The build-once / serve-many flow this walks through:
+The lifecycle this walks through:
 
-    sort (spilled runs) -> stream into IndexBuilder(store_path=...) ->
-    durable .ridx files -> ShardedIndex.load(dir, mmap=True) ->
-    QueryService.from_dir(dir)   (or:  python -m repro.serve.query_api
-                                       --index-dir DIR)
+    Dataset.from_rows(table, sort="lex", shards=4, spill_dir=...)
+        -> external-merge sort (spilled runs) -> streaming sharded build
+    .save(dir)   -> durable per-shard .ridx files + manifest
+    Dataset.open(dir)                 -> zero-copy mmap warm start
+    .query().where(e).count()         -> compressed-domain popcount
+    .query().where(e).group_by(c).count() -> bincount-shaped aggregation
+    .query().top_k(c, k)              -> heavy hitters, no rows decompressed
+    .serve()                          -> pooled caching HTTP service
+
+Every layer stays importable (sorting / IndexBuilder / store /
+ShardedIndex / QueryService) — the façade just owns their composition.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -17,13 +24,9 @@ import time
 
 import numpy as np
 
-from repro.core import (BitmapIndex, IndexBuilder, QueryBatch, ShardedIndex,
-                        SortStats, col, execute, explain,
-                        external_sorted_chunks, lex_sort, order_columns,
-                        plan, random_shuffle)
+from repro.core import BitmapIndex, Dataset, col, lex_sort, synth
 from repro.core import query as q
-from repro.core import synth
-from repro.serve.query_api import QueryService
+from repro.serve.query_api import expr_to_json
 
 
 def main():
@@ -41,114 +44,83 @@ def _run(workdir):
     table = synth.census_like_table(50_000, rng)
     ranked, uniques = synth.factorize(table)
     cards = [len(u) for u in uniques]
+    names = ["region", "day", "user"]
     print(f"fact table: {len(ranked)} rows, cardinalities {cards}")
 
-    # --- the paper's recipe, at out-of-core scale ---------------------------
-    # 1. order columns (high-cardinality first when values repeat >= 32x)
-    order = order_columns(cards, "card_desc")
-    # 2. sort the fact table lexicographically *without* holding it in
-    #    memory: chunk-sorted runs spill to disk as packed-uint64 key +
-    #    permutation memmap files, then a bounded-memory k-way merge
-    #    recovers the full sort (block-wise sorting — sort chunks,
-    #    concatenate — would lose most of the compression, paper §4.4).
-    # 3. stream the merged chunks into an IndexBuilder that emits every
-    #    completed partition straight into a durable store file: the table
-    #    is sorted, indexed AND persisted in O(chunk + partition) memory.
-    names = ["region", "day", "user"]
-    store_path = os.path.join(workdir, "index.ridx")
-    stats = SortStats()
-    builder = IndexBuilder(cards, k=1, column_names=names,
-                           partition_rows=8192, store_path=store_path)
-    for chunk in external_sorted_chunks(
-            ranked, chunk_rows=8192, col_order=order,
-            spill_dir=os.path.join(workdir, "runs"), stats=stats):
-        builder.append(chunk)
-    idx_sorted = builder.finish()  # the store, reopened mmap'd + zero-copy
-    print(f"spilled {stats.n_runs} runs ({stats.spilled_bytes / 1e6:.1f} MB) "
-          f"to disk; peak sort buffering {stats.peak_buffer_bytes / 1e3:.0f} KB")
+    # --- the paper's recipe, one call -------------------------------------
+    # sort="lex" picks the §4.3 frequency-aware column order and runs an
+    # external-merge sort; spill_dir sends the chunk-sorted runs to disk and
+    # streams merged chunks straight into per-shard index builders, so the
+    # whole sort->build pipeline is O(chunk + partition) memory.
+    ds = Dataset.from_rows(ranked, names, sort="lex", k=1, shards=4,
+                           spill_dir=os.path.join(workdir, "runs"),
+                           chunk_rows=8192)
+    shuffled = ranked[rng.permutation(len(ranked))]
+    raw = Dataset.from_rows(shuffled, names, sort="none", k=1)
+    print(f"index size shuffled: {raw.size_words} words, "
+          f"sorted: {ds.size_words} words "
+          f"-> sorting gain {raw.size_words / ds.size_words:.2f}x "
+          f"({ds.n_shards} shards, col order {ds.sort_order})")
 
-    # identical to the one-shot in-memory build (same partitioning)
-    sorted_table = ranked[lex_sort(ranked, order)]
-    assert idx_sorted.size_words == BitmapIndex.build(
-        sorted_table, k=1, cards=cards, partition_rows=8192).size_words
-
-    # versus an unsorted baseline
-    shuffled = ranked[random_shuffle(ranked, rng)]
-    idx_raw = BitmapIndex.build(shuffled, k=1, cards=cards)
-
-    print(f"index size unsorted: {idx_raw.size_words} words "
-          f"({4 * idx_raw.size_words / 1e6:.2f} MB)")
-    print(f"index size sorted:   {idx_sorted.size_words} words "
-          f"({4 * idx_sorted.size_words / 1e6:.2f} MB)  "
-          f"(streamed, never sorted more than 8192 rows at once)")
-    print(f"sorting gain: {idx_raw.size_words / idx_sorted.size_words:.2f}x")
-
-    # --- composable query expressions ---------------------------------------
-    # build with operator overloading; the planner rewrites the tree (De
-    # Morgan push-down, size-ordered ANDs, andnot fusion) and the executor
-    # picks EWAH or the Pallas kernel path per node by operand density
+    # --- statements: filters + aggregates ---------------------------------
+    # the spill build retains no rows; recover the sorted view for the
+    # oracle checks with the same order the dataset sorted under
+    sorted_table = ranked[lex_sort(ranked, ds.sort_order)]
     v_region = int(sorted_table[0, 0])
     v_day = int(sorted_table[0, 1])
-    expr = ((col("region") == v_region)
-            & ~col("day").isin([v_day, v_day + 1])
-            & col("user").between(0, 5))
-    print(f"\nquery: {expr}")
-    print("plan:")
-    print(explain(plan(idx_sorted, expr)))
+    where = ((col("region") == v_region)
+             & ~col("day").isin([v_day, v_day + 1]))
+    sel = ds.query().where(where)
 
-    hits = execute(idx_sorted, expr)  # operands are mmap'd file views
-    print(f"-> {hits.count()} rows, result bitmap {hits.size_words} words")
+    n = sel.count()  # compressed-domain popcount, no rows materialized
+    print(f"\nwhere {where}\ncount: {n}")
 
-    # bit-identical to a naive row scan
-    rows = hits.set_bits()
-    assert np.array_equal(rows, q.naive_eval_rows(sorted_table, expr,
-                                                  names=names))
-    print("verified against the row-scan oracle.")
+    by_day = sel.group_by("day").count()  # np.bincount-shaped vector
+    top = sel.top_k("day", 3)
+    print(f"group_by(day): {int(by_day.sum())} rows over "
+          f"{int((by_day > 0).sum())} days; top-3 {top}")
 
-    # --- sharded execution + a durable shard directory ----------------------
-    # split rows into shards (the scale-out unit): per-shard plans adapt to
-    # each shard's compressed sizes, results concatenate exactly.  Saving
-    # writes one atomic store file per shard + a manifest; replace one
-    # shard's file and live services pick it up via /admin/reload.
-    sharded = ShardedIndex.build(sorted_table, shard_rows=8192, k=1,
-                                 cards=cards, column_names=names)
-    assert execute(sharded, expr) == hits
-    shard_dir = os.path.join(workdir, "shards")
-    sharded.save(shard_dir)
+    # bit-identical to the NumPy oracle on the sorted rows
+    mask = q.naive_eval(sorted_table, where, names=names)
+    assert n == int(mask.sum())
+    assert np.array_equal(by_day, np.bincount(sorted_table[mask, 1],
+                                              minlength=ds.card("day")))
+    rows = sel.rows(limit=5)
+    print(f"first rows: {rows.tolist()} (rows() is the only terminal that "
+          f"decompresses)")
+    print("\nplan:")
+    print(sel.explain())
+
+    # --- persist + warm start ----------------------------------------------
+    idx_dir = os.path.join(workdir, "idx")
+    ds.save(idx_dir)
     t0 = time.perf_counter()
-    warm = ShardedIndex.load(shard_dir, mmap=True)
-    open_s = time.perf_counter() - t0
-    assert execute(warm, expr) == hits
-    print(f"\nsharded: {sharded.n_shards} shards, "
-          f"{sharded.size_words} words total — saved to {shard_dir}, "
-          f"reopened mmap'd in {open_s * 1e3:.1f} ms, same bits, same answer")
+    warm = Dataset.open(idx_dir)  # mmap: no bitmap payload page is read
+    open_ms = (time.perf_counter() - t0) * 1e3
+    wsel = warm.query().where(where)
+    assert wsel.count() == n
+    assert np.array_equal(wsel.group_by("day").count(), by_day)
+    print(f"\nsaved to {idx_dir}; reopened mmap'd in {open_ms:.1f} ms — "
+          f"same counts from the store files")
 
-    # --- batched execution shares loaded operands ---------------------------
-    batch = QueryBatch([
-        (col("region") == v_region) & (col("user") == 0),
-        (col("region") == v_region) | (col("day") == v_day),
-        ~(col("region") == v_region) & col("day").between(0, 9),
-    ])
-    for e, bm in zip(batch.exprs, batch.execute(warm)):
-        print(f"batch {e}: {bm.count()} rows")
-
-    # --- warm-start serving -------------------------------------------------
-    # the service opens the saved shard files (mmap) instead of rebuilding:
-    # restart-to-serving is milliseconds.  Results are cached by canonical
-    # expression key with an optional TTL; /admin/reload swaps in shards
-    # whose files changed on disk, keeping sibling shard caches warm.
-    # Same thing from the CLI:  python -m repro.serve.query_api --index-dir
-    svc = QueryService.from_dir(shard_dir, pool_workers=4,
-                                cache_entries=128, cache_ttl=300.0)
-    first = svc.query(expr)
-    again = svc.query(expr)
-    stats = svc.stats()["cache"]
-    print(f"\nservice: count={first['count']} cached={first['cached']} "
-          f"then cached={again['cached']} "
-          f"(cache {stats['hits']} hits / {stats['misses']} misses, "
-          f"ttl={stats['ttl']}s)")
-    assert again["rows"] == first["rows"]
+    # --- serving ------------------------------------------------------------
+    # the service executes statements over HTTP too:
+    #   {"select": {"count": true}, "where": ...}
+    #   {"select": {"group_count": "day"}, "where": ...}
+    #   {"select": {"top_k": {"col": "day", "k": 3}}, "where": ...}
+    svc = warm.serve(pool_workers=4, cache_entries=128)
+    out = svc.statement({"select": {"group_count": "day"},
+                         "where": expr_to_json(where)})
+    again = svc.statement({"select": {"count": True},
+                           "where": expr_to_json(where)})
+    assert out["counts"] == by_day.tolist() and again["count"] == n
+    print(f"service: group_count cached={out['cached']}, "
+          f"count={again['count']} "
+          f"(cache {svc.stats()['cache']['misses']} misses)")
     svc.close()
+
+    # power users: the layers are still right there
+    assert isinstance(warm.index.shards[0], BitmapIndex)
 
 
 if __name__ == "__main__":

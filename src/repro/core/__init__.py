@@ -17,13 +17,15 @@ from .sorting import (
 from .index import (BitmapIndex, ColumnIndex, IndexBuilder, concat_bitmaps,
                     validate_partition_rows)
 from .store import (StoreCorruptError, StoreError, StoreVersionError,
-                    StoreWriter, load, load_sharded, save, save_sharded,
-                    write_shard_file)
+                    StoreWriter, load, load_sharded, manifest_meta, save,
+                    save_sharded, write_shard_file)
 from .expr import (And, Col, Const, Eq, Expr, In, Not, Or, Range,
                    canonical_key, col)
 from .planner import explain, plan
-from .executor import QueryBatch, execute, execute_rows
+from .executor import (QueryBatch, execute, execute_count,
+                       execute_group_count, execute_rows)
 from .shard import ShardedIndex
+from .dataset import Dataset, Query
 from . import query
 from . import synth
 
@@ -38,8 +40,11 @@ __all__ = [
     "concat_bitmaps", "validate_partition_rows",
     "StoreError", "StoreVersionError", "StoreCorruptError", "StoreWriter",
     "save", "load", "save_sharded", "load_sharded", "write_shard_file",
+    "manifest_meta",
     "Expr", "Col", "col", "Eq", "In", "Range", "And", "Or", "Not", "Const",
     "canonical_key",
-    "plan", "explain", "execute", "execute_rows", "QueryBatch",
+    "plan", "explain", "execute", "execute_rows", "execute_count",
+    "execute_group_count", "QueryBatch",
+    "Dataset", "Query",
     "query", "synth",
 ]

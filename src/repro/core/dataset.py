@@ -1,0 +1,495 @@
+"""``Dataset``: the one-object façade over the whole fact-table lifecycle.
+
+The paper's pipeline — order columns, sort the fact table, build k-of-N
+EWAH bitmap indexes, query them — used to be hand-wired from five modules
+(``sorting`` → ``IndexBuilder`` → ``store`` → ``ShardedIndex`` →
+``QueryService``).  ``Dataset`` owns that composition end to end while every
+piece stays importable for power users:
+
+    from repro.core import Dataset, col
+
+    ds = Dataset.from_rows(table, columns=["region", "day", "user"],
+                           sort="lex", shards=4)
+    ds.save("/data/idx")                      # durable per-shard store files
+    ds = Dataset.open("/data/idx")            # zero-copy mmap warm start
+
+    q = ds.query().where(col("region") == 3)
+    q.count()                                 #   compressed-domain popcount
+    q.group_by("day").count()                 #   np.bincount-shaped vector
+    q.top_k("day", 5)                         #   [(value_rank, count), ...]
+    q.rows(limit=100)                         #   row ids, when you want rows
+
+    svc = ds.serve()                          # pooled, caching QueryService
+
+Statements, not just filters: ``query()`` returns a small immutable builder
+whose terminal methods compile to aggregation plan nodes (``PCount`` /
+``PGroupCount``) evaluated **in the compressed domain** — counts are
+memoized EWAH popcounts, group-by intersects each value bitmap with the
+shared filter by run-interval arithmetic, and on a sharded index every
+shard returns a partial count (vector) that the coordinator sums.  No
+aggregate ever materializes a global result bitmap, mirroring how
+Lemire/Kaser/Aouiche and the Roaring line evaluate aggregate workloads over
+attribute-value bitmaps without decompressing.
+
+Out-of-core builds: ``from_rows(..., spill_dir=...)`` streams chunk-sorted
+runs to disk, merges them back in bounded windows and feeds the index
+builder chunk by chunk (full-sort compression, O(chunk + partition)
+memory); ``from_chunks`` accepts a chunk iterator whose total size is
+unknown up front.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .expr import Expr
+from .index import WORD_ROWS, BitmapIndex, IndexBuilder
+from .shard import ShardedIndex
+from .sorting import (SortStats, external_merge_sort_perm,
+                      external_sorted_chunks, order_columns_freq_aware)
+
+DEFAULT_CHUNK_ROWS = 8192
+
+AnyIndex = Union[BitmapIndex, ShardedIndex]
+
+
+def _aligned_rows(n: int, parts: int) -> int:
+    """Rows per slice for ``parts`` row-slices of ``n`` rows, rounded up to
+    the 32-bit word quantum so interior shards stay concatenation-exact."""
+    r = -(-max(n, 1) // max(parts, 1))
+    return max(-(-r // WORD_ROWS) * WORD_ROWS, WORD_ROWS)
+
+
+def _table_cards(table: np.ndarray) -> List[int]:
+    n, d = table.shape
+    return [int(table[:, c].max()) + 1 if n else 1 for c in range(d)]
+
+
+def top_k_from_counts(counts: np.ndarray, k: int) -> List[Tuple[int, int]]:
+    """The ``k`` largest entries of a group-count vector as
+    ``[(value_rank, count), ...]``: descending count, ties by ascending
+    rank, zero-count values never included.  Shared by ``Query.top_k`` and
+    the serving layer's top-k statement."""
+    counts = np.asarray(counts)
+    nz = np.flatnonzero(counts)
+    order = nz[np.lexsort((nz, -counts[nz]))][:max(int(k), 0)]
+    return [(int(v), int(counts[v])) for v in order]
+
+
+class Dataset:
+    """A queryable fact table: index + names + (optionally) the sorted rows.
+
+    Build with ``from_rows`` / ``from_chunks``, reopen with ``open``;
+    construct directly only to wrap an index you already have.  The sorted
+    table is retained on in-memory builds (it feeds ``shard()`` re-slicing
+    and the pipeline's row-permutation bookkeeping) and absent on spilled
+    builds and store-opened datasets, where rows never lived in memory.
+    """
+
+    def __init__(self, index: AnyIndex,
+                 column_names: Optional[Sequence[str]] = None,
+                 table: Optional[np.ndarray] = None,
+                 row_perm: Optional[np.ndarray] = None,
+                 dir_path: Optional[str] = None,
+                 sort_order: Optional[Sequence[int]] = None,
+                 cards: Optional[Sequence[int]] = None,
+                 k: int = 1, allocation: str = "alpha",
+                 partition_rows: Optional[int] = None):
+        self.index = index
+        names = list(column_names) if column_names is not None \
+            else index.column_names
+        self.column_names = names
+        self.table = table
+        self.row_perm = row_perm
+        self.dir_path = dir_path
+        self.sort_order = list(sort_order) if sort_order is not None else None
+        self._cards = list(cards) if cards is not None else None
+        self._k = int(k)
+        self._allocation = allocation
+        self._partition_rows = partition_rows
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_rows(cls, rows: np.ndarray,
+                  columns: Optional[Sequence[str]] = None, *,
+                  sort: Union[str, Sequence[int]] = "lex",
+                  k: int = 1, allocation: str = "alpha",
+                  cards: Optional[Sequence[int]] = None,
+                  shards: int = 0,
+                  partition_rows: Optional[int] = None,
+                  spill_dir: Optional[str] = None,
+                  chunk_rows: int = DEFAULT_CHUNK_ROWS,
+                  sort_stats: Optional[SortStats] = None) -> "Dataset":
+        """Sort + index a fact table of integer value ranks in one call.
+
+        ``sort`` is ``"lex"`` (lexicographic with the paper's §4.3
+        frequency-aware column order — the compression recipe), ``"none"``
+        (index rows as given), or an explicit column-order sequence.  The
+        sort always runs as an external merge over ``chunk_rows``-row runs
+        (bit-identical permutation to ``lex_sort``); with ``spill_dir`` the
+        runs live on disk and sorted chunks stream straight into the index
+        builder, so peak memory is O(chunk + partition) and the sorted
+        table is *not* retained.  ``shards > 0`` cuts the sorted rows into
+        that many word-aligned row shards (the scale-out unit);
+        ``cards`` pins global cardinalities when ``rows`` may not contain
+        every value.
+        """
+        rows = np.asarray(rows)
+        if rows.ndim != 2:
+            raise ValueError(f"rows must be 2-D, got shape {rows.shape}")
+        n, d = rows.shape
+        if columns is not None and len(columns) != d:
+            raise ValueError(
+                f"columns has {len(columns)} names for {d} columns")
+        cards = list(cards) if cards is not None else _table_cards(rows)
+        order = cls._resolve_sort(sort, rows, cards, d)
+        names = list(columns) if columns is not None else None
+
+        if order is not None and spill_dir is not None:
+            # out-of-core: sorted chunks stream off merged on-disk runs and
+            # straight into the builder(s); the permutation never exists
+            part = partition_rows
+            if part is None:
+                part = max(chunk_rows - chunk_rows % WORD_ROWS, WORD_ROWS)
+            chunks = external_sorted_chunks(
+                rows, chunk_rows, order, spill_dir=spill_dir,
+                stats=sort_stats)
+            index = _build_from_chunks(chunks, n, cards, k, allocation,
+                                       shards, part, names)
+            return cls(index, names, dir_path=None, sort_order=order,
+                       cards=cards, k=k, allocation=allocation,
+                       partition_rows=part)
+
+        if order is not None:
+            perm = external_merge_sort_perm(rows, chunk_rows, order,
+                                            stats=sort_stats)
+            table = rows[perm]
+        else:
+            perm, table = None, rows
+        index = _build_from_chunks(
+            (table[s:s + chunk_rows] for s in range(0, max(n, 1), chunk_rows)),
+            n, cards, k, allocation, shards, partition_rows, names)
+        return cls(index, names, table=table, row_perm=perm,
+                   sort_order=order, cards=cards, k=k,
+                   allocation=allocation, partition_rows=partition_rows)
+
+    @classmethod
+    def from_chunks(cls, chunks: Iterable[np.ndarray],
+                    columns: Optional[Sequence[str]] = None, *,
+                    cards: Optional[Sequence[int]] = None,
+                    spill_dir: Optional[str] = None,
+                    **kwargs) -> "Dataset":
+        """Build from an iterator of row chunks of unknown total size.
+
+        With ``spill_dir`` the incoming chunks are appended to a flat file
+        and reopened as a memmap — the sort's random-access input — so the
+        raw table is never resident; without it the chunks are concatenated
+        in memory.  Everything else (``sort``, ``k``, ``shards``, ...)
+        behaves exactly like ``from_rows``.
+        """
+        it = iter(chunks)
+        if spill_dir is None:
+            buf = [np.atleast_2d(np.asarray(c)) for c in it if len(c)]
+            if not buf:
+                raise ValueError("from_chunks got no rows")
+            table = np.concatenate(buf, axis=0)
+            return cls.from_rows(table, columns, cards=cards, **kwargs)
+        os.makedirs(spill_dir, exist_ok=True)
+        path = os.path.join(spill_dir, "input-rows.i64")
+        n = d = 0
+        with open(path, "wb") as f:
+            for c in it:
+                c = np.atleast_2d(np.asarray(c))
+                if not len(c):
+                    continue
+                if d == 0:
+                    d = c.shape[1]
+                elif c.shape[1] != d:
+                    raise ValueError(
+                        f"chunk has {c.shape[1]} columns, expected {d}")
+                np.ascontiguousarray(c, dtype=np.int64).tofile(f)
+                n += len(c)
+        if n == 0:
+            raise ValueError("from_chunks got no rows")
+        table = np.memmap(path, dtype=np.int64, mode="r", shape=(n, d))
+        return cls.from_rows(table, columns, cards=cards,
+                             spill_dir=spill_dir, **kwargs)
+
+    @staticmethod
+    def _resolve_sort(sort, rows, cards, d) -> Optional[List[int]]:
+        if isinstance(sort, str):
+            if sort == "none":
+                return None
+            if sort == "lex":
+                return order_columns_freq_aware(rows, cards)
+            raise ValueError(
+                f"sort must be 'lex', 'none' or a column order, got {sort!r}")
+        order = [int(c) for c in sort]
+        if sorted(order) != list(range(d)):
+            raise ValueError(
+                f"explicit sort order {order} is not a permutation of "
+                f"range({d})")
+        return order
+
+    # -- durability ---------------------------------------------------------
+    def save(self, dir_path: str) -> "Dataset":
+        """Persist as a sharded store directory (atomic per-shard files +
+        manifest carrying the build recipe); returns self, now bound to the
+        directory so ``serve()`` warm-starts from it."""
+        index = self.index if isinstance(self.index, ShardedIndex) \
+            else ShardedIndex([self.index])
+        index.save(dir_path, meta={
+            "sort_order": self.sort_order,
+            "cards": self._cards,
+            "k": self._k,
+            "allocation": self._allocation,
+        })
+        self.dir_path = dir_path
+        return self
+
+    @classmethod
+    def open(cls, dir_path: str, mmap: bool = True,
+             verify: Optional[bool] = None) -> "Dataset":
+        """Warm start: reopen a saved dataset as zero-copy memmap views.
+
+        Open cost is metadata-only; bitmap pages fault in as queries touch
+        them.  The manifest's build recipe (sort order, cards, encoding)
+        is restored so ``explain``/``shard`` diagnostics stay meaningful.
+        """
+        from . import store
+        index = ShardedIndex.load(dir_path, mmap=mmap, verify=verify)
+        meta = store.manifest_meta(dir_path)
+        return cls(index, index.column_names, dir_path=dir_path,
+                   sort_order=meta.get("sort_order"),
+                   cards=meta.get("cards"),
+                   k=int(meta.get("k", 1)),
+                   allocation=meta.get("allocation", "alpha"))
+
+    # -- reshaping ----------------------------------------------------------
+    def shard(self, n_shards: int) -> "Dataset":
+        """Re-cut the dataset into ``n_shards`` row shards (a new Dataset).
+
+        Needs the retained sorted table (in-memory builds); datasets opened
+        from a store or built with ``spill_dir`` no longer hold rows —
+        rebuild from the source with ``shards=`` instead.
+        """
+        if self.table is None:
+            raise RuntimeError(
+                "shard() needs the retained table; this dataset was opened "
+                "from a store or spilled its build — rebuild with "
+                "Dataset.from_rows(..., shards=n)")
+        index = _build_from_chunks(
+            (self.table[s:s + DEFAULT_CHUNK_ROWS]
+             for s in range(0, max(len(self.table), 1), DEFAULT_CHUNK_ROWS)),
+            len(self.table), self._cards or _table_cards(self.table),
+            self._k, self._allocation, int(n_shards), self._partition_rows,
+            self.column_names)
+        return Dataset(index, self.column_names, table=self.table,
+                       row_perm=self.row_perm, sort_order=self.sort_order,
+                       cards=self._cards, k=self._k,
+                       allocation=self._allocation,
+                       partition_rows=self._partition_rows)
+
+    # -- stats --------------------------------------------------------------
+    @property
+    def n_rows(self) -> int:
+        return self.index.n_rows
+
+    @property
+    def n_columns(self) -> int:
+        idx = self.index
+        return idx.n_columns if isinstance(idx, ShardedIndex) \
+            else len(idx.columns)
+
+    @property
+    def n_shards(self) -> int:
+        return self.index.n_shards if isinstance(self.index, ShardedIndex) \
+            else 1
+
+    @property
+    def size_words(self) -> int:
+        return self.index.size_words
+
+    def card(self, col) -> int:
+        return self.index.card(self.index.resolve_column(col))
+
+    # -- querying -----------------------------------------------------------
+    def query(self, backend: str = "auto") -> "Query":
+        """Start a statement: ``.where(expr)`` narrows it, a terminal
+        (``count`` / ``group_by(...).count`` / ``top_k`` / ``rows``)
+        executes it."""
+        return Query(self.index, backend=backend)
+
+    def explain(self, e: Expr) -> str:
+        from .planner import explain, plan
+        idx = self.index
+        if isinstance(idx, ShardedIndex):
+            return (f"per-shard plans x{idx.n_shards}; shard 0:\n"
+                    + explain(plan(idx.shards[0], e)))
+        return explain(plan(idx, e))
+
+    # -- serving ------------------------------------------------------------
+    def serve(self, **service_kwargs):
+        """A pooled, caching ``QueryService`` over this dataset — warm
+        (mmap) when the dataset is bound to a store directory, in-memory
+        otherwise.  Keyword arguments pass through to ``QueryService``."""
+        from repro.serve.query_api import QueryService
+        if self.dir_path is not None:
+            return QueryService.from_dir(self.dir_path, **service_kwargs)
+        return QueryService(self.index, **service_kwargs)
+
+
+def _build_from_chunks(chunks: Iterable[np.ndarray], n_rows: int,
+                       cards: Sequence[int], k: int, allocation: str,
+                       shards: int, partition_rows: Optional[int],
+                       names: Optional[Sequence[str]]) -> AnyIndex:
+    """Stream row chunks into one index — monolithic, or cut into
+    ``shards`` word-aligned row shards built by independent builders."""
+    def builder():
+        return IndexBuilder(cards, k=k, allocation=allocation,
+                            partition_rows=partition_rows,
+                            column_names=names)
+
+    if shards and shards > 1:
+        shard_rows = _aligned_rows(n_rows, shards)
+        done: List[BitmapIndex] = []
+        cur, filled = builder(), 0
+        for chunk in chunks:
+            chunk = np.asarray(chunk)
+            while len(chunk):
+                take = min(shard_rows - filled, len(chunk))
+                cur.append(chunk[:take])
+                filled += take
+                chunk = chunk[take:]
+                if filled == shard_rows:
+                    done.append(cur.finish())
+                    cur, filled = builder(), 0
+        if filled or not done:
+            done.append(cur.finish())
+        else:
+            cur.abort()
+        return ShardedIndex(done, column_names=names)
+    b = builder()
+    for chunk in chunks:
+        b.append(chunk)
+    return b.finish()
+
+
+class Query:
+    """Immutable statement builder over an index (monolithic or sharded).
+
+    ``where`` AND-composes filters and returns a new ``Query``; terminal
+    methods execute.  Aggregate terminals stay in the compressed domain end
+    to end (see module docstring); ``rows`` is the only terminal that
+    materializes row ids.
+    """
+
+    __slots__ = ("_index", "_where", "_backend", "_pool")
+
+    def __init__(self, index: AnyIndex, where: Optional[Expr] = None,
+                 backend: str = "auto", pool=None):
+        self._index = index
+        self._where = where
+        self._backend = backend
+        self._pool = pool
+
+    def where(self, e: Expr) -> "Query":
+        if not isinstance(e, Expr):
+            raise TypeError(f"where() takes an Expr, got {e!r}")
+        combined = e if self._where is None else (self._where & e)
+        return Query(self._index, combined, self._backend, self._pool)
+
+    def with_pool(self, pool) -> "Query":
+        """Attach a shard worker pool (``concurrent.futures`` executor or
+        ``ShardProcessPool``) for shard-parallel execution."""
+        return Query(self._index, self._where, self._backend, pool)
+
+    @property
+    def expr(self) -> Optional[Expr]:
+        return self._where
+
+    # -- terminals ----------------------------------------------------------
+    def count(self) -> int:
+        """COUNT(*): memoized compressed-domain popcount; per-shard partial
+        counts are summed — no result bitmap, no row ids."""
+        from .executor import execute_count
+        return execute_count(self._index, self._where,
+                             backend=self._backend, pool=self._pool)
+
+    def group_by(self, col) -> "GroupedQuery":
+        return GroupedQuery(self, col)
+
+    def top_k(self, col, k: int) -> List[Tuple[int, int]]:
+        """The ``k`` most frequent value ranks of ``col`` under the filter,
+        as ``[(value_rank, count), ...]`` sorted by descending count (ties
+        by ascending rank); zero-count values never appear."""
+        return top_k_from_counts(self.group_by(col).count(), k)
+
+    def rows(self, limit: Optional[int] = None) -> np.ndarray:
+        """Matching row ids (sorted); the one terminal that decompresses.
+
+        With ``limit`` the decode itself is truncated: set-bit intervals
+        are walked only until ``limit`` ids are covered, so a small preview
+        of a huge result is O(limit), never O(result)."""
+        from .executor import execute
+        from .expr import Const
+        e = self._where if self._where is not None else Const(True)
+        bm = execute(self._index, e, backend=self._backend, pool=self._pool)
+        if limit is None:
+            return bm.set_bits()
+        limit = max(int(limit), 0)
+        out: List[np.ndarray] = []
+        got = 0
+        for s, t in zip(*bm.set_intervals()):
+            take = min(int(t - s), limit - got)
+            out.append(np.arange(s, s + take, dtype=np.int64))
+            got += take
+            if got >= limit:
+                break
+        return np.concatenate(out) if out else np.empty(0, np.int64)
+
+    def bitmap(self):
+        """The filter's EWAH result bitmap (compressed)."""
+        from .executor import execute
+        from .expr import Const
+        e = self._where if self._where is not None else Const(True)
+        return execute(self._index, e, backend=self._backend,
+                       pool=self._pool)
+
+    def explain(self) -> str:
+        """Plan tree(s) of the current filter."""
+        from .planner import Planner, explain
+        idx = self._index
+        target = idx.shards[0] if isinstance(idx, ShardedIndex) else idx
+        planner = Planner(target)
+        node = planner.plan(self._where) if self._where is not None \
+            else planner.plan_count(None)
+        head = (f"per-shard plans x{idx.n_shards}; shard 0:\n"
+                if isinstance(idx, ShardedIndex) else "")
+        return head + explain(node)
+
+
+class GroupedQuery:
+    """``query().group_by(col)`` — terminal ``count()`` only, by design."""
+
+    __slots__ = ("_query", "_col")
+
+    def __init__(self, query: Query, col):
+        self._query = query
+        self._col = col
+
+    def count(self) -> np.ndarray:
+        """Per-value counts of the grouped column under the query's filter:
+        an int64 vector of length ``card(col)``, bit-identical to
+        ``np.bincount`` over the matching rows — computed from the bitmaps
+        alone (interval intersection), with per-shard partial vectors
+        summed at the coordinator."""
+        from .executor import execute_group_count
+        q = self._query
+        return execute_group_count(q._index, self._col, q._where,
+                                   backend=q._backend, pool=q._pool)
+
+    def top(self, k: int) -> List[Tuple[int, int]]:
+        return self._query.top_k(self._col, k)

@@ -93,13 +93,14 @@ class EWAH:
     exactly once.
     """
 
-    __slots__ = ("words", "n_bits", "_rl", "_popcnt")
+    __slots__ = ("words", "n_bits", "_rl", "_popcnt", "_iv")
 
     def __init__(self, words: np.ndarray, n_bits: int):
         self.words = np.asarray(words, dtype=WORD_DTYPE)
         self.n_bits = int(n_bits)
         self._rl: Optional["RunList"] = None
         self._popcnt: Optional[int] = None
+        self._iv: Optional[Tuple[np.ndarray, np.ndarray]] = None
 
     # -- stats ------------------------------------------------------------
     @property
@@ -255,6 +256,91 @@ class EWAH:
                 total -= int(bin(int(last) >> (32 - pad)).count("1"))
             self._popcnt = total
         return self._popcnt
+
+    def and_count(self, other: "EWAH") -> int:
+        """Popcount of ``self & other`` without materializing the result.
+
+        The pairwise aggregation kernel — the executor's group-by path uses
+        it for literal-heavy bitmaps, where the batched interval-coverage
+        kernel (``set_intervals``) would expand toward one interval per set
+        bit: the two run-lists are aligned once, clean×clean overlaps
+        contribute arithmetically, and only the genuinely-literal overlaps
+        are ANDed and popcounted — no output run-list, no marker
+        re-emission, no row materialization.  Cost is O(runs_a + runs_b)
+        whole-array ops.
+        """
+        assert self.n_bits == other.n_bits, (self.n_bits, other.n_bits)
+        if self.n_bits == 0 or self.n_words_uncompressed == 0:
+            return 0
+        ra, rb = self.runlist(), other.runlist()
+        bounds = np.union1d(ra.bounds, rb.bounds)
+        left = bounds[:-1]
+        lens = np.diff(bounds)
+        ia = np.searchsorted(ra.bounds, left, side="right") - 1
+        ib = np.searchsorted(rb.bounds, left, side="right") - 1
+        ka = ra.kinds[ia]
+        kb = rb.kinds[ib]
+        total = 32 * int(lens[(ka == KIND_CLEAN1) & (kb == KIND_CLEAN1)]
+                         .sum())
+        # literal vs clean-one: the literal slice passes through unchanged
+        for msk, rl, idx in (((ka == KIND_CLEAN1) & (kb == KIND_LIT), rb, ib),
+                             ((ka == KIND_LIT) & (kb == KIND_CLEAN1), ra, ia)):
+            if msk.any():
+                off = (rl.lit_starts[idx[msk]]
+                       + (left[msk] - rl.bounds[idx[msk]]))
+                total += _popcount_words(rl.lits[_ranges(off, lens[msk])])
+        msk = (ka == KIND_LIT) & (kb == KIND_LIT)
+        if msk.any():
+            aoff = ra.lit_starts[ia[msk]] + (left[msk] - ra.bounds[ia[msk]])
+            boff = rb.lit_starts[ib[msk]] + (left[msk] - rb.bounds[ib[msk]])
+            total += _popcount_words(ra.lits[_ranges(aoff, lens[msk])]
+                                     & rb.lits[_ranges(boff, lens[msk])])
+        pad = self.n_words_uncompressed * WORD_BITS - self.n_bits
+        if pad:
+            last = _rl_last_word(ra) & _rl_last_word(rb)
+            total -= int(bin(last >> (WORD_BITS - pad)).count("1"))
+        return total
+
+    def set_intervals(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Maximal runs of set bits as sorted ``(starts, ends)`` arrays
+        (half-open bit positions, clipped to ``n_bits``).
+
+        The aggregation engine's interval view of a bitmap: clean-one runs
+        map to intervals directly and only literal words expand their set
+        bits, so on sorted tables (few long runs per bitmap) the interval
+        list stays tiny while ``sum(ends - starts) == count()`` always
+        holds.  Memoized like the run-list; treat the arrays as read-only.
+        """
+        if self._iv is None:
+            rl = self.runlist()
+            lens = np.diff(rl.bounds)
+            c1 = rl.kinds == KIND_CLEAN1
+            starts = (rl.bounds[:-1][c1] * WORD_BITS).astype(np.int64)
+            ends = (rl.bounds[1:][c1] * WORD_BITS).astype(np.int64)
+            lm = rl.kinds == KIND_LIT
+            if lm.any():
+                wpos = _ranges(rl.bounds[:-1][lm], lens[lm])
+                bits = ((rl.lits[:, None]
+                         >> np.arange(WORD_BITS, dtype=np.uint32)) & 1) \
+                    .astype(bool)
+                pos = ((wpos[:, None] << 5) + np.arange(WORD_BITS))[bits]
+                starts = np.concatenate((starts, pos))
+                ends = np.concatenate((ends, pos + 1))
+                order = np.argsort(starts, kind="stable")
+                starts, ends = starts[order], ends[order]
+            if len(starts):
+                # coalesce touching neighbours (a clean-one run flush against
+                # set bits of an adjacent literal word is one logical run)
+                new = np.concatenate(([True], starts[1:] > ends[:-1]))
+                gs = starts[new]
+                last = np.concatenate((np.flatnonzero(new)[1:] - 1,
+                                       [len(ends) - 1]))
+                ge = np.minimum(ends[last], self.n_bits)
+                keep = gs < ge
+                self._iv = (gs[keep], ge[keep])
+            else:
+                self._iv = (np.empty(0, np.int64), np.empty(0, np.int64))
+        return self._iv
 
     # -- logical ops (compressed domain, Lemma 2) --------------------------
     def __invert__(self) -> "EWAH":
@@ -597,38 +683,78 @@ def _groups_to_runlist(item_kind: np.ndarray, item_count: np.ndarray,
     return RunList(bounds, gkind, lit_starts, lits)
 
 
+def _rl_last_word(rl: RunList) -> int:
+    """Value of the final uncompressed word of a run-list (pad handling)."""
+    if not len(rl.kinds):
+        return 0
+    k = int(rl.kinds[-1])
+    if k == KIND_LIT:
+        return int(rl.lits[-1])
+    return 0xFFFFFFFF if k == KIND_CLEAN1 else 0
+
+
+def _marker_positions(words: np.ndarray) -> np.ndarray:
+    """Positions of the marker words in a compressed stream, by pointer
+    jumping — no per-marker Python loop.
+
+    Markers form a chain ``p_0 = 0, p_{i+1} = p_i + 1 + nlit(p_i)``.  The
+    successor function J (defined over every word position; garbage entries
+    at literal positions are never consulted) is repeatedly squared — J,
+    J², J⁴, … — and each round doubles the known chain prefix, so the whole
+    chain is recovered in O(log n_markers) rounds of whole-array work.
+    """
+    n = len(words)
+    nlit = (words >> np.uint32(_LIT_SHIFT)).astype(np.int64)
+    jump = np.minimum(np.arange(n, dtype=np.int64) + 1 + nlit, n)
+    jump = np.append(jump, n)  # J[n] = n: past-the-end is a fixed point
+    mpos = np.zeros(1, dtype=np.int64)
+    while True:
+        nxt = jump[mpos]
+        nxt = nxt[nxt < n]
+        if nxt.size == 0:
+            return mpos
+        # chain entries are strictly increasing, so the newly reached
+        # markers extend the known prefix in order with no duplicates
+        mpos = np.concatenate((mpos, nxt))
+        jump = jump[jump]
+
+
 def _decode_runlist(words: np.ndarray) -> RunList:
-    """Marker stream -> RunList.  One cheap int loop over *markers* (not
-    words), then a single vectorized canonicalization pass."""
+    """Marker stream -> RunList, fully vectorized.
+
+    The marker chain is recovered by the pointer-jumping pass above, marker
+    fields and literal pools are gathered with whole-array indexing, and a
+    single canonicalization pass merges/reclassifies — the historical
+    per-marker Python loop is gone, which is what cold decodes of
+    fragmented, memory-mapped bitmaps used to pay for.
+    """
     n = len(words)
     if n == 0:
         return _EMPTY_RUNLIST
-    # vectorized field extraction; the loop below only walks the marker chain
-    bit_all = (words & 1).tolist()
-    nc_all = ((words >> np.uint32(_CLEAN_SHIFT)) & np.uint32(MAX_CLEAN)).tolist()
-    nl_all = (words >> np.uint32(_LIT_SHIFT)).tolist()
-    kinds: List[int] = []
-    counts: List[int] = []
-    lit_slices: List[Tuple[int, int]] = []
-    i = 0
-    while i < n:
-        nc = nc_all[i]
-        nl = nl_all[i]
-        if nc:
-            kinds.append(bit_all[i])
-            counts.append(nc)
-        i += 1
-        if nl:
-            kinds.append(KIND_LIT)
-            counts.append(nl)
-            lit_slices.append((i, i + nl))
-            i += nl
-    if not kinds:
+    mpos = _marker_positions(words)
+    mk = np.asarray(words[mpos], dtype=WORD_DTYPE)
+    bits = (mk & np.uint32(1)).astype(np.int8)
+    nc = ((mk >> np.uint32(_CLEAN_SHIFT)) & np.uint32(MAX_CLEAN)) \
+        .astype(np.int64)
+    nl = (mk >> np.uint32(_LIT_SHIFT)).astype(np.int64)
+    has_c = nc > 0
+    has_l = nl > 0
+    per = has_c.astype(np.int64) + has_l.astype(np.int64)
+    n_segs = int(per.sum())
+    if n_segs == 0:
         return _EMPTY_RUNLIST
-    seg_kind = np.array(kinds, np.int8)
-    seg_count = np.array(counts, np.int64)
-    lits = (np.concatenate([words[s:e] for s, e in lit_slices])
-            if lit_slices else np.empty(0, WORD_DTYPE))
+    base = np.cumsum(per) - per  # first segment slot of each marker
+    seg_kind = np.empty(n_segs, np.int8)
+    seg_count = np.empty(n_segs, np.int64)
+    ci = base[has_c]
+    seg_kind[ci] = bits[has_c]
+    seg_count[ci] = nc[has_c]
+    li = base[has_l] + has_c[has_l]
+    seg_kind[li] = KIND_LIT
+    seg_count[li] = nl[has_l]
+    lits = (np.asarray(words[_ranges(mpos[has_l] + 1, nl[has_l])],
+                       dtype=WORD_DTYPE)
+            if has_l.any() else np.empty(0, WORD_DTYPE))
     # expand literal stretches to per-word items for canonicalization
     is_lit = seg_kind == KIND_LIT
     items_per = np.where(is_lit, seg_count, 1)

@@ -35,7 +35,8 @@ from . import cost_model as _cm
 from .ewah import EWAH, and_many, or_many
 from .expr import Expr
 from .index import BitmapIndex
-from .planner import PAnd, PBitmap, PConst, PDiff, PNot, POr, PlanNode, plan
+from .planner import (PAnd, PBitmap, PConst, PCount, PDiff, PGroupCount,
+                      PNot, POr, PlanNode, Planner, plan)
 
 # the historical static threshold, kept as the uncalibrated fallback; the
 # live value comes from ``repro.core.cost_model`` (measured crossover when a
@@ -43,6 +44,16 @@ from .planner import PAnd, PBitmap, PConst, PDiff, PNot, POr, PlanNode, plan
 DENSE_THRESHOLD = _cm.DEFAULT_DENSE_THRESHOLD
 
 Backend = str  # "auto" | "ewah" | "kernel"
+
+# caps on memoized subexpression results per operand cache: leaf entries
+# are bounded by the index itself, but composite results are keyed by query
+# shape, and a long-lived cache (a process-pool worker's, a persistent
+# batch cache) serving a varied stream would otherwise grow without bound —
+# both an entry cap and a byte budget over the cached EWAH payloads apply
+SUB_CACHE_ENTRIES = 512
+SUB_CACHE_BYTES = 32 << 20
+_SUB_ORDER_KEY = ("sub_order",)
+_SUB_BYTES_KEY = ("sub_bytes",)
 
 
 def _const_bitmap(index: BitmapIndex, value: bool,
@@ -73,6 +84,13 @@ class Executor:
         self.dense_threshold = (
             _cm.get_default().dense_threshold
             if dense_threshold is None else dense_threshold)
+        # subexpression-sharing accounting: composite plan nodes memoize
+        # their results in ``cache`` under their canonical plan key, so a
+        # subtree repeated across the statements of a batch (the group-by
+        # fan-out's shared filter, a dashboard's common clause) evaluates
+        # once; these counters make the sharing testable/observable
+        self.sub_hits = 0
+        self.sub_misses = 0
 
     # -- operand loading (shared across a batch via ``cache``) ------------
     def _load(self, node: PBitmap) -> EWAH:
@@ -111,27 +129,154 @@ class Executor:
 
     # -- evaluation --------------------------------------------------------
     def run(self, node: PlanNode) -> EWAH:
+        """Evaluate a plan tree to an EWAH result.
+
+        The top-level statement *reads* the subexpression cache (it may be
+        a subtree of an earlier statement) but does not write its own
+        result into it — whole-result caching belongs to the dedicated
+        result LRUs, and an operand cache that also memoized roots would
+        silently turn repeat-latency measurements into dictionary lookups.
+        Strict subtrees are cached (see ``_run``)."""
+        return self._run(node, write=False)
+
+    def _run(self, node: PlanNode, write: bool = True) -> EWAH:
         if isinstance(node, PConst):
             return _const_bitmap(self.index, node.value, self.cache)
         if isinstance(node, PBitmap):
             return self._load(node)
+        # composite subtrees memoize by canonical plan key: a subexpression
+        # shared across a batch's statements (same ``ckey``, possibly under
+        # commutative reordering) is evaluated exactly once per cache
+        key = ("sub", node.ckey) if node.ckey is not None else None
+        if key is not None:
+            hit = self.cache.get(key)
+            if hit is not None:
+                self.sub_hits += 1
+                return hit
+            self.sub_misses += 1
+        bm = self._run_composite(node)
+        if key is not None and write:
+            # FIFO-bounded by entries *and* result bytes: the eviction
+            # bookkeeping lives in the cache dict itself so the bounds
+            # follow the cache's lifetime, not the (per-call) executor's.
+            # Races on a shared dict are as benign as the rest of the
+            # operand cache — worst case a subtree recomputes once.
+            order = self.cache.setdefault(_SUB_ORDER_KEY, [])
+            if key not in self.cache:
+                order.append(key)
+                self.cache[key] = bm
+                total = self.cache.get(_SUB_BYTES_KEY, 0) + bm.size_bytes
+                while order and (len(order) > SUB_CACHE_ENTRIES
+                                 or total > SUB_CACHE_BYTES):
+                    old = self.cache.pop(order.pop(0), None)
+                    if old is not None:
+                        total -= old.size_bytes
+                self.cache[_SUB_BYTES_KEY] = max(total, 0)
+            else:
+                self.cache[key] = bm
+        return bm
+
+    def _run_composite(self, node: PlanNode) -> EWAH:
         if isinstance(node, PNot):
-            return ~self.run(node.child)
+            return ~self._run(node.child)
         if isinstance(node, PDiff):
             return self._run_diff(node)
         assert isinstance(node, (PAnd, POr))
         op = "and" if isinstance(node, PAnd) else "or"
-        children = [(ch, self.run(ch)) for ch in node.children]
+        children = [(ch, self._run(ch)) for ch in node.children]
         if self._use_kernel([bm for _, bm in children]):
             return self._reduce_kernel(children, op)
         bms = [bm for _, bm in children]
         return and_many(bms) if op == "and" else or_many(bms)
 
+    # -- aggregation (compressed domain) -----------------------------------
+    def run_count(self, node: PCount) -> int:
+        """COUNT(*): the filter's memoized compressed-domain popcount —
+        no row ids, no result materialization."""
+        child = node.child
+        if isinstance(child, PConst):
+            return self.index.n_rows if child.value else 0
+        # the filter is a *subexpression* of the count statement: cached,
+        # so a row query or group-by over the same filter reuses it
+        return self._run(child).count()
+
+    # a group bitmap whose literal pool would expand to far more intervals
+    # than the filter exposes is cheaper to intersect pairwise: past this
+    # expansion-to-filter-intervals ratio the run-aligned
+    # ``EWAH.and_count`` beats contributing the (huge) expansion to the
+    # batched coverage pass — per query, cold or warm
+    LIT_INTERVAL_CUTOFF = 4
+
+    def run_group_count(self, node: PGroupCount) -> np.ndarray:
+        """Per-value counts of one column under the node's filter.
+
+        Without a filter each group is its bitmap's memoized popcount.
+        With one, the filter evaluates once (shared across the whole
+        fan-out through the operand cache) and every group intersects it in
+        the compressed domain, by one of two kernels: run-dominated bitmaps
+        (the sorted-table case) contribute their set-bit intervals —
+        clean-one runs plus literal expansions, memoized per bitmap — to a
+        batch scored against the filter's interval coverage function in two
+        vectorized ``searchsorted`` passes over all groups at once;
+        literal-heavy bitmaps, whose interval expansion would approach one
+        interval per set bit, use the pairwise ``EWAH.and_count`` (aligned
+        run-lists, popcount without materializing the AND).  Nothing is
+        decompressed to rows and no result bitmap exists, per group or
+        globally.
+        """
+        out = np.zeros(len(node.groups), dtype=np.int64)
+        filt = node.filter
+        if isinstance(filt, PConst):
+            if not filt.value:
+                return out
+            filt = None
+        if filt is None:
+            for g, gn in enumerate(node.groups):
+                if isinstance(gn, PConst):
+                    out[g] = self.index.n_rows if gn.value else 0
+                else:
+                    out[g] = self._run(gn).count()
+            return out
+        fbm = self._run(filt)
+        # the filter always takes the interval view, even when
+        # literal-heavy: its expansion is paid once (memoized on the EWAH,
+        # which the subexpression cache keeps alive) and the per-query
+        # coverage passes scan *group* intervals with only a log factor in
+        # the filter's interval count — whereas escaping a fragmented
+        # filter to pairwise ``and_count`` costs O(filter runs) per group,
+        # which is catastrophic for high-cardinality group-bys
+        fs, fe = fbm.set_intervals()
+        if len(fs) == 0:
+            return out
+        starts, ends, gids = [], [], []
+        pair_budget = self.LIT_INTERVAL_CUTOFF * (len(fs) + 32)
+        for g, gn in enumerate(node.groups):
+            gbm = self._run(gn)
+            rl = gbm.runlist()
+            # 32 * literal words bounds the group's expanded interval count
+            if 32 * len(rl.lits) > pair_budget + rl.n_intervals:
+                out[g] = fbm.and_count(gbm)
+                continue
+            s, e = gbm.set_intervals()
+            if len(s):
+                starts.append(s)
+                ends.append(e)
+                gids.append(np.full(len(s), g, dtype=np.int64))
+        if not starts:
+            return out
+        S = np.concatenate(starts)
+        E = np.concatenate(ends)
+        G = np.concatenate(gids)
+        w = _interval_coverage(fs, fe, E) - _interval_coverage(fs, fe, S)
+        out += np.bincount(G, weights=w,
+                           minlength=len(node.groups)).astype(np.int64)
+        return out
+
     def _run_diff(self, node: PDiff) -> EWAH:
         """AND(pos) \\ OR(neg) via EWAH's native andnot — negated operands
         never materialize their complements."""
-        pos = [(ch, self.run(ch)) for ch in node.pos]
-        neg = [(ch, self.run(ch)) for ch in node.neg]
+        pos = [(ch, self._run(ch)) for ch in node.pos]
+        neg = [(ch, self._run(ch)) for ch in node.neg]
         if self._use_kernel([bm for _, bm in pos + neg]):
             from repro.kernels import ops as kops
             pw, pf = zip(*[self._dense_operand(n, bm) for n, bm in pos])
@@ -172,6 +317,16 @@ class Executor:
         return EWAH.from_words(out[:n_words], n_bits)
 
 
+def _shard_caches(index, cache: Optional[Dict]) -> Optional[List[Dict]]:
+    """Per-shard operand sub-dicts inside one caller-supplied cache, so a
+    persistent cache keeps sharing operands across calls on every
+    statement path (one keying scheme, used by all dispatchers)."""
+    if cache is None:
+        return None
+    return [cache.setdefault(("shard", i), {})
+            for i in range(index.n_shards)]
+
+
 def execute(index, e: Union[Expr, PlanNode],
             backend: Backend = "auto", optimize: bool = True,
             cache: Optional[Dict] = None, pool=None) -> EWAH:
@@ -184,14 +339,8 @@ def execute(index, e: Union[Expr, PlanNode],
     """
     from .shard import ShardedIndex  # local: shard imports this module
     if isinstance(index, ShardedIndex):
-        # a caller-supplied cache still shares operands across calls: each
-        # shard gets a persistent sub-dict inside it
-        caches = None
-        if cache is not None:
-            caches = [cache.setdefault(("shard", i), {})
-                      for i in range(index.n_shards)]
         return index.execute(e, backend=backend, optimize=optimize,
-                             caches=caches, pool=pool)
+                             caches=_shard_caches(index, cache), pool=pool)
     node = plan(index, e, optimize=optimize) if isinstance(e, Expr) else e
     return Executor(index, backend=backend, cache=cache).run(node)
 
@@ -200,6 +349,48 @@ def execute_rows(index, e: Union[Expr, PlanNode],
                  backend: Backend = "auto", optimize: bool = True) -> np.ndarray:
     """Evaluate and return matching row ids (sorted)."""
     return execute(index, e, backend=backend, optimize=optimize).set_bits()
+
+
+def _interval_coverage(fs: np.ndarray, fe: np.ndarray,
+                       xs: np.ndarray) -> np.ndarray:
+    """Covered length below each ``x`` of the sorted disjoint intervals
+    ``[fs, fe)`` — the filter's prefix-popcount function, evaluated for all
+    group-interval endpoints in one ``searchsorted`` pass."""
+    pref = np.concatenate(([0], np.cumsum(fe - fs)))
+    i = np.searchsorted(fs, xs, side="right") - 1
+    i0 = np.maximum(i, 0)
+    inside = np.clip(xs - fs[i0], 0, fe[i0] - fs[i0])
+    return np.where(i >= 0, pref[i0] + inside, 0)
+
+
+def execute_count(index, e: Optional[Expr] = None,
+                  backend: Backend = "auto", optimize: bool = True,
+                  cache: Optional[Dict] = None, pool=None) -> int:
+    """COUNT(*) of a filter (``e=None`` counts all rows), computed in the
+    compressed domain — on a ``ShardedIndex`` per-shard partial counts are
+    summed at the coordinator, never a concatenated result bitmap."""
+    from .shard import ShardedIndex
+    if isinstance(index, ShardedIndex):
+        return index.count(e, backend=backend, optimize=optimize,
+                           caches=_shard_caches(index, cache), pool=pool)
+    node = Planner(index, optimize=optimize).plan_count(e)
+    return Executor(index, backend=backend, cache=cache).run_count(node)
+
+
+def execute_group_count(index, col, e: Optional[Expr] = None,
+                        backend: Backend = "auto", optimize: bool = True,
+                        cache: Optional[Dict] = None, pool=None) -> np.ndarray:
+    """GROUP BY ``col`` COUNT(*) under filter ``e`` -> int64 array of
+    length ``card(col)`` (a ``np.bincount``-shaped result).  Sharded
+    indexes merge per-shard partial count vectors by summation."""
+    from .shard import ShardedIndex
+    if isinstance(index, ShardedIndex):
+        return index.group_count(col, e, backend=backend, optimize=optimize,
+                                 caches=_shard_caches(index, cache),
+                                 pool=pool)
+    node = Planner(index, optimize=optimize).plan_group_count(col, e)
+    return Executor(index, backend=backend,
+                    cache=cache).run_group_count(node)
 
 
 class QueryBatch:

@@ -35,6 +35,10 @@ class ColumnIndex:
     # walking L EWAH objects per plan dominated sharded execution
     _sizes_cache: Optional[np.ndarray] = field(
         default=None, repr=False, compare=False)
+    # lazily-memoized true cardinalities (set-bit counts) per bitmap id;
+    # only the bitmaps a plan actually references pay the decode
+    _counts_cache: Dict[int, int] = field(
+        default_factory=dict, repr=False, compare=False)
 
     @property
     def size_words(self) -> int:
@@ -53,8 +57,21 @@ class ColumnIndex:
             self._sizes_cache = out
         return self._sizes_cache
 
+    def bitmap_count(self, bitmap_id: int) -> int:
+        """True cardinality (set-bit count) of one bitmap, summed over
+        partitions — the planner's selectivity signal beyond compressed
+        size.  Each partition's ``EWAH.count()`` is itself memoized, so the
+        first call pays one compressed-domain popcount per partition and
+        repeats are dictionary lookups."""
+        cnt = self._counts_cache.get(bitmap_id)
+        if cnt is None:
+            cnt = sum(part[bitmap_id].count() for part in self.bitmaps)
+            self._counts_cache[bitmap_id] = cnt
+        return cnt
+
     def invalidate_sizes(self) -> None:
         self._sizes_cache = None
+        self._counts_cache.clear()
 
     def bitmap_uncompressed_words(self, n_rows_per_part: Sequence[int]) -> np.ndarray:
         total = sum(-(-r // 32) for r in n_rows_per_part)

@@ -16,6 +16,16 @@ from collections import OrderedDict
 from typing import Callable, Dict, Optional
 
 
+def payload_nbytes(v) -> int:
+    """Byte sizer for cached query results: EWAH bitmaps (``size_bytes``),
+    count vectors (``nbytes``) or plain ints (0) — shared by the serving
+    result cache and the shard-local result caches."""
+    size = getattr(v, "size_bytes", None)
+    if size is None:
+        size = getattr(v, "nbytes", 0)
+    return int(size)
+
+
 class LRUCache:
     """LRU with hit/miss counters, optional entry cap, byte budget and TTL.
 

@@ -14,19 +14,30 @@ shape dominates):
   and out-of-domain ranks, shares nothing it does not need and folds to a
   constant when it covers the whole domain; ``Range`` clips to the column
   cardinality and lowers like the equivalent ``In``.
-* **Size-ordered AND**: operands of every AND are sorted by estimated
-  compressed size (words, the paper's cost unit) so the cheapest bitmap
-  prunes first — intermediate results stay small for the whole chain.
+* **Cardinality-ordered AND**: operands of every AND are sorted by *true
+  cardinality* — the memoized set-bit count of each physical bitmap
+  (``ColumnIndex.bitmap_count``), the selectivity signal compressed size
+  only approximates — with compressed words as the tiebreak, so the
+  sparsest bitmap prunes the chain first.  ``use_counts=False`` falls back
+  to the historical size-only ordering (pure metadata planning: no bitmap
+  payload is ever decoded).
 
-The planner is purely logical: it reads only per-bitmap compressed sizes
-(``ColumnIndex.bitmap_sizes()``) and never touches bitmap payloads.  The
-physical choice between the compressed EWAH path and the dense Pallas kernel
-path is made per node by the executor.
+Beyond boolean filters the planner also lowers *aggregation statements*:
+``plan_count`` wraps a filter into a ``PCount`` and ``plan_group_count``
+expands a column into one value node per rank under a shared filter
+(``PGroupCount``) — the executor evaluates both entirely in the compressed
+domain (memoized popcounts and interval intersection; no result bitmap is
+materialized for an aggregate).
+
+Every lowered node also carries ``ckey``, a commutativity-normalized
+structural key of its subtree (the plan-level analogue of
+``expr.canonical_key``), which the executor uses to share *subexpression*
+results — not just leaf bitmaps — across the statements of a batch.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -37,12 +48,18 @@ from .index import BitmapIndex
 # ---------------------------------------------------------------------------
 # Physical plan nodes.  ``est_words`` estimates the compressed size (32-bit
 # words) of the node's *result* — the unit the paper uses for both storage
-# and logical-op cost.
+# and logical-op cost.  ``est_rows`` estimates the result's true cardinality
+# (set bits); -1 when the planner ran without count statistics.
 # ---------------------------------------------------------------------------
 
 @dataclass
 class PlanNode:
     est_words: int = field(default=0, init=False)
+    est_rows: int = field(default=-1, init=False)
+    # commutativity-normalized structural key of this subtree (None only for
+    # hand-built nodes); executors memoize composite results under it so a
+    # subtree repeated across a batch of statements evaluates once
+    ckey: Optional[tuple] = field(default=None, init=False)
     # advisory physical-path hint from the planner's cost model: True when
     # the estimated operand density clears the (calibrated) EWAH-vs-kernel
     # crossover.  The executor re-decides from the operands' *actual*
@@ -106,6 +123,35 @@ class PDiff(PlanNode):
                 + ", ".join(map(repr, self.neg)) + ")")
 
 
+@dataclass
+class PCount(PlanNode):
+    """COUNT(*) over a filter — evaluated as a memoized compressed-domain
+    popcount of the filter's result; no rows are materialized."""
+    child: PlanNode
+
+    def __repr__(self):
+        return f"COUNT({self.child!r})"
+
+
+@dataclass
+class PGroupCount(PlanNode):
+    """Per-value counts of one column under a shared filter.
+
+    ``groups[v]`` is the lowered value node of rank ``v`` (one bitmap at
+    k=1, an AND of k bitmaps otherwise); the executor intersects every
+    group with the filter in the compressed domain — interval arithmetic
+    over run boundaries, never a decompressed result bitmap — and on a
+    sharded index per-shard partial count vectors are summed at the
+    coordinator (no global bitmap concatenation)."""
+    col: int
+    groups: List[PlanNode]
+    filter: Optional[PlanNode]
+
+    def __repr__(self):
+        return (f"GROUP_COUNT(c{self.col} x{len(self.groups)}, "
+                f"where={self.filter!r})")
+
+
 # ---------------------------------------------------------------------------
 # Logical rewrites (index-free).
 # ---------------------------------------------------------------------------
@@ -148,12 +194,25 @@ def flatten(e: Expr) -> Expr:
 # Index-aware lowering + cost estimation.
 # ---------------------------------------------------------------------------
 
+def _nary_key(tag: str, children) -> Optional[tuple]:
+    """Commutativity-normalized structural key of an n-ary plan node (child
+    keys sorted, mirroring ``expr.canonical_key``)."""
+    keys = [ch.ckey for ch in children]
+    if any(k is None for k in keys):
+        return None
+    return (tag,) + tuple(sorted(keys, key=repr))
+
+
 class Planner:
     def __init__(self, index: BitmapIndex, optimize: bool = True,
-                 cost_model=None):
+                 cost_model=None, use_counts: bool = True):
         from . import cost_model as _cm
         self.index = index
         self.optimize = optimize
+        # order AND operands by true cardinality (memoized per-bitmap
+        # popcounts) instead of compressed size alone; False restores pure
+        # metadata planning (no bitmap payload decoded at plan time)
+        self.use_counts = use_counts
         # calibrated EWAH-vs-kernel crossover (see repro.core.cost_model)
         self.cost_model = cost_model if cost_model is not None \
             else _cm.get_default()
@@ -169,11 +228,48 @@ class Planner:
     def _n_words(self) -> int:
         return -(-self.index.n_rows // 32)
 
+    def _sort_key(self, node: PlanNode) -> tuple:
+        """Operand order for n-ary nodes: true cardinality first when count
+        statistics are on (compressed words break ties), size-only
+        otherwise."""
+        if self.use_counts and node.est_rows >= 0:
+            return (node.est_rows, node.est_words)
+        return (node.est_words,)
+
     # -- lowering ---------------------------------------------------------
     def plan(self, e: Expr) -> PlanNode:
         if self.optimize:
             e = flatten(push_not(e))
         return self._lower(e)
+
+    def plan_count(self, e: Optional[Expr] = None) -> PCount:
+        """Lower a COUNT statement: ``e is None`` counts every row."""
+        child = self.plan(e) if e is not None else self._const(True)
+        node = PCount(child)
+        node.est_words = 0
+        node.est_rows = child.est_rows
+        node.ckey = ("count", child.ckey)
+        return node
+
+    def plan_group_count(self, col, e: Optional[Expr] = None) -> PGroupCount:
+        """Lower a GROUP BY ``col`` COUNT(*) statement.
+
+        One value node per rank of the column (its minimal bitmap set at
+        any k) under one shared filter plan — the fan-out the executor
+        batches through its operand/subexpression cache."""
+        c = self.index.resolve_column(col)
+        card = self.index.card(c)
+        enc = self.index.columns[c].encoder
+        codes = enc.codes(np.arange(card, dtype=np.int64))
+        groups = [self._value_node(c, code) for code in codes]
+        filt = self.plan(e) if e is not None else None
+        node = PGroupCount(c, groups, filt)
+        node.est_words = 0
+        node.est_rows = filt.est_rows if filt is not None else \
+            self.index.n_rows
+        node.ckey = ("gcount", c,
+                     None if filt is None else filt.ckey)
+        return node
 
     def _lower(self, e: Expr) -> PlanNode:
         if isinstance(e, Const):
@@ -194,6 +290,9 @@ class Planner:
             # complement flips clean-run types and inverts literals in
             # place, so its compressed size matches the child's
             node.est_words = child.est_words
+            if child.est_rows >= 0:
+                node.est_rows = self.index.n_rows - child.est_rows
+            node.ckey = ("not", child.ckey)
             return node
         if isinstance(e, And):
             return self._lower_nary(e.operands, PAnd)
@@ -204,11 +303,19 @@ class Planner:
     def _const(self, value: bool) -> PConst:
         node = PConst(value)
         node.est_words = 1 if not value else self._n_words
+        node.est_rows = self.index.n_rows if value else 0
+        node.ckey = ("const", value)
         return node
 
     def _leaf(self, col: int, bid: int) -> PBitmap:
         node = PBitmap(col, bid)
         node.est_words = self._bitmap_words(col, bid)
+        if self.use_counts:
+            # the *true* cardinality (memoized compressed-domain popcount):
+            # exact selectivity for a leaf, the paper-motivated upgrade over
+            # compressed size as the AND-ordering signal
+            node.est_rows = self.index.columns[col].bitmap_count(bid)
+        node.ckey = ("bm", col, bid)
         return node
 
     def _value_node(self, col: int, code) -> PlanNode:
@@ -217,9 +324,12 @@ class Planner:
         if len(leaves) == 1:
             return leaves[0]
         if self.optimize:
-            leaves.sort(key=lambda n: n.est_words)
+            leaves.sort(key=self._sort_key)
         node = PAnd(leaves)
         node.est_words = min(l.est_words for l in leaves)
+        node.est_rows = min((l.est_rows for l in leaves), default=-1) \
+            if all(l.est_rows >= 0 for l in leaves) else -1
+        node.ckey = _nary_key("and", leaves)
         return node
 
     def _lower_eq(self, e: Eq) -> PlanNode:
@@ -247,6 +357,9 @@ class Planner:
             child = self._lower_in(c, tuple(comp))
             node = PNot(child)
             node.est_words = child.est_words
+            if child.est_rows >= 0:
+                node.est_rows = self.index.n_rows - child.est_rows
+            node.ckey = ("not", child.ckey)
             return node
         enc = self.index.columns[c].encoder
         codes = enc.codes(np.asarray(vals, dtype=np.int64))
@@ -260,9 +373,11 @@ class Planner:
         if len(children) == 1:
             return children[0]
         if self.optimize:
-            children.sort(key=lambda n: n.est_words)
+            children.sort(key=self._sort_key)
         node = POr(children)
         node.est_words = min(sum(ch.est_words for ch in children), self._n_words)
+        node.est_rows = self._or_rows(children)
+        node.ckey = _nary_key("or", children)
         return node
 
     def _lower_range(self, e: Range) -> PlanNode:
@@ -296,27 +411,43 @@ class Planner:
         if len(children) == 1:
             return children[0]
         if self.optimize:
-            # cheapest first: for AND the sparsest bitmap prunes the chain,
+            # sparsest first: for AND the rarest bitmap prunes the chain,
             # for OR small results keep intermediate unions small
-            children.sort(key=lambda n: n.est_words)
+            children.sort(key=self._sort_key)
             if cls is PAnd:
                 neg = [ch.child for ch in children if isinstance(ch, PNot)]
                 pos = [ch for ch in children if not isinstance(ch, PNot)]
                 if pos and neg:  # fuse x & ~y -> andnot (no complement)
                     node = PDiff(pos, neg)
                     node.est_words = min(ch.est_words for ch in pos)
+                    node.est_rows = self._and_rows(pos)
+                    node.ckey = ("diff", _nary_key("and", pos),
+                                 _nary_key("or", neg))
                     return node
         node = cls(children)
         if cls is PAnd:
             node.est_words = min(ch.est_words for ch in children)
+            node.est_rows = self._and_rows(children)
         else:
             node.est_words = min(sum(ch.est_words for ch in children),
                                  self._n_words)
+            node.est_rows = self._or_rows(children)
+        node.ckey = _nary_key("and" if cls is PAnd else "or", children)
         if self._n_words:
             density = (sum(ch.est_words for ch in children)
                        / (len(children) * self._n_words))
             node.kernel_hint = density >= self.cost_model.dense_threshold
         return node
+
+    def _and_rows(self, children) -> int:
+        rows = [ch.est_rows for ch in children]
+        return min(rows) if rows and all(r >= 0 for r in rows) else -1
+
+    def _or_rows(self, children) -> int:
+        rows = [ch.est_rows for ch in children]
+        if not rows or any(r < 0 for r in rows):
+            return -1
+        return min(sum(rows), self.index.n_rows)
 
 
 def plan(index: BitmapIndex, e: Expr, optimize: bool = True) -> PlanNode:
@@ -325,23 +456,40 @@ def plan(index: BitmapIndex, e: Expr, optimize: bool = True) -> PlanNode:
     return Planner(index, optimize=optimize).plan(e)
 
 
+def _est(node: PlanNode) -> str:
+    """Size estimate suffix: compressed words, plus true rows when the
+    planner ran with count statistics (the selectivity that now orders
+    ANDs)."""
+    rows = f",{node.est_rows}r" if node.est_rows >= 0 else ""
+    return f"~{node.est_words}w{rows}"
+
+
 def explain(node: PlanNode, depth: int = 0) -> str:
-    """Human-readable plan tree with size estimates."""
+    """Human-readable plan tree with size + cardinality estimates."""
     pad = "  " * depth
     if isinstance(node, PBitmap):
-        return f"{pad}bitmap c{node.col}:b{node.bitmap_id} ~{node.est_words}w"
+        return f"{pad}bitmap c{node.col}:b{node.bitmap_id} {_est(node)}"
     if isinstance(node, PConst):
         return f"{pad}{'ALL' if node.value else 'NONE'}"
     if isinstance(node, PNot):
-        return f"{pad}NOT ~{node.est_words}w\n" + explain(node.child, depth + 1)
+        return f"{pad}NOT {_est(node)}\n" + explain(node.child, depth + 1)
     if isinstance(node, PDiff):
-        lines = [f"{pad}ANDNOT ~{node.est_words}w"]
+        lines = [f"{pad}ANDNOT {_est(node)}"]
         lines += [explain(ch, depth + 1) for ch in node.pos]
         lines += [f"{pad}  minus:"]
         lines += [explain(ch, depth + 2) for ch in node.neg]
         return "\n".join(lines)
+    if isinstance(node, PCount):
+        return f"{pad}COUNT (compressed-domain popcount)\n" \
+            + explain(node.child, depth + 1)
+    if isinstance(node, PGroupCount):
+        lines = [f"{pad}GROUP-COUNT c{node.col} x{len(node.groups)} groups "
+                 f"(compressed-domain interval intersection)"]
+        if node.filter is not None:
+            lines += [f"{pad}  where:", explain(node.filter, depth + 2)]
+        return "\n".join(lines)
     name = "AND" if isinstance(node, PAnd) else "OR"
     path = " [kernel]" if node.kernel_hint else ""
-    lines = [f"{pad}{name} ~{node.est_words}w{path}"]
+    lines = [f"{pad}{name} {_est(node)}{path}"]
     lines += [explain(ch, depth + 1) for ch in node.children]
     return "\n".join(lines)

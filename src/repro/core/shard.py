@@ -40,7 +40,7 @@ from .ewah import EWAH
 from .expr import Expr, canonical_key
 from .index import (BitmapIndex, IndexBuilder, WORD_ROWS, concat_bitmaps,
                     validate_partition_rows)
-from .lru import LRUCache
+from .lru import LRUCache, payload_nbytes
 
 # per-shard result-cache defaults (entries + byte budget per shard)
 SHARD_CACHE_ENTRIES = 64
@@ -76,7 +76,7 @@ class ShardedIndex:
     def _new_cache(self) -> LRUCache:
         return LRUCache(capacity=self._cache_entries,
                         max_bytes=self._cache_bytes,
-                        sizeof=lambda bm: bm.size_bytes)
+                        sizeof=payload_nbytes)
 
     @staticmethod
     def _validate_shard(i: int, sh: BitmapIndex, ref: BitmapIndex,
@@ -135,13 +135,14 @@ class ShardedIndex:
                    cache_entries=cache_entries, cache_bytes=cache_bytes)
 
     # -- durability (repro.core.store) ---------------------------------------
-    def save(self, dir_path: str) -> str:
+    def save(self, dir_path: str, meta: Optional[Dict] = None) -> str:
         """Persist as a directory of per-shard store files + manifest.
 
         Each shard file is written atomically; ``load(dir, mmap=True)``
-        reopens the whole index as zero-copy memmap views."""
+        reopens the whole index as zero-copy memmap views.  ``meta`` is
+        carried verbatim in the manifest (see ``store.save_sharded``)."""
         from .store import save_sharded
-        return save_sharded(self, dir_path)
+        return save_sharded(self, dir_path, meta=meta)
 
     @classmethod
     def load(cls, dir_path: str, mmap: bool = True,
@@ -252,6 +253,49 @@ class ShardedIndex:
     def cache_stats(self) -> List[Dict]:
         return [c.stats() for c in self._result_caches]
 
+    def _fan_out(self, key, run_shard, task, pool,
+                 backend: str, optimize: bool) -> List:
+        """Shared shard fan-out: per-shard LRU lookup, pool dispatch for the
+        misses, cache refill.  Returns one result per shard, in order.
+
+        ``key`` (or ``None`` to skip caching) addresses the shard-local
+        LRUs; ``task`` is the picklable statement shipped to a
+        ``ShardProcessPool``; ``run_shard(i, shard)`` is the in-process
+        fallback, handed the shard object from *this* snapshot.
+
+        Caches are snapshotted *before* shards — in here, so no caller can
+        get the order wrong: ``replace_shard`` writes the shard first, then
+        installs a fresh cache, so reading in the opposite order means a
+        racing replacement can pair an old cache with a new shard — and a
+        result computed on a replaced shard then lands in the *retired* LRU
+        object, which no future query reads (fresh-cache poisoning is
+        impossible in either interleaving).  Process pools execute against
+        their forked copy and re-fork on the next generation check;
+        whole-result staleness across a mid-query replace is the serving
+        layer's generation counter's job.
+        """
+        rcaches = list(self._result_caches)
+        shards = list(self.shards)
+        n = len(shards)
+        parts: List = [None] * n
+        if key is not None:
+            for i in range(n):
+                parts[i] = rcaches[i].get(key)
+        missing = [i for i, p in enumerate(parts) if p is None]
+        if isinstance(pool, ShardProcessPool) and len(missing) > 1:
+            fresh = pool.run_shards(task, missing, backend=backend,
+                                    optimize=optimize)
+        elif pool is not None and not isinstance(pool, ShardProcessPool) \
+                and len(missing) > 1:
+            fresh = list(pool.map(lambda i: run_shard(i, shards[i]), missing))
+        else:
+            fresh = [run_shard(i, shards[i]) for i in missing]
+        for i, res in zip(missing, fresh):
+            parts[i] = res
+            if key is not None:
+                rcaches[i].put(key, res)
+        return parts
+
     def execute(self, e, backend: str = "auto", optimize: bool = True,
                 caches: Optional[List[Dict]] = None, pool=None) -> EWAH:
         """Plan per shard, execute per shard, concatenate the EWAH results.
@@ -267,45 +311,75 @@ class ShardedIndex:
         """
         from .executor import Executor  # local: executor also dispatches here
         from .planner import plan
-        key = ((backend, bool(optimize), canonical_key(e))
+        key = (("expr", backend, bool(optimize), canonical_key(e))
                if isinstance(e, Expr) else None)
-        # snapshot caches *before* shards: replace_shard writes the shard
-        # first, then installs a fresh cache, so reading in the opposite
-        # order means a racing replacement can pair an old cache with a new
-        # shard — and a result computed on a replaced shard then lands in
-        # the *retired* LRU object, which no future query reads (fresh-cache
-        # poisoning is impossible in either interleaving).  Process pools
-        # execute against their forked copy and re-fork on the next
-        # generation check; whole-result staleness across a mid-query
-        # replace is the serving layer's generation counter's job.
-        rcaches = list(self._result_caches)
-        shards = list(self.shards)
 
-        parts: List[Optional[EWAH]] = [None] * len(shards)
-        if key is not None:
-            for i in range(len(shards)):
-                parts[i] = rcaches[i].get(key)
-        missing = [i for i, p in enumerate(parts) if p is None]
-
-        def run_shard(i: int) -> EWAH:
-            sh = shards[i]
+        def run_shard(i: int, sh: BitmapIndex) -> EWAH:
             node = plan(sh, e, optimize=optimize) if isinstance(e, Expr) else e
             cache = caches[i] if caches is not None else None
             return Executor(sh, backend=backend, cache=cache).run(node)
 
-        if isinstance(pool, ShardProcessPool) and len(missing) > 1:
-            fresh = pool.run_shards(e, missing, backend=backend,
-                                    optimize=optimize)
-        elif pool is not None and not isinstance(pool, ShardProcessPool) \
-                and len(missing) > 1:
-            fresh = list(pool.map(run_shard, missing))
-        else:
-            fresh = [run_shard(i) for i in missing]
-        for i, res in zip(missing, fresh):
-            parts[i] = res
-            if key is not None:
-                rcaches[i].put(key, res)
+        parts = self._fan_out(key, run_shard, ("expr", e), pool,
+                              backend, optimize)
         return concat_bitmaps(parts)
+
+    def count(self, e=None, backend: str = "auto", optimize: bool = True,
+              caches: Optional[List[Dict]] = None, pool=None) -> int:
+        """COUNT(*) under filter ``e`` (``None`` counts every row).
+
+        Each shard plans and popcounts its own slice in the compressed
+        domain; the coordinator *sums the integers* — no per-shard result
+        bitmap is ever concatenated for an aggregate.
+        """
+        from .executor import Executor
+        from .planner import Planner
+        if e is not None and not isinstance(e, Expr):
+            raise TypeError(f"count() takes an Expr or None, got {e!r}")
+        key = ("count", backend, bool(optimize),
+               canonical_key(e) if e is not None else None)
+
+        def run_shard(i: int, sh: BitmapIndex) -> int:
+            node = Planner(sh, optimize=optimize).plan_count(e)
+            cache = caches[i] if caches is not None else None
+            return Executor(sh, backend=backend, cache=cache).run_count(node)
+
+        parts = self._fan_out(key, run_shard, ("count", e), pool,
+                              backend, optimize)
+        return int(sum(parts))
+
+    def group_count(self, col, e=None, backend: str = "auto",
+                    optimize: bool = True,
+                    caches: Optional[List[Dict]] = None,
+                    pool=None) -> np.ndarray:
+        """GROUP BY ``col`` COUNT(*) under filter ``e`` -> int64 vector of
+        length ``card(col)``.
+
+        The shards share one set of encoders, so every shard produces a
+        count vector in the same value-rank space; the coordinator merges
+        by *summing the partial vectors* (scatter/gather aggregation — the
+        global result bitmap that ``execute`` would concatenate never
+        exists here).
+        """
+        from .executor import Executor
+        from .planner import Planner
+        if e is not None and not isinstance(e, Expr):
+            raise TypeError(f"group_count() takes an Expr or None, got {e!r}")
+        c = self.resolve_column(col)
+        key = ("gcount", c, backend, bool(optimize),
+               canonical_key(e) if e is not None else None)
+
+        def run_shard(i: int, sh: BitmapIndex) -> np.ndarray:
+            node = Planner(sh, optimize=optimize).plan_group_count(c, e)
+            cache = caches[i] if caches is not None else None
+            return Executor(sh, backend=backend,
+                            cache=cache).run_group_count(node)
+
+        parts = self._fan_out(key, run_shard, ("gcount", c, e), pool,
+                              backend, optimize)
+        out = np.zeros(self.card(c), dtype=np.int64)
+        for p in parts:
+            out += p
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -340,15 +414,31 @@ def _fork_index(pool_key: int) -> "ShardedIndex":
     return idx
 
 
-def _forked_run(args) -> EWAH:
-    """Worker-side shard execution (operand caches live per worker)."""
+def _forked_run(args):
+    """Worker-side shard statement execution (operand caches per worker).
+
+    ``task`` mirrors the coordinator's statement kinds: ``("expr", e)``
+    returns the shard's EWAH result, ``("count", e)`` its partial count and
+    ``("gcount", col, e)`` its partial per-value count vector — aggregates
+    ship a few integers across the process boundary instead of a bitmap.
+    """
     from .executor import Executor
-    from .planner import plan
-    pool_key, shard_i, e, backend, optimize = args
+    from .planner import Planner, plan
+    pool_key, shard_i, task, backend, optimize = args
     sh = _fork_index(pool_key).shards[shard_i]
-    node = plan(sh, e, optimize=optimize) if isinstance(e, Expr) else e
     cache = _FORK_CACHES.setdefault((pool_key, shard_i), {})
-    return Executor(sh, backend=backend, cache=cache).run(node)
+    ex = Executor(sh, backend=backend, cache=cache)
+    kind = task[0]
+    if kind == "expr":
+        e = task[1]
+        node = plan(sh, e, optimize=optimize) if isinstance(e, Expr) else e
+        return ex.run(node)
+    if kind == "count":
+        return ex.run_count(Planner(sh, optimize=optimize).plan_count(task[1]))
+    if kind == "gcount":
+        return ex.run_group_count(
+            Planner(sh, optimize=optimize).plan_group_count(task[1], task[2]))
+    raise ValueError(f"unknown shard task {kind!r}")
 
 
 class ShardProcessPool:
@@ -407,9 +497,18 @@ class ShardProcessPool:
                 self._forked_generation = self.index.generation
             return self._executor
 
-    def run_shards(self, e, shard_ids: Sequence[int],
-                   backend: str = "auto", optimize: bool = True) -> List[EWAH]:
-        args = [(self._key, i, e, backend, optimize) for i in shard_ids]
+    def run_shards(self, task, shard_ids: Sequence[int],
+                   backend: str = "auto", optimize: bool = True) -> List:
+        """Run one statement task over the given shards in the workers.
+
+        ``task`` is a ``("expr", e)`` / ``("count", e)`` / ``("gcount",
+        col, e)`` tuple (see ``_forked_run``); a bare expression/plan is
+        accepted for backward compatibility and treated as ``("expr", e)``.
+        """
+        if not (isinstance(task, tuple) and task
+                and task[0] in ("expr", "count", "gcount")):
+            task = ("expr", task)
+        args = [(self._key, i, task, backend, optimize) for i in shard_ids]
         # a concurrent generation bump can shut this executor down between
         # _ensure() and map(); re-ensure (against the new fork) and retry
         for attempt in (0, 1):

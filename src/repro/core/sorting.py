@@ -118,8 +118,9 @@ def block_sort(table: np.ndarray, n_blocks: int,
 # Two run stores are supported.  Without ``spill_dir`` the runs stay in
 # memory (the original simulation: run generation + streaming k-way merge
 # over run cursors).  With ``spill_dir`` each chunk-sorted run is *written to
-# disk* — a packed-uint64 key file plus an int64 permutation file, reopened
-# as read-only ``np.memmap``s — and the k-way merge reads them back through
+# disk* — a key file (packed uint64 scalars, or the raw int64 key columns
+# when the key space overflows 64 bits) plus an int64 permutation file,
+# reopened as read-only ``np.memmap``s — and the k-way merge reads them back through
 # bounded windows of ``merge_block_rows`` keys per run, so the sorter's
 # memory ceiling is enforced, not simulated: peak Python-level buffering is
 # O(chunk_rows + n_runs * merge_block_rows) regardless of table size, and
@@ -262,12 +263,15 @@ class _SpillCursor:
         self._wkeys = np.array(self.keys[start:start + self.block],
                                dtype=np.uint64, copy=True)
 
-    def head(self) -> int:
+    def _local_bound(self, suffix: np.ndarray, bound, side: str) -> int:
+        return int(np.searchsorted(suffix, bound, side=side))
+
+    def head(self):
         if not (self._w0 <= self.pos < self._w0 + len(self._wkeys)):
             self._window(self.pos)
         return int(self._wkeys[self.pos - self._w0])
 
-    def scan_until(self, bound: int, side: str) -> int:
+    def scan_until(self, bound, side: str) -> int:
         """First index e >= pos+1 where keys[pos:e] may all precede ``bound``
         (searchsorted semantics per ``side``), scanning window by window."""
         e = self.pos
@@ -278,13 +282,52 @@ class _SpillCursor:
                 return self.n
             if e >= self._w0 + len(self._wkeys):
                 self._window(e)
-            local = int(np.searchsorted(self._wkeys[e - self._w0:],
-                                        bound, side=side))
+            local = self._local_bound(self._wkeys[e - self._w0:], bound, side)
             e += local
             if e < self._w0 + len(self._wkeys) or e >= self.n:
                 return max(e, self.pos + 1)
             # boundary ran off the loaded window: more qualifying keys may
             # follow — slide the window and keep scanning
+
+
+def _tuple_less(rows: np.ndarray, bound: Tuple[int, ...],
+                or_equal: bool) -> np.ndarray:
+    """Row-wise lexicographic ``row < bound`` (or <=) over a (w, d) key
+    block — the multi-column analogue of a scalar key comparison."""
+    less = np.zeros(len(rows), dtype=bool)
+    tie = np.ones(len(rows), dtype=bool)
+    for j, b in enumerate(bound):
+        cj = rows[:, j]
+        less |= tie & (cj < b)
+        tie &= cj == b
+    return less | tie if or_equal else less
+
+
+class _TupleSpillCursor(_SpillCursor):
+    """Spill cursor over *unpacked* key columns (int64, one row per key).
+
+    Used when the combined key space overflows a uint64 so no packed scalar
+    key exists: runs spill the raw key columns instead, heads are Python
+    tuples (which ``heapq`` orders lexicographically, matching
+    ``np.lexsort``), and in-window bounds come from a vectorized row-wise
+    lexicographic comparison — the merge logic upstream is unchanged.
+    """
+
+    def _window(self, start: int) -> None:
+        self._w0 = start
+        self._wkeys = np.array(self.keys[start:start + self.block],
+                               dtype=np.int64, copy=True)
+
+    def _local_bound(self, suffix: np.ndarray, bound, side: str) -> int:
+        # sorted suffix: count of rows preceding ``bound`` IS the insertion
+        # point searchsorted would return for the packed key
+        return int(np.count_nonzero(
+            _tuple_less(suffix, bound, or_equal=side == "right")))
+
+    def head(self):
+        if not (self._w0 <= self.pos < self._w0 + len(self._wkeys)):
+            self._window(self.pos)
+        return tuple(self._wkeys[self.pos - self._w0].tolist())
 
 
 def _merge_spilled(cursors: List[_SpillCursor],
@@ -313,7 +356,7 @@ def _merge_spilled(cursors: List[_SpillCursor],
             block = np.array(c.perm[pos:pos + take], dtype=np.int64,
                              copy=True)
             if stats is not None:
-                stats.bump(sum(len(x._wkeys) for x in cursors) * 8
+                stats.bump(sum(x._wkeys.nbytes for x in cursors)
                            + block.nbytes)
             yield block
             pos += take
@@ -327,18 +370,17 @@ def _spill_runs(table: np.ndarray, chunk_rows: int, order: Sequence[int],
                 stats: SortStats) -> List[_SpillCursor]:
     """Chunk-sort ``table`` into on-disk runs; return merge cursors.
 
-    Each run is two flat files in ``spill_dir`` — ``run-NNNNN.keys`` (packed
-    uint64 sort keys, ascending) and ``run-NNNNN.perm`` (global row ids in
-    key order, int64) — reopened as read-only memmaps.  The caller owns the
-    directory; run files are left for post-mortem inspection and reuse.
+    Each run is two flat files in ``spill_dir`` — ``run-NNNNN.keys`` and
+    ``run-NNNNN.perm`` (global row ids in key order, int64) — reopened as
+    read-only memmaps.  Keys are packed uint64 scalars when the combined
+    key space fits 64 bits; otherwise the raw key *columns* spill as an
+    int64 (rows, d_key) matrix and a ``_TupleSpillCursor`` merges on
+    lexicographic row comparisons — wide keys no longer force the in-memory
+    path.  The caller owns the directory; run files are left for
+    post-mortem inspection and reuse.
     """
     n = len(table)
     cards = _key_cards(table, order)
-    if cards is None:
-        raise ValueError(
-            "spill-to-disk merge needs the sort key packed into a uint64, "
-            "but the key space overflows 64 bits; sort in memory "
-            "(spill_dir=None) or reduce the column order")
     os.makedirs(spill_dir, exist_ok=True)
     cursors: List[_SpillCursor] = []
     n_runs = -(-n // chunk_rows)
@@ -347,10 +389,15 @@ def _spill_runs(table: np.ndarray, chunk_rows: int, order: Sequence[int],
         merge_block_rows = max(min(chunk_rows, 1024),
                                chunk_rows // max(n_runs, 1))
     stats.merge_block_rows = int(merge_block_rows)
+    d_key = len(list(order))
     for run_id, s in enumerate(range(0, n, chunk_rows)):
         chunk = table[s:s + chunk_rows]
         perm_c = lex_sort(chunk, order)
-        keys_c = _pack_rows(np.asarray(chunk)[perm_c], order, cards)
+        if cards is not None:
+            keys_c = _pack_rows(np.asarray(chunk)[perm_c], order, cards)
+        else:
+            keys_c = np.ascontiguousarray(
+                np.asarray(chunk)[perm_c][:, list(order)], dtype=np.int64)
         stats.bump(keys_c.nbytes + perm_c.nbytes)
         kpath = os.path.join(spill_dir, f"run-{run_id:05d}.keys")
         ppath = os.path.join(spill_dir, f"run-{run_id:05d}.perm")
@@ -360,11 +407,17 @@ def _spill_runs(table: np.ndarray, chunk_rows: int, order: Sequence[int],
         stats.spilled_bytes += keys_c.nbytes + perm_c.nbytes
         del keys_c, perm_c
         rows_run = min(chunk_rows, n - s)
-        keys_mm = np.memmap(kpath, dtype=np.uint64, mode="r",
-                            shape=(rows_run,))
         perm_mm = np.memmap(ppath, dtype=np.int64, mode="r",
                             shape=(rows_run,))
-        cursors.append(_SpillCursor(keys_mm, perm_mm, merge_block_rows))
+        if cards is not None:
+            keys_mm = np.memmap(kpath, dtype=np.uint64, mode="r",
+                                shape=(rows_run,))
+            cursors.append(_SpillCursor(keys_mm, perm_mm, merge_block_rows))
+        else:
+            keys_mm = np.memmap(kpath, dtype=np.int64, mode="r",
+                                shape=(rows_run, d_key))
+            cursors.append(_TupleSpillCursor(keys_mm, perm_mm,
+                                             merge_block_rows))
     stats.n_runs = len(cursors)
     return cursors
 

@@ -313,11 +313,13 @@ def shard_path(dir_path: str, i: int) -> str:
 
 
 def _write_manifest(dir_path: str, shard_files: List[str],
-                    column_names: Optional[Sequence[str]]) -> None:
+                    column_names: Optional[Sequence[str]],
+                    meta: Optional[Dict] = None) -> None:
     body = json.dumps({
         "version": VERSION,
         "shards": shard_files,
         "column_names": list(column_names) if column_names else None,
+        "meta": meta or {},
     }, indent=1).encode()
     tmp = os.path.join(dir_path, f".{MANIFEST_NAME}.tmp.{os.getpid()}")
     with open(tmp, "wb") as f:
@@ -328,9 +330,13 @@ def _write_manifest(dir_path: str, shard_files: List[str],
     _fsync_dir(dir_path)
 
 
-def save_sharded(index, dir_path: str) -> str:
+def save_sharded(index, dir_path: str, meta: Optional[Dict] = None) -> str:
     """Write a ``ShardedIndex`` (or a 1-shard ``BitmapIndex``) as a
-    directory of atomic per-shard store files plus a manifest."""
+    directory of atomic per-shard store files plus a manifest.
+
+    ``meta`` (JSON-serializable) is carried verbatim in the manifest —
+    the ``Dataset`` façade records its build recipe (sort order, cards,
+    encoding) there so ``Dataset.open`` can restore it."""
     from .shard import ShardedIndex  # local: shard imports store lazily too
     os.makedirs(dir_path, exist_ok=True)
     shards = index.shards if isinstance(index, ShardedIndex) else [index]
@@ -339,8 +345,14 @@ def save_sharded(index, dir_path: str) -> str:
     for i, sh in enumerate(shards):
         save(sh, shard_path(dir_path, i))
         files.append(SHARD_FILE_FMT.format(i))
-    _write_manifest(dir_path, files, names)
+    _write_manifest(dir_path, files, names, meta)
     return dir_path
+
+
+def manifest_meta(dir_path: str) -> Dict:
+    """The free-form ``meta`` block of a sharded store's manifest
+    (``{}`` for directories written before metadata existed)."""
+    return _read_manifest(dir_path).get("meta") or {}
 
 
 def write_shard_file(dir_path: str, i: int, shard: BitmapIndex) -> str:

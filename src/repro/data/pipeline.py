@@ -1,18 +1,15 @@
 """Fact-table-backed training data pipeline (the paper as a data substrate).
 
 The corpus metadata is a *fact table* — one row per document with columns
-(source, lang, length_bucket, quality, dedup_cluster).  Sample selection
-predicates ("lang == fr AND quality >= q3") are evaluated as AND/ORs over
-EWAH-compressed bitmap indexes (core/), and the fact table is
-lexicographically sorted with cardinality-aware column ordering (paper §4.3)
-before indexing — `index_stats()` reports the sorted-vs-shuffled compression
-delta, reproducing the paper's effect inside the training stack.
-
-Sorting and indexing both stream: the sort is an external merge
-(chunk-sorted runs + k-way merge, identical permutation to the in-memory
-``lex_sort``) and the index is built by appending ``chunk_rows``-row chunks
-to an ``IndexBuilder``, so corpus metadata larger than memory still gets
-*full-sort* compression rather than the paper's degraded block-sort numbers.
+(source, lang, length_bucket, quality, dedup_cluster).  The pipeline now
+rides on the ``repro.core.Dataset`` façade: one object owns the sort
+(external merge, frequency-aware column order, paper §4.3), the streaming
+k-of-N EWAH index build, and the statement API.  Sample-selection
+predicates ("lang == fr AND quality >= q3") execute as planned bitmap
+queries, and ``composition()`` reports the selected corpus's per-value
+make-up straight from the compressed domain (group-by counts — no row
+materialization), reproducing the paper's aggregate-workload story inside
+the training stack.
 
 The pipeline is *seekable*: batch(step) is a pure function of (selected ids,
 seed, step), which fault tolerance relies on for exact replay after restart.
@@ -20,13 +17,12 @@ seed, step), which fault tolerance relies on for exact replay after restart.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import (BitmapIndex, IndexBuilder, execute,
-                        external_merge_sort_perm, order_columns_freq_aware,
-                        random_shuffle)
+from repro.core import BitmapIndex, random_shuffle
+from repro.core.dataset import Dataset
 from repro.core.expr import And, Eq, Expr, Not, Or
 
 COLUMNS = ("source", "lang", "length_bucket", "quality", "dedup_cluster")
@@ -57,24 +53,29 @@ class BitmapDataPipeline:
         self.seed = seed
         self.chunk_rows = int(chunk_rows)
         rng = np.random.default_rng(seed)
-        if sort:
-            order = order_columns_freq_aware(corpus.fact_table, corpus.cards)
-            # external merge: only chunk_rows rows sorted at once, same
-            # permutation (and hence same index) as a full in-memory lex sort
-            self.row_perm = external_merge_sort_perm(
-                corpus.fact_table, self.chunk_rows, order)
-            self.col_order = order
-        else:
-            self.row_perm = random_shuffle(corpus.fact_table, rng)
-            self.col_order = list(range(corpus.fact_table.shape[1]))
-        self.table = corpus.fact_table[self.row_perm]
         # word-aligned partitions bound the builder's buffering to one
         # chunk; corpora up to chunk_rows docs still get one partition
         part = self.chunk_rows - self.chunk_rows % 32 or 32
-        builder = IndexBuilder(corpus.cards, k=k, partition_rows=part)
-        for s in range(0, len(self.table), self.chunk_rows):
-            builder.append(self.table[s:s + self.chunk_rows])
-        self.index = builder.finish()
+        if sort:
+            # Dataset sorts with the external merge (only chunk_rows rows
+            # sorted at once, same permutation — and hence same index — as
+            # a full in-memory lex sort) under the §4.3 freq-aware order
+            self.ds = Dataset.from_rows(
+                corpus.fact_table, columns=COLUMNS, sort="lex", k=k,
+                cards=corpus.cards, chunk_rows=self.chunk_rows,
+                partition_rows=part)
+            self.row_perm = self.ds.row_perm
+            self.col_order = self.ds.sort_order
+        else:
+            self.row_perm = random_shuffle(corpus.fact_table, rng)
+            self.ds = Dataset.from_rows(
+                corpus.fact_table[self.row_perm], columns=COLUMNS,
+                sort="none", k=k, cards=corpus.cards,
+                chunk_rows=self.chunk_rows, partition_rows=part)
+            self.col_order = list(range(corpus.fact_table.shape[1]))
+        self.table = self.ds.table
+        self.index = self.ds.index
+        self._filter: Optional[Expr] = None
         self.selected: np.ndarray = np.arange(len(self.table))
 
     # -- selection ----------------------------------------------------------
@@ -93,12 +94,31 @@ class BitmapDataPipeline:
             parts.append(Not(Or(tuple(Eq(col[c], v)
                                       for c, v in sorted(exclude.items())))))
         if not parts:
+            self._filter = None
             sel = np.arange(len(self.table))
         else:
-            e = parts[0] if len(parts) == 1 else And(tuple(parts))
-            sel = execute(self.index, e).set_bits()
+            self._filter = parts[0] if len(parts) == 1 else And(tuple(parts))
+            sel = self.ds.query().where(self._filter).rows()
         self.selected = sel
         return len(sel)
+
+    def selected_count(self) -> int:
+        """Size of the current selection without materializing row ids —
+        a compressed-domain COUNT statement."""
+        q = self.ds.query()
+        if self._filter is not None:
+            q = q.where(self._filter)
+        return q.count()
+
+    def composition(self, column: str) -> np.ndarray:
+        """Per-value document counts of the current selection for one
+        metadata column (``np.bincount`` shape), computed by group-by in
+        the compressed domain — the corpus-mix report never decompresses a
+        bitmap to rows."""
+        q = self.ds.query()
+        if self._filter is not None:
+            q = q.where(self._filter)
+        return q.group_by(column).count()
 
     # -- seekable batches ----------------------------------------------------
     def batch(self, step: int, batch_size: int, seq_len: int) -> Dict[str, np.ndarray]:

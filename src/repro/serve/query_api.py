@@ -26,9 +26,15 @@ Production-shaped serving on a dependency-free stack (stdlib ``http.server``
   file from an out-of-band reindex), keeping the *other* shards' caches
   warm.  Result-cache entries can also expire after ``--cache-ttl`` seconds
   (lazily, on lookup), with hit/miss/expired counters in ``/stats``.
+* **Aggregation statements** — count / group-by / top-k evaluate *in the
+  compressed domain* (memoized popcounts + interval intersection; sharded
+  indexes merge per-shard partial counts at the coordinator, never a global
+  result bitmap) and are cached like row queries, keyed by the statement
+  kind plus the filter's canonical key.
 * ``serve()`` — a threaded HTTP server exposing the service:
-    POST /query             {"query": <expr>}          -> one result
+    POST /query             {"query": <expr>}          -> one row result
     POST /query             {"queries": [<expr>, ...]} -> batched results
+    POST /query             {"select": <sel>, "where": <expr>?} -> aggregate
     POST /admin/invalidate                             -> drop the result cache
     POST /admin/reload                                 -> reopen changed shards
     GET  /healthz                                      -> liveness
@@ -40,6 +46,11 @@ Wire format for expressions (mirrors the AST):
     {"op": "range", "col": 1, "lo": 10, "hi": 20}        # either bound opt.
     {"op": "and"|"or", "args": [<expr>, ...]}
     {"op": "not", "arg": <expr>}
+
+and for aggregate selects (the ``where`` clause is optional everywhere):
+    {"select": {"count": true}, "where": <expr>}
+    {"select": {"group_count": "region"}, "where": <expr>}
+    {"select": {"top_k": {"col": "region", "k": 5}}, "where": <expr>}
 
 Run standalone against a synthetic sorted table:
     PYTHONPATH=src python -m repro.serve.query_api --port 8321 --shards 4
@@ -62,9 +73,11 @@ import numpy as np
 
 from repro.core import BitmapIndex, ShardedIndex, lex_sort, synth
 from repro.core import store as index_store
+from repro.core.dataset import top_k_from_counts
 from repro.core.expr import And, Eq, Expr, In, Not, Or, Range, canonical_key
-from repro.core.executor import execute
-from repro.core.lru import LRUCache
+from repro.core.executor import (execute, execute_count,
+                                 execute_group_count)
+from repro.core.lru import LRUCache, payload_nbytes
 from repro.core.planner import explain, plan
 
 DEFAULT_CACHE_BYTES = 64 << 20  # total EWAH payload budget for the result LRU
@@ -117,6 +130,45 @@ def expr_to_json(e: Expr) -> Dict:
     raise TypeError(f"cannot serialize {e!r}")
 
 
+def parse_statement(obj: Dict):
+    """``{"select": ..., "where": ...}`` -> (kind, col, k, where_expr).
+
+    ``kind`` is ``"count"`` / ``"group_count"`` / ``"top_k"``; ``col`` and
+    ``k`` are None where not applicable.  Raises ValueError on malformed
+    statements (mapped to HTTP 400).
+    """
+    sel = obj.get("select")
+    if not isinstance(sel, dict) or len(sel) != 1:
+        raise ValueError(
+            f"'select' must be an object with exactly one of count / "
+            f"group_count / top_k: {sel!r}")
+    where = obj.get("where")
+    e = parse_expr(where) if where is not None else None
+    (kind, arg), = sel.items()
+    if kind == "count":
+        if arg is not True:
+            raise ValueError('use {"count": true}')
+        return "count", None, None, e
+    if kind == "group_count":
+        _check_col(arg, "group_count")
+        return "group_count", arg, None, e
+    if kind == "top_k":
+        if not (isinstance(arg, dict) and "col" in arg and "k" in arg):
+            raise ValueError(
+                f'top_k needs {{"col": ..., "k": ...}}, got {arg!r}')
+        _check_col(arg["col"], "top_k")
+        return "top_k", arg["col"], int(arg["k"]), e
+    raise ValueError(f"unknown select {kind!r}")
+
+
+def _check_col(arg, kind: str) -> None:
+    # bool is a subclass of int: {"group_count": true} (a typo'd copy of
+    # the count shape) must be a 400, not a query against column 1
+    if isinstance(arg, bool) or not isinstance(arg, (str, int)):
+        raise ValueError(f"{kind} needs a column name or position, "
+                         f"got {arg!r}")
+
+
 class QueryService:
     """Pooled, caching query service over one (re-buildable) index.
 
@@ -140,7 +192,7 @@ class QueryService:
         self.backend = backend
         self.max_rows = max_rows  # cap rows per response, count is exact
         self.cache = LRUCache(capacity=cache_entries, max_bytes=cache_bytes,
-                              sizeof=lambda bm: bm.size_bytes,
+                              sizeof=payload_nbytes,
                               ttl=cache_ttl)
         self._generation = 0
         self.pool_workers = max(int(pool_workers), 1)
@@ -330,6 +382,70 @@ class QueryService:
                 for e in es]
         return [f.result() for f in futs]
 
+    # -- aggregation statements (compressed domain) -------------------------
+    def _agg_cached(self, kind: str, col, e: Optional[Expr], compute):
+        """Cache wrapper shared by the aggregate statements: keyed by the
+        statement kind + resolved column + the filter's canonical key (and
+        the index generation, like row results).
+
+        The column resolves against the *snapshotted* index — resolving
+        against ``self.index`` outside the snapshot would let a concurrent
+        ``set_index`` cache another column's counts under a live key."""
+        gen, idx = self._snapshot()
+        c = idx.resolve_column(col) if col is not None else None
+        key = (gen, self.backend, kind, c,
+               canonical_key(e) if e is not None else None)
+        val = self.cache.get(key)
+        if val is not None:
+            return val, True
+        pool = self._shard_pool if isinstance(idx, ShardedIndex) else None
+        val = compute(idx, pool, c)
+        self.cache.put(key, val)
+        return val, False
+
+    def _count_one(self, e: Optional[Expr]) -> Dict:
+        cnt, cached = self._agg_cached(
+            "count", None, e,
+            lambda idx, pool, _c: execute_count(idx, e, backend=self.backend,
+                                                pool=pool))
+        return {"select": "count", "count": int(cnt), "cached": cached}
+
+    def _group_count_one(self, col, e: Optional[Expr]) -> Dict:
+        counts, cached = self._agg_cached(
+            "group_count", col, e,
+            lambda idx, pool, c: execute_group_count(
+                idx, c, e, backend=self.backend, pool=pool))
+        return {"select": "group_count", "col": col,
+                "counts": [int(x) for x in counts], "cached": cached}
+
+    def _top_k_one(self, col, k: int, e: Optional[Expr]) -> Dict:
+        out = self._group_count_one(col, e)
+        top = top_k_from_counts(np.asarray(out["counts"]), k)
+        return {"select": "top_k", "col": col, "k": int(k),
+                "top": [[v, c] for v, c in top],
+                "cached": out["cached"]}
+
+    def count(self, where=None) -> Dict:
+        e = parse_expr(where) if isinstance(where, dict) else where
+        return self._pool.submit(self._count_one, e).result()
+
+    def group_count(self, col, where=None) -> Dict:
+        e = parse_expr(where) if isinstance(where, dict) else where
+        return self._pool.submit(self._group_count_one, col, e).result()
+
+    def top_k(self, col, k: int, where=None) -> Dict:
+        e = parse_expr(where) if isinstance(where, dict) else where
+        return self._pool.submit(self._top_k_one, col, k, e).result()
+
+    def statement(self, obj: Dict) -> Dict:
+        """Execute one ``{"select": ..., "where": ...}`` wire statement."""
+        kind, col, k, e = parse_statement(obj)
+        if kind == "count":
+            return self._pool.submit(self._count_one, e).result()
+        if kind == "group_count":
+            return self._pool.submit(self._group_count_one, col, e).result()
+        return self._pool.submit(self._top_k_one, col, k, e).result()
+
     def stats(self) -> Dict:
         idx = self.index
         n_cols = (idx.n_columns if isinstance(idx, ShardedIndex)
@@ -391,14 +507,17 @@ class _Handler(BaseHTTPRequestHandler):
         try:
             n = int(self.headers.get("Content-Length", 0))
             req = json.loads(self.rfile.read(n) or b"{}")
-            if "queries" in req:
+            if "select" in req:
+                self._send(200, self.service.statement(req))
+            elif "queries" in req:
                 self._send(200, {"results":
                                  self.service.query_batch(req["queries"])})
             elif "query" in req:
                 self._send(200, self.service.query(
                     req["query"], explain_plan=bool(req.get("explain"))))
             else:
-                self._send(400, {"error": "body needs 'query' or 'queries'"})
+                self._send(400, {"error":
+                                 "body needs 'query', 'queries' or 'select'"})
         except (ValueError, KeyError, TypeError) as exc:
             # KeyError's str() wraps its message in quotes; unwrap it
             msg = exc.args[0] if exc.args else str(exc)

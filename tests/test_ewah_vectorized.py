@@ -211,3 +211,61 @@ def test_invert_runlist_direct(seed, n, style):
     assert np.array_equal((~inv).words, e.words)
     if n:
         assert inv.count() == n - e.count()  # pad bits stayed clear
+
+
+@settings(max_examples=150, deadline=None)
+@given(bitmap_pair_strategy())
+def test_and_count_matches_materialized(pair):
+    """``and_count`` (the aggregation kernel) must equal the popcount of
+    the materialized intersection without building it."""
+    a, b = pair
+    A, B = EWAH.from_bool(a), EWAH.from_bool(b)
+    assert A.and_count(B) == int((a & b).sum())
+    assert A.and_count(B) == binary_op(A, B, "and").count()
+    assert A.and_count(A) == A.count()
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.integers(0, 2**31), st.integers(0, 4096), st.integers(0, 3))
+def test_set_intervals_reconstruct(seed, n, style):
+    """Interval view invariants: disjoint, sorted, coalesced, clipped to
+    n_bits, and exactly covering the set bits."""
+    bits = structured_bits(seed, n, style)
+    e = EWAH.from_bool(bits)
+    s, t = e.set_intervals()
+    assert int((t - s).sum()) == e.count() == int(bits.sum())
+    assert np.all(s < t)
+    assert np.all(s[1:] > t[:-1])  # disjoint AND coalesced (gap > 0)
+    if len(t):
+        assert t[-1] <= n
+    rec = np.zeros(n, bool)
+    for x, y in zip(s, t):
+        rec[x:y] = True
+    assert np.array_equal(rec, bits)
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.integers(0, 2**31), st.integers(0, 4096), st.integers(0, 3))
+def test_vectorized_decode_matches_segments(seed, n, style):
+    """The pointer-jumping marker decode must reproduce the segment
+    stream's run-list exactly (the old per-marker loop's contract)."""
+    from repro.core.ewah import (KIND_CLEAN0, KIND_CLEAN1, KIND_LIT,
+                                 _decode_runlist)
+    bits = structured_bits(seed, n, style)
+    e = EWAH.from_bool(bits)
+    rl = _decode_runlist(e.words)
+    # rebuild the interval stream from the canonical segment iterator
+    kinds, counts, lits = [], [], []
+    for seg in e.segments():
+        if seg[0] == "run":
+            kinds.append(KIND_CLEAN1 if seg[1] else KIND_CLEAN0)
+            counts.append(seg[2])
+        else:
+            kinds.append(KIND_LIT)
+            counts.append(len(seg[1]))
+            lits.append(seg[1])
+    assert rl.kinds.tolist() == kinds
+    assert np.diff(rl.bounds).tolist() == counts
+    want_lits = (np.concatenate(lits) if lits
+                 else np.empty(0, e.words.dtype))
+    assert np.array_equal(rl.lits, want_lits)

@@ -100,7 +100,7 @@ def test_flatten_associative_chains():
 
 # -- planning against an index ---------------------------------------------
 
-def test_and_operands_ordered_by_size_estimate(tables):
+def test_and_operands_ordered_by_true_cardinality(tables):
     table = tables["sorted"]
     idx = BitmapIndex.build(table, k=1)
     counts = np.bincount(table[:, 0])
@@ -109,15 +109,28 @@ def test_and_operands_ordered_by_size_estimate(tables):
     e = (col(0) == dense_v) & (col(0) == mid_v) & (col(0) == rare_v)
     p = plan(idx, e)
     assert isinstance(p, PAnd)
-    ests = [ch.est_words for ch in p.children]
-    assert ests == sorted(ests)
-    # the estimates are the true per-bitmap compressed sizes
+    # operands are ordered by *true cardinality* (memoized EWAH popcounts),
+    # so the rarest value prunes the chain first
+    rows = [ch.est_rows for ch in p.children]
+    assert rows == sorted(rows)
+    assert rows[0] == int(counts[rare_v])
+    assert [ch.bitmap_id for ch in p.children][0] == rare_v
+    # the word estimates are still the true per-bitmap compressed sizes
     sizes = idx.columns[0].bitmap_sizes()
-    assert ests[0] == int(sizes[min(dense_v, mid_v, rare_v,
-                                    key=lambda v: sizes[v])])
+    for ch in p.children:
+        assert ch.est_words == int(sizes[ch.bitmap_id])
+    # size-only fallback (use_counts=False): ordered by compressed words,
+    # no payload decoded at plan time
+    from repro.core.planner import Planner
+    p_sz = Planner(idx, use_counts=False).plan(e)
+    assert [ch.est_rows for ch in p_sz.children] == [-1] * 3
+    ests = [ch.est_words for ch in p_sz.children]
+    assert ests == sorted(ests)
     # naive planning keeps the user's order
     p0 = plan(idx, e, optimize=False)
     assert [ch.bitmap_id for ch in p0.children] == [dense_v, mid_v, rare_v]
+    # explain surfaces the cardinality estimates
+    assert f",{counts[rare_v]}r" in explain(p)
 
 
 def test_not_fused_into_andnot(tables):

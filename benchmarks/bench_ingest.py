@@ -1,0 +1,159 @@
+"""Live-ingest benchmark: delta-layer query tax + compaction debt payoff.
+
+Measures (and asserts) the two claims of the live-ingest PR:
+
+* **Bounded delta tax** — with 5% of the rows sitting in the unsorted
+  in-memory delta layer (appended after the base was built), the median
+  count-query latency over the live dataset must stay within 2x of the
+  same queries on a fully-sorted from-scratch build.  The delta layer is
+  small and k=1-encoded, so the extra AND/OR work is marginal.
+* **Compaction restores the sorted recipe** — after ``compact()`` drains
+  the delta through the external-merge sort, the store must be within 5%
+  of the size of a from-scratch sorted build of the full table (same
+  explicit column order, so the only slack is shard-boundary rounding).
+
+Query results on the live dataset (delta pending and post-compaction)
+are asserted equal to the from-scratch build throughout.
+
+Writes ``BENCH_ingest.json`` (uploaded as a CI artifact).
+
+    PYTHONPATH=src python benchmarks/bench_ingest.py [--tiny] \
+        [--out BENCH_ingest.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import Dataset, col, synth
+
+try:  # package-style and script-style execution both work
+    from .common import emit
+except ImportError:  # pragma: no cover
+    from common import emit
+
+DELTA_FRACTION = 0.05
+
+
+def _make_table(n: int, rng: np.random.Generator) -> np.ndarray:
+    # moderate cardinalities: the claims under test are latency/size
+    # *ratios*; a huge near-unique column would only stress raw index
+    # build throughput identically on both sides
+    t = np.stack([rng.integers(0, 7, n),
+                  (rng.pareto(1.5, n) * 40).astype(np.int64) % 1200,
+                  rng.integers(0, 6000, n)], axis=1)
+    table, _ = synth.factorize(t)
+    return table[rng.permutation(n)]
+
+
+def _query_suite():
+    return [
+        (col(0) == 2) & col(1).between(0, 50),
+        col(2).isin([1, 5, 9]) | (col(0) == 0),
+        ~(col(1) == 3) & (col(0) == 1),
+    ]
+
+
+def _median_count_us(ds: Dataset, repeats: int = 5) -> float:
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for e in _query_suite():
+            ds.query().where(e).count()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def run(n: int = 150_000, shards: int = 4,
+        out_path: str = "BENCH_ingest.json") -> dict:
+    rng = np.random.default_rng(0)
+    table = _make_table(n, rng)
+    cards = [int(table[:, c].max()) + 1 for c in range(table.shape[1])]
+    n_delta = int(n * DELTA_FRACTION)
+    base_rows, delta_rows = table[:n - n_delta], table[n - n_delta:]
+    results: dict = {"n_rows": n, "delta_rows": n_delta, "shards": shards}
+
+    with tempfile.TemporaryDirectory() as tmp:
+        base = Dataset.from_rows(base_rows, sort="lex", shards=shards,
+                                 cards=cards)
+        order = base.sort_order
+        base.save(os.path.join(tmp, "live"))
+        live = Dataset.open(os.path.join(tmp, "live"), live=True)
+        live.append(delta_rows)
+
+        # from-scratch fully-sorted build of the full table, pinned to the
+        # same column order so compaction and scratch sort identically
+        scratch = Dataset.from_rows(table, sort=order, shards=shards,
+                                    cards=cards)
+        for e in _query_suite():
+            assert live.query().where(e).count() == scratch.query().where(e).count(), e
+
+        live_us = _median_count_us(live)
+        sorted_us = _median_count_us(scratch)
+        tax = live_us / sorted_us
+        results["delta_tax"] = {
+            "live_us": round(live_us, 1),
+            "sorted_us": round(sorted_us, 1),
+            "ratio": round(tax, 3),
+        }
+        emit("ingest_delta_query", live_us, f"{tax:.2f}x_vs_sorted")
+        assert tax <= 2.0, (
+            f"query suite with {DELTA_FRACTION:.0%} unsorted delta must stay "
+            f"within 2x of fully-sorted, got {tax:.2f}x "
+            f"({live_us:.0f}us vs {sorted_us:.0f}us)")
+
+        t0 = time.perf_counter()
+        info = live.compact()
+        compact_s = time.perf_counter() - t0
+        for e in _query_suite():
+            assert live.query().where(e).count() == scratch.query().where(e).count(), e
+
+        live_words = live.index.size_words
+        scratch_words = scratch.index.size_words
+        drift = abs(live_words - scratch_words) / scratch_words
+        store_bytes = sum(
+            os.path.getsize(os.path.join(tmp, "live", f))
+            for f in os.listdir(os.path.join(tmp, "live"))
+            if f.endswith(".ridx"))
+        results["compaction"] = {
+            "compact_s": round(compact_s, 4),
+            "epoch": info["epoch"],
+            "size_words": live_words,
+            "scratch_size_words": scratch_words,
+            "size_drift": round(drift, 4),
+            "store_bytes": store_bytes,
+            "post_compact_us": round(_median_count_us(live), 1),
+        }
+        emit("ingest_compacted_words", live_words,
+             f"scratch_{scratch_words}_drift_{drift:.3f}")
+        assert drift <= 0.05, (
+            f"post-compaction store ({live_words} words) must be within 5% "
+            f"of a from-scratch sorted build ({scratch_words} words), "
+            f"got {drift:.1%}")
+        live.index.close()
+
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_path}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized run (fast, same asserts)")
+    ap.add_argument("--rows", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_ingest.json")
+    args = ap.parse_args()
+    n = args.rows or (40_000 if args.tiny else 150_000)
+    run(n, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,9 @@ The lifecycle this walks through:
     .query().where(e).group_by(c).count() -> bincount-shaped aggregation
     .query().top_k(c, k)              -> heavy hitters, no rows decompressed
     .serve()                          -> pooled caching HTTP service
+    Dataset.open(dir, live=True)      -> WAL-backed mutable layer
+    .append(rows) / .delete(e)        -> delta index + compressed tombstones
+    .compact()                        -> re-sorted base, new store epoch
 
 Every layer stays importable (sorting / IndexBuilder / store /
 ShardedIndex / QueryService) — the façade just owns their composition.
@@ -118,6 +121,29 @@ def _run(workdir):
           f"count={again['count']} "
           f"(cache {svc.stats()['cache']['misses']} misses)")
     svc.close()
+
+    # --- streaming ingest: append / delete / compact ------------------------
+    # the sorted base is immutable; mutations go to a WAL-framed delta
+    # index + compressed tombstones, reads see (base + delta) AND NOT dead
+    live = Dataset.open(idx_dir, live=True)
+    n0 = live.query().count()
+    live.append(ranked[:500])              # visible to the next statement
+    assert live.query().count() == n0 + 500
+    removed = live.delete(col("region") == v_region)  # compressed-domain
+    stats = live.index.stats()
+    print(f"\nlive: appended 500, tombstoned {removed} "
+          f"(delta {stats['delta_rows']} rows, WAL {stats['wal_bytes']} B)")
+
+    info = live.compact()  # drain delta through the external-merge sort:
+    # fresh sorted shard files under a new epoch, manifest = atomic cutover
+    assert live.query().count() == n0 + 500 - removed
+    print(f"compacted -> epoch {info['epoch']}, {info['n_rows']} rows, "
+          f"{info['size_words']} words")
+
+    reopened = Dataset.open(idx_dir)  # WAL present -> live auto-attaches
+    assert reopened.query().count() == n0 + 500 - removed
+    live.index.close()
+    reopened.index.close()
 
     # power users: the layers are still right there
     assert isinstance(warm.index.shards[0], BitmapIndex)

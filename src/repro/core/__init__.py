@@ -20,11 +20,13 @@ from .store import (StoreCorruptError, StoreError, StoreVersionError,
                     StoreWriter, load, load_sharded, manifest_meta, save,
                     save_sharded, write_shard_file)
 from .expr import (And, Col, Const, Eq, Expr, In, Not, Or, Range,
-                   canonical_key, col)
+                   canonical_key, col, from_wire, to_wire)
 from .planner import explain, plan
 from .executor import (QueryBatch, execute, execute_count,
                        execute_group_count, execute_rows)
 from .shard import ShardedIndex
+from .wal import WAL, WALError, replay as wal_replay
+from .ingest import Compactor, DeltaIndex, LiveIndex
 from .dataset import Dataset, Query
 from . import query
 from . import synth
@@ -42,9 +44,11 @@ __all__ = [
     "save", "load", "save_sharded", "load_sharded", "write_shard_file",
     "manifest_meta",
     "Expr", "Col", "col", "Eq", "In", "Range", "And", "Or", "Not", "Const",
-    "canonical_key",
+    "canonical_key", "from_wire", "to_wire",
     "plan", "explain", "execute", "execute_rows", "execute_count",
     "execute_group_count", "QueryBatch",
+    "WAL", "WALError", "wal_replay",
+    "LiveIndex", "DeltaIndex", "Compactor",
     "Dataset", "Query",
     "query", "synth",
 ]

@@ -238,58 +238,138 @@ class Dataset:
         """Persist as a sharded store directory (atomic per-shard files +
         manifest carrying the build recipe); returns self, now bound to the
         directory so ``serve()`` warm-starts from it."""
-        index = self.index if isinstance(self.index, ShardedIndex) \
-            else ShardedIndex([self.index])
+        from .ingest import LiveIndex
+        index = self.index
+        if isinstance(index, LiveIndex):
+            if index.pending_rows:
+                raise RuntimeError(
+                    "save() on a live dataset with pending mutations — "
+                    "compact() first so the base reflects the live rows")
+            index = index.base
+        if not isinstance(index, ShardedIndex):
+            index = ShardedIndex([index])
         index.save(dir_path, meta={
             "sort_order": self.sort_order,
             "cards": self._cards,
             "k": self._k,
             "allocation": self._allocation,
+            "partition_rows": self._partition_rows,
         })
         self.dir_path = dir_path
         return self
 
     @classmethod
     def open(cls, dir_path: str, mmap: bool = True,
-             verify: Optional[bool] = None) -> "Dataset":
+             verify: Optional[bool] = None,
+             live: Optional[bool] = None) -> "Dataset":
         """Warm start: reopen a saved dataset as zero-copy memmap views.
 
         Open cost is metadata-only; bitmap pages fault in as queries touch
         them.  The manifest's build recipe (sort order, cards, encoding)
         is restored so ``explain``/``shard`` diagnostics stay meaningful.
+
+        ``live=True`` attaches the WAL-backed mutable layer immediately;
+        ``live=None`` (default) attaches it automatically when the manifest
+        names a write-ahead log that exists on disk (i.e. the dataset was
+        served live before — possibly with unreplayed mutations from a
+        crash); ``live=False`` opens read-only regardless.
         """
         from . import store
-        index = ShardedIndex.load(dir_path, mmap=mmap, verify=verify)
+        index: AnyIndex = ShardedIndex.load(dir_path, mmap=mmap,
+                                            verify=verify)
         meta = store.manifest_meta(dir_path)
-        return cls(index, index.column_names, dir_path=dir_path,
-                   sort_order=meta.get("sort_order"),
-                   cards=meta.get("cards"),
-                   k=int(meta.get("k", 1)),
-                   allocation=meta.get("allocation", "alpha"))
+        ds = cls(index, index.column_names, dir_path=dir_path,
+                 sort_order=meta.get("sort_order"),
+                 cards=meta.get("cards"),
+                 k=int(meta.get("k", 1)),
+                 allocation=meta.get("allocation", "alpha"),
+                 partition_rows=meta.get("partition_rows"))
+        if live is None:
+            wal_name = meta.get("wal") \
+                or f"wal-{int(meta.get('epoch', 0)):05d}.log"
+            live = os.path.exists(os.path.join(dir_path, wal_name))
+        if live:
+            ds._ensure_live()
+        return ds
+
+    # -- mutation (live ingest) ----------------------------------------------
+    def _ensure_live(self):
+        """Wrap the index in the WAL-backed mutable layer on first mutation.
+
+        Store-bound datasets get a durable WAL next to the shard files
+        (replayed on ``open``); purely in-memory datasets get an
+        in-memory delta with no log.  The retained table (if any) is
+        dropped — it describes only the immutable base from here on.
+        """
+        from .ingest import LiveIndex
+        if isinstance(self.index, LiveIndex):
+            return self.index
+        self.index = LiveIndex(
+            self.index, dir_path=self.dir_path,
+            recipe={"sort_order": self.sort_order,
+                    "k": self._k, "allocation": self._allocation,
+                    "partition_rows": self._partition_rows})
+        self.table = None
+        self.row_perm = None
+        return self.index
+
+    def append(self, rows) -> int:
+        """Durably append rows (value ranks, one array row per fact row).
+
+        The batch is WAL-framed before it is indexed; queries see the new
+        rows immediately through the base ⊔ delta merge."""
+        return self._ensure_live().append(rows)
+
+    def delete(self, where: Expr) -> int:
+        """Durably delete every row matching ``where``; returns how many.
+
+        Evaluated in the compressed domain into per-shard tombstone
+        bitmaps — no shard file is rewritten until compaction."""
+        return self._ensure_live().delete(where)
+
+    def compact(self) -> Dict:
+        """Fold pending mutations into a freshly sorted base (and, when
+        store-bound, new shard files + a truncated WAL).  Returns the
+        compaction info dict."""
+        return self._ensure_live().compact()
 
     # -- reshaping ----------------------------------------------------------
     def shard(self, n_shards: int) -> "Dataset":
         """Re-cut the dataset into ``n_shards`` row shards (a new Dataset).
 
-        Needs the retained sorted table (in-memory builds); datasets opened
-        from a store or built with ``spill_dir`` no longer hold rows —
-        rebuild from the source with ``shards=`` instead.
+        In-memory builds re-index from the retained sorted table.  Datasets
+        opened from a store (or spilled builds) are re-cut directly from
+        the compressed index: each column bitmap is sliced at the 32-bit
+        word boundaries of the new shard grid (``ShardedIndex.reshard``),
+        so the rows are never reconstructed.  Live datasets must be
+        compacted first (the delta and tombstones belong to the old grid).
         """
-        if self.table is None:
-            raise RuntimeError(
-                "shard() needs the retained table; this dataset was opened "
-                "from a store or spilled its build — rebuild with "
-                "Dataset.from_rows(..., shards=n)")
-        index = _build_from_chunks(
-            (self.table[s:s + DEFAULT_CHUNK_ROWS]
-             for s in range(0, max(len(self.table), 1), DEFAULT_CHUNK_ROWS)),
-            len(self.table), self._cards or _table_cards(self.table),
-            self._k, self._allocation, int(n_shards), self._partition_rows,
-            self.column_names)
-        return Dataset(index, self.column_names, table=self.table,
-                       row_perm=self.row_perm, sort_order=self.sort_order,
-                       cards=self._cards, k=self._k,
-                       allocation=self._allocation,
+        from .ingest import LiveIndex
+        idx = self.index
+        if isinstance(idx, LiveIndex):
+            if idx.pending_rows:
+                raise RuntimeError(
+                    "shard() on a live dataset with pending mutations — "
+                    "compact() first")
+            idx = idx.base
+        if self.table is not None:
+            index: AnyIndex = _build_from_chunks(
+                (self.table[s:s + DEFAULT_CHUNK_ROWS]
+                 for s in range(0, max(len(self.table), 1),
+                                DEFAULT_CHUNK_ROWS)),
+                len(self.table), self._cards or _table_cards(self.table),
+                self._k, self._allocation, int(n_shards),
+                self._partition_rows, self.column_names)
+            return Dataset(index, self.column_names, table=self.table,
+                           row_perm=self.row_perm, sort_order=self.sort_order,
+                           cards=self._cards, k=self._k,
+                           allocation=self._allocation,
+                           partition_rows=self._partition_rows)
+        if not isinstance(idx, ShardedIndex):
+            idx = ShardedIndex([idx], column_names=self.column_names)
+        return Dataset(idx.reshard(int(n_shards)), self.column_names,
+                       sort_order=self.sort_order, cards=self._cards,
+                       k=self._k, allocation=self._allocation,
                        partition_rows=self._partition_rows)
 
     # -- stats --------------------------------------------------------------
@@ -300,13 +380,12 @@ class Dataset:
     @property
     def n_columns(self) -> int:
         idx = self.index
-        return idx.n_columns if isinstance(idx, ShardedIndex) \
-            else len(idx.columns)
+        return len(idx.columns) if isinstance(idx, BitmapIndex) \
+            else idx.n_columns
 
     @property
     def n_shards(self) -> int:
-        return self.index.n_shards if isinstance(self.index, ShardedIndex) \
-            else 1
+        return getattr(self.index, "n_shards", 1)
 
     @property
     def size_words(self) -> int:
@@ -323,8 +402,11 @@ class Dataset:
         return Query(self.index, backend=backend)
 
     def explain(self, e: Expr) -> str:
+        from .ingest import LiveIndex
         from .planner import explain, plan
         idx = self.index
+        if isinstance(idx, LiveIndex):
+            idx = idx.base  # the delta layer plans the same tree
         if isinstance(idx, ShardedIndex):
             return (f"per-shard plans x{idx.n_shards}; shard 0:\n"
                     + explain(plan(idx.shards[0], e)))
@@ -336,6 +418,11 @@ class Dataset:
         (mmap) when the dataset is bound to a store directory, in-memory
         otherwise.  Keyword arguments pass through to ``QueryService``."""
         from repro.serve.query_api import QueryService
+        from .ingest import LiveIndex
+        if isinstance(self.index, LiveIndex):
+            # share the live layer (and its WAL) rather than re-opening
+            return QueryService(self.index, index_dir=self.dir_path,
+                                **service_kwargs)
         if self.dir_path is not None:
             return QueryService.from_dir(self.dir_path, **service_kwargs)
         return QueryService(self.index, **service_kwargs)
@@ -460,8 +547,11 @@ class Query:
 
     def explain(self) -> str:
         """Plan tree(s) of the current filter."""
+        from .ingest import LiveIndex
         from .planner import Planner, explain
         idx = self._index
+        if isinstance(idx, LiveIndex):
+            idx = idx.base
         target = idx.shards[0] if isinstance(idx, ShardedIndex) else idx
         planner = Planner(target)
         node = planner.plan(self._where) if self._where is not None \

@@ -342,6 +342,94 @@ class EWAH:
                 self._iv = (np.empty(0, np.int64), np.empty(0, np.int64))
         return self._iv
 
+    # -- structural ops (compressed domain) --------------------------------
+    def pad_to(self, n_bits: int) -> "EWAH":
+        """This bitmap extended to ``n_bits`` with clear bits (O(runs)).
+
+        Used by the live-ingest layer: a tombstone built over an older,
+        shorter delta stays valid for a grown delta because the appended
+        rows are live (their tombstone bits must read 0).  If the new length
+        fits the existing word count the words are reused verbatim — pad
+        bits past ``n_bits`` are guaranteed clear by the codec invariant —
+        otherwise a clean-zero run covers the new words.
+        """
+        n_bits = int(n_bits)
+        if n_bits < self.n_bits:
+            raise ValueError(f"pad_to cannot shrink: {n_bits} < {self.n_bits}")
+        if n_bits == self.n_bits:
+            return self
+        extra = -(-n_bits // WORD_BITS) - self.n_words_uncompressed
+        if extra == 0:
+            return EWAH(self.words, n_bits)
+        rl = self.runlist()
+        if len(rl.kinds) and rl.kinds[-1] == KIND_CLEAN0:
+            bounds = rl.bounds.copy()
+            bounds[-1] += extra
+            out = RunList(bounds, rl.kinds, rl.lit_starts, rl.lits)
+        else:
+            out = RunList(np.append(rl.bounds, rl.bounds[-1] + extra),
+                          np.append(rl.kinds, np.int8(KIND_CLEAN0)),
+                          np.append(rl.lit_starts, len(rl.lits)), rl.lits)
+        return _rl_wrap(out, n_bits)
+
+    def slice_bits(self, start: int, stop: int) -> "EWAH":
+        """Bits ``[start, stop)`` as a new bitmap; ``start`` must be
+        word-aligned (32-bit boundary) so the slice is a pure run-list clip
+        with no bit shifting — the primitive behind store-file re-sharding.
+
+        Cost is O(runs overlapping the slice): interval bounds shift left
+        by whole words, literal words are gathered from the pool, and the
+        tail word is masked when ``stop`` is ragged (pad bits stay clear).
+        """
+        start, stop = int(start), int(stop)
+        if start % WORD_BITS:
+            raise ValueError(f"slice start {start} not on a 32-bit boundary")
+        if not 0 <= start <= stop <= self.n_words_uncompressed * WORD_BITS:
+            raise ValueError(f"slice [{start}, {stop}) out of range for "
+                             f"{self.n_bits} bits")
+        n_bits = stop - start
+        if n_bits == 0:
+            return _rl_wrap(_EMPTY_RUNLIST, 0)
+        w0 = start // WORD_BITS
+        out_words = -(-n_bits // WORD_BITS)
+        w1 = w0 + out_words
+        rl = self.runlist()
+        i0 = int(np.searchsorted(rl.bounds, w0, side="right")) - 1
+        i1 = int(np.searchsorted(rl.bounds, w1, side="left"))
+        bounds = rl.bounds[i0:i1 + 1].astype(np.int64, copy=True)
+        bounds[0] = w0
+        bounds[-1] = w1
+        kinds = rl.kinds[i0:i1]
+        lens = np.diff(bounds)
+        lit_mask = kinds == KIND_LIT
+        src_off = (rl.lit_starts[i0:i1][lit_mask]
+                   + (bounds[:-1][lit_mask] - rl.bounds[i0:i1][lit_mask]))
+        lits = rl.lits[_ranges(src_off, lens[lit_mask])]
+        items_per = np.where(lit_mask, lens, 1)
+        item_kind = np.repeat(kinds, items_per)
+        item_count = np.where(item_kind == KIND_LIT, 1,
+                              np.repeat(lens, items_per))
+        item_word = np.zeros(len(item_kind), WORD_DTYPE)
+        item_word[item_kind == KIND_LIT] = lits
+        pad = out_words * WORD_BITS - n_bits
+        if pad:
+            tail_mask = np.uint32((1 << (WORD_BITS - pad)) - 1)
+            k = int(item_kind[-1])
+            if k == KIND_LIT:
+                item_word[-1] &= tail_mask
+            elif k == KIND_CLEAN1:
+                # split the masked final word off its clean-one run
+                if item_count[-1] > 1:
+                    item_count[-1] -= 1
+                    item_kind = np.append(item_kind, np.int8(KIND_LIT))
+                    item_count = np.append(item_count, np.int64(1))
+                    item_word = np.append(item_word, ALL_ONES & tail_mask)
+                else:
+                    item_kind[-1] = KIND_LIT
+                    item_word[-1] = ALL_ONES & tail_mask
+        return _rl_wrap(_groups_to_runlist(item_kind, item_count, item_word),
+                        n_bits)
+
     # -- logical ops (compressed domain, Lemma 2) --------------------------
     def __invert__(self) -> "EWAH":
         """Bitwise complement over ``n_bits`` (padding bits stay clear).

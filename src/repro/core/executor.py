@@ -36,7 +36,7 @@ from .ewah import EWAH, and_many, or_many
 from .expr import Expr
 from .index import BitmapIndex
 from .planner import (PAnd, PBitmap, PConst, PCount, PDiff, PGroupCount,
-                      PNot, POr, PlanNode, Planner, plan)
+                      PNot, POr, PPinned, PlanNode, Planner, plan)
 
 # the historical static threshold, kept as the uncalibrated fallback; the
 # live value comes from ``repro.core.cost_model`` (measured crossover when a
@@ -144,6 +144,10 @@ class Executor:
             return _const_bitmap(self.index, node.value, self.cache)
         if isinstance(node, PBitmap):
             return self._load(node)
+        if isinstance(node, PPinned):
+            # an externally-evaluated bitmap (live-ingest tombstone masks);
+            # its ckey is None, so no enclosing subtree caches around it
+            return node.bitmap
         # composite subtrees memoize by canonical plan key: a subexpression
         # shared across a batch's statements (same ``ckey``, possibly under
         # commutative reordering) is evaluated exactly once per cache
@@ -338,6 +342,10 @@ def execute(index, e: Union[Expr, PlanNode],
     results.
     """
     from .shard import ShardedIndex  # local: shard imports this module
+    from .ingest import LiveIndex   # local: ingest imports this module
+    if isinstance(index, LiveIndex):
+        return index.execute(e, backend=backend, optimize=optimize,
+                             pool=pool)
     if isinstance(index, ShardedIndex):
         return index.execute(e, backend=backend, optimize=optimize,
                              caches=_shard_caches(index, cache), pool=pool)
@@ -370,6 +378,9 @@ def execute_count(index, e: Optional[Expr] = None,
     compressed domain — on a ``ShardedIndex`` per-shard partial counts are
     summed at the coordinator, never a concatenated result bitmap."""
     from .shard import ShardedIndex
+    from .ingest import LiveIndex
+    if isinstance(index, LiveIndex):
+        return index.count(e, backend=backend, optimize=optimize, pool=pool)
     if isinstance(index, ShardedIndex):
         return index.count(e, backend=backend, optimize=optimize,
                            caches=_shard_caches(index, cache), pool=pool)
@@ -384,6 +395,10 @@ def execute_group_count(index, col, e: Optional[Expr] = None,
     length ``card(col)`` (a ``np.bincount``-shaped result).  Sharded
     indexes merge per-shard partial count vectors by summation."""
     from .shard import ShardedIndex
+    from .ingest import LiveIndex
+    if isinstance(index, LiveIndex):
+        return index.group_count(col, e, backend=backend, optimize=optimize,
+                                 pool=pool)
     if isinstance(index, ShardedIndex):
         return index.group_count(col, e, backend=backend, optimize=optimize,
                                  caches=_shard_caches(index, cache),

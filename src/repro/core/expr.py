@@ -183,6 +183,63 @@ def canonical_key(e: Expr) -> tuple:
     raise TypeError(f"not a query expression: {e!r}")
 
 
+def to_wire(e: Expr) -> dict:
+    """Expr tree -> JSON-serializable wire object (see ``from_wire``).
+
+    The wire format mirrors the AST and is shared by the HTTP serving layer
+    (``repro.serve.query_api``) and the write-ahead log
+    (``repro.core.wal``), which persists delete predicates as expressions so
+    crash replay re-evaluates them in original order.
+    """
+    if isinstance(e, Eq):
+        return {"op": "eq", "col": e.col, "value": e.value}
+    if isinstance(e, In):
+        return {"op": "in", "col": e.col, "values": list(e.values)}
+    if isinstance(e, Range):
+        out = {"op": "range", "col": e.col}
+        if e.lo is not None:
+            out["lo"] = e.lo
+        if e.hi is not None:
+            out["hi"] = e.hi
+        return out
+    if isinstance(e, And):
+        return {"op": "and", "args": [to_wire(c) for c in e.operands]}
+    if isinstance(e, Or):
+        return {"op": "or", "args": [to_wire(c) for c in e.operands]}
+    if isinstance(e, Not):
+        return {"op": "not", "arg": to_wire(e.operand)}
+    if isinstance(e, Const):
+        return {"op": "const", "value": bool(e.value)}
+    raise TypeError(f"cannot serialize {e!r}")
+
+
+def from_wire(obj: dict) -> Expr:
+    """JSON wire object -> Expr tree (raises ValueError on malformed input)."""
+    if not isinstance(obj, dict) or "op" not in obj:
+        raise ValueError(f"expression must be an object with 'op': {obj!r}")
+    op = obj["op"]
+    if op == "eq":
+        return Eq(obj["col"], int(obj["value"]))
+    if op == "in":
+        return In(obj["col"], tuple(int(v) for v in obj["values"]))
+    if op == "range":
+        lo, hi = obj.get("lo"), obj.get("hi")
+        if lo is None and hi is None:
+            raise ValueError("range needs at least one of lo/hi")
+        return Range(obj["col"], None if lo is None else int(lo),
+                     None if hi is None else int(hi))
+    if op in ("and", "or"):
+        args = [from_wire(a) for a in obj["args"]]
+        if not args:
+            raise ValueError(f"{op} needs at least one argument")
+        return And(tuple(args)) if op == "and" else Or(tuple(args))
+    if op == "not":
+        return Not(from_wire(obj["arg"]))
+    if op == "const":
+        return Const(bool(obj["value"]))
+    raise ValueError(f"unknown op {op!r}")
+
+
 class Col:
     """Column handle: comparison operators build expression leaves."""
 

@@ -355,6 +355,39 @@ class BitmapIndex:
     def equality_rows(self, col: int, value_rank: int) -> np.ndarray:
         return self.equality_bitmap(col, value_rank).set_bits()
 
+    def reconstruct_rows(self, keep: Optional[EWAH] = None) -> np.ndarray:
+        """Materialize the indexed fact rows back from the bitmaps.
+
+        Returns an ``(n_kept, n_columns)`` int64 array of value ranks, in
+        row order.  ``keep`` (an EWAH over ``n_rows`` bits) restricts the
+        output to its set rows — the live-ingest compactor passes the
+        complement of a shard's tombstones, so deleted rows never survive
+        into the rebuilt base.
+
+        The scatter stays interval-shaped: for each value its equality
+        bitmap's set intervals land in the output by two ``searchsorted``
+        probes against the kept row ids, never a per-row loop.
+        """
+        if keep is not None and keep.n_bits != self.n_rows:
+            raise ValueError(
+                f"keep bitmap spans {keep.n_bits} bits, index has "
+                f"{self.n_rows} rows")
+        kept = keep.set_bits() if keep is not None else None
+        n_out = len(kept) if kept is not None else self.n_rows
+        out = np.empty((n_out, len(self.columns)), dtype=np.int64)
+        for c, ci in enumerate(self.columns):
+            for v in range(ci.encoder.card):
+                starts, ends = self.equality_bitmap(c, v).set_intervals()
+                if kept is None:
+                    for s, e in zip(starts, ends):
+                        out[s:e, c] = v
+                else:
+                    los = np.searchsorted(kept, starts)
+                    his = np.searchsorted(kept, ends)
+                    for lo, hi in zip(los, his):
+                        out[lo:hi, c] = v
+        return out
+
 
 def concat_bitmaps(parts: Sequence[EWAH]) -> EWAH:
     """Concatenate per-partition bitmaps into one bitmap over all rows.

@@ -60,6 +60,10 @@ class PlanNode:
     # hand-built nodes); executors memoize composite results under it so a
     # subtree repeated across a batch of statements evaluates once
     ckey: Optional[tuple] = field(default=None, init=False)
+    # provenance of ``est_rows`` on composite nodes: "bound" (min/sum
+    # arithmetic over child estimates) or "sampled" (tightened by a sampled
+    # set-interval overlap of the two most selective leaves)
+    est_src: str = field(default="bound", init=False)
     # advisory physical-path hint from the planner's cost model: True when
     # the estimated operand density clears the (calibrated) EWAH-vs-kernel
     # crossover.  The executor re-decides from the operands' *actual*
@@ -121,6 +125,22 @@ class PDiff(PlanNode):
     def __repr__(self):
         return ("DIFF(" + ", ".join(map(repr, self.pos)) + " \\ "
                 + ", ".join(map(repr, self.neg)) + ")")
+
+
+@dataclass
+class PPinned(PlanNode):
+    """A concrete, already-evaluated bitmap pinned into a plan.
+
+    The live-ingest layer builds aggregate plans whose filter is a bitmap
+    it computed outside the planner (a per-shard result already masked by
+    tombstones); the executor returns the pinned bitmap as-is.  ``ckey``
+    stays ``None`` by design — a pinned bitmap has no structural identity,
+    so no enclosing subtree is ever memoized under a key that could go
+    stale when the pinned contents change."""
+    bitmap: object  # EWAH (untyped to keep the planner import-light)
+
+    def __repr__(self):
+        return f"pinned[{self.bitmap!r}]"
 
 
 @dataclass
@@ -421,6 +441,7 @@ class Planner:
                     node = PDiff(pos, neg)
                     node.est_words = min(ch.est_words for ch in pos)
                     node.est_rows = self._and_rows(pos)
+                    self._refine_nary(node, pos, "and")
                     node.ckey = ("diff", _nary_key("and", pos),
                                  _nary_key("or", neg))
                     return node
@@ -432,6 +453,7 @@ class Planner:
             node.est_words = min(sum(ch.est_words for ch in children),
                                  self._n_words)
             node.est_rows = self._or_rows(children)
+        self._refine_nary(node, children, "and" if cls is PAnd else "or")
         node.ckey = _nary_key("and" if cls is PAnd else "or", children)
         if self._n_words:
             density = (sum(ch.est_words for ch in children)
@@ -449,6 +471,103 @@ class Planner:
             return -1
         return min(sum(rows), self.index.n_rows)
 
+    # -- sampled-overlap cardinality refinement -----------------------------
+    # The min/sum bounds above ignore correlation entirely: an AND of two
+    # half-selective bitmaps estimates n/2 whether they are identical or
+    # disjoint.  When count statistics are on, the estimate of an n-ary
+    # AND/OR is tightened by *measuring* the overlap of its two most
+    # selective bitmap leaves over a sampled prefix of their (memoized)
+    # ``set_intervals()`` views, scaled to the full table and clamped back
+    # inside the provable bounds.  Sampling stops after ~SAMPLE_INTERVALS
+    # intervals per leaf and skips partitions so literal-heavy that the
+    # interval expansion would dwarf the plan itself.
+    SAMPLE_INTERVALS = 64
+    SAMPLE_MAX_WORDS = 256
+
+    def _leaf_intervals(self, leaf: "PBitmap"):
+        """Sampled set-interval prefix of one leaf bitmap.
+
+        Returns ``(starts, ends, covered_bits)`` where the intervals are
+        complete over rows ``[0, covered_bits)``, or ``None`` when even the
+        first partition is too literal-heavy to expand cheaply."""
+        ci = self.index.columns[leaf.col]
+        ss: List[np.ndarray] = []
+        es: List[np.ndarray] = []
+        off = 0
+        n_iv = 0
+        for part in ci.bitmaps:
+            bm = part[leaf.bitmap_id]
+            if bm.size_words > self.SAMPLE_MAX_WORDS:
+                break
+            s, e = bm.set_intervals()
+            ss.append(s + off)
+            es.append(e + off)
+            off += bm.n_bits
+            n_iv += len(s)
+            if n_iv >= self.SAMPLE_INTERVALS:
+                break
+        if off == 0:
+            return None
+        empty = np.empty(0, np.int64)
+        return (np.concatenate(ss) if ss else empty,
+                np.concatenate(es) if es else empty, off)
+
+    def _refine_nary(self, node: PlanNode, children, kind: str) -> None:
+        if not (self.use_counts and self.optimize and self.index.n_rows):
+            return
+        leaves = [ch for ch in children
+                  if isinstance(ch, PBitmap) and ch.est_rows >= 0]
+        if len(leaves) < 2 or node.est_rows < 0:
+            return
+        a, b = sorted(leaves, key=lambda l: l.est_rows)[:2]
+        iva, ivb = self._leaf_intervals(a), self._leaf_intervals(b)
+        if iva is None or ivb is None:
+            return
+        x = min(iva[2], ivb[2])
+        if x <= 0:
+            return
+        sa, ea = _clip_intervals(iva[0], iva[1], x)
+        sb, eb = _clip_intervals(ivb[0], ivb[1], x)
+        ca = int((ea - sa).sum())
+        cb = int((eb - sb).sum())
+        ov = int(_coverage_at(sb, eb, ea).sum()
+                 - _coverage_at(sb, eb, sa).sum())
+        n = self.index.n_rows
+        others = [ch.est_rows for ch in children if ch is not a and ch is not b]
+        if any(r < 0 for r in others):
+            return
+        if kind == "and":
+            pair = round(ov * n / x)
+            lo = max(0, a.est_rows + b.est_rows - n)
+            pair = min(max(pair, lo), a.est_rows, b.est_rows)
+            est = min([pair] + others) if others else pair
+        else:
+            union = round((ca + cb - ov) * n / x)
+            union = min(max(union, a.est_rows, b.est_rows),
+                        a.est_rows + b.est_rows, n)
+            est = min(union + sum(others), n)
+        node.est_rows = int(est)
+        node.est_src = "sampled"
+
+
+def _clip_intervals(s: np.ndarray, e: np.ndarray, x: int):
+    """Clip sorted disjoint half-open intervals to ``[0, x)``."""
+    m = s < x
+    return s[m], np.minimum(e[m], x)
+
+
+def _coverage_at(fs: np.ndarray, fe: np.ndarray,
+                 xs: np.ndarray) -> np.ndarray:
+    """Covered length below each ``x`` of the sorted disjoint intervals
+    ``[fs, fe)`` (prefix-popcount function; one ``searchsorted`` pass)."""
+    if len(fs) == 0:
+        return np.zeros(len(xs), np.int64)
+    pref = np.concatenate(([0], np.cumsum(fe - fs)))
+    i = np.searchsorted(fs, xs, side="right") - 1
+    i0 = np.maximum(i, 0)
+    inside = np.clip(xs - fs[i0], 0, fe[i0] - fs[i0])
+    return np.where(i >= 0, pref[i0] + inside, 0)
+
 
 def plan(index: BitmapIndex, e: Expr, optimize: bool = True) -> PlanNode:
     """Plan an expression against an index; ``optimize=False`` keeps the
@@ -464,6 +583,14 @@ def _est(node: PlanNode) -> str:
     return f"~{node.est_words}w{rows}"
 
 
+def _src(node: PlanNode) -> str:
+    """Estimate-source marker for composite nodes: where ``est_rows`` came
+    from — interval-sampled overlap or the plain min/sum bound."""
+    if node.est_rows < 0:
+        return ""
+    return f" [est:{node.est_src}]"
+
+
 def explain(node: PlanNode, depth: int = 0) -> str:
     """Human-readable plan tree with size + cardinality estimates."""
     pad = "  " * depth
@@ -471,10 +598,12 @@ def explain(node: PlanNode, depth: int = 0) -> str:
         return f"{pad}bitmap c{node.col}:b{node.bitmap_id} {_est(node)}"
     if isinstance(node, PConst):
         return f"{pad}{'ALL' if node.value else 'NONE'}"
+    if isinstance(node, PPinned):
+        return f"{pad}pinned bitmap ({node.bitmap!r})"
     if isinstance(node, PNot):
         return f"{pad}NOT {_est(node)}\n" + explain(node.child, depth + 1)
     if isinstance(node, PDiff):
-        lines = [f"{pad}ANDNOT {_est(node)}"]
+        lines = [f"{pad}ANDNOT {_est(node)}{_src(node)}"]
         lines += [explain(ch, depth + 1) for ch in node.pos]
         lines += [f"{pad}  minus:"]
         lines += [explain(ch, depth + 2) for ch in node.neg]
@@ -490,6 +619,6 @@ def explain(node: PlanNode, depth: int = 0) -> str:
         return "\n".join(lines)
     name = "AND" if isinstance(node, PAnd) else "OR"
     path = " [kernel]" if node.kernel_hint else ""
-    lines = [f"{pad}{name} {_est(node)}{path}"]
+    lines = [f"{pad}{name} {_est(node)}{_src(node)}{path}"]
     lines += [explain(ch, depth + 1) for ch in node.children]
     return "\n".join(lines)

@@ -38,8 +38,8 @@ import numpy as np
 
 from .ewah import EWAH
 from .expr import Expr, canonical_key
-from .index import (BitmapIndex, IndexBuilder, WORD_ROWS, concat_bitmaps,
-                    validate_partition_rows)
+from .index import (BitmapIndex, ColumnIndex, IndexBuilder, WORD_ROWS,
+                    concat_bitmaps, validate_partition_rows)
 from .lru import LRUCache, payload_nbytes
 
 # per-shard result-cache defaults (entries + byte budget per shard)
@@ -230,6 +230,60 @@ class ShardedIndex:
     def equality_rows(self, col: int, value_rank: int) -> np.ndarray:
         return self.equality_bitmap(col, value_rank).set_bits()
 
+    # -- reshaping ----------------------------------------------------------
+    def reshard(self, n_shards: int) -> "ShardedIndex":
+        """Re-cut into ``n_shards`` word-aligned row shards straight from
+        the compressed bitmaps — no retained fact table, no decompression.
+
+        Every bitmap of every new shard is assembled by slicing the source
+        partitions' EWAH streams at 32-bit word boundaries
+        (``EWAH.slice_bits``): new shard bounds are word multiples and
+        source partition starts are word-aligned by construction, so each
+        overlap of a new shard with a source partition becomes one
+        partition of the new shard, cut run-for-run in the compressed
+        domain.  Works on memmap-opened stores too (slices copy out of the
+        mapped words); encoders are shared, so the result answers queries
+        bit-identically to ``self``.
+        """
+        n_shards = int(n_shards)
+        if n_shards <= 0:
+            raise ValueError(f"n_shards must be positive, got {n_shards}")
+        n = self.n_rows
+        per = -(-max(n, 1) // n_shards)
+        shard_rows = max(-(-per // WORD_ROWS) * WORD_ROWS, WORD_ROWS)
+        # global (start, end, shard, partition) of every source partition
+        spans = []
+        for si, sh in enumerate(self.shards):
+            off = int(self.offsets[si])
+            b = sh.partition_bounds
+            for p in range(sh.n_partitions):
+                spans.append((off + int(b[p]), off + int(b[p + 1]), si, p))
+        encoders = [c.encoder for c in self.shards[0].columns]
+        new_shards: List[BitmapIndex] = []
+        for s in range(0, max(n, 1), shard_rows):
+            e = min(s + shard_rows, n) if n else 0
+            overlaps = [(max(s, gs), min(e, ge), si, p)
+                        for gs, ge, si, p in spans
+                        if gs < e and ge > s]
+            bounds = [0]
+            cols = [ColumnIndex(encoder=enc, bitmaps=[]) for enc in encoders]
+            for lo, hi, si, p in overlaps:
+                src = self.shards[si]
+                gs = int(self.offsets[si]) \
+                    + int(src.partition_bounds[p])
+                for c, ci in enumerate(cols):
+                    ci.bitmaps.append(
+                        [bm.slice_bits(lo - gs, hi - gs)
+                         for bm in src.columns[c].bitmaps[p]])
+                bounds.append(bounds[-1] + (hi - lo))
+            new_shards.append(BitmapIndex(
+                n_rows=e - s, columns=cols,
+                partition_bounds=np.asarray(bounds, dtype=np.int64),
+                column_names=self.column_names))
+        return ShardedIndex(new_shards, column_names=self.column_names,
+                            cache_entries=self._cache_entries,
+                            cache_bytes=self._cache_bytes)
+
     def replace_shard(self, i: int, shard: BitmapIndex) -> None:
         """Swap in a rebuilt shard; only *its* result-cache slice drops.
 
@@ -309,6 +363,21 @@ class ShardedIndex:
         ``canonical_key`` — a repeat (or commutatively reordered) query only
         re-executes shards whose cache was invalidated.
         """
+        return concat_bitmaps(self.execute_per_shard(
+            e, backend=backend, optimize=optimize, caches=caches, pool=pool))
+
+    def execute_per_shard(self, e, backend: str = "auto",
+                          optimize: bool = True,
+                          caches: Optional[List[Dict]] = None,
+                          pool=None) -> List[EWAH]:
+        """Per-shard EWAH results of one expression, in shard order.
+
+        The fan-out behind ``execute``, exposed separately for callers that
+        need the un-concatenated slices — the live-ingest layer pairs each
+        shard's result with that shard's tombstone before merging, so the
+        shard-local LRU entries (keyed by the expression alone) stay valid
+        across tombstone changes.
+        """
         from .executor import Executor  # local: executor also dispatches here
         from .planner import plan
         key = (("expr", backend, bool(optimize), canonical_key(e))
@@ -319,9 +388,8 @@ class ShardedIndex:
             cache = caches[i] if caches is not None else None
             return Executor(sh, backend=backend, cache=cache).run(node)
 
-        parts = self._fan_out(key, run_shard, ("expr", e), pool,
-                              backend, optimize)
-        return concat_bitmaps(parts)
+        return self._fan_out(key, run_shard, ("expr", e), pool,
+                             backend, optimize)
 
     def count(self, e=None, backend: str = "auto", optimize: bool = True,
               caches: Optional[List[Dict]] = None, pool=None) -> int:

@@ -230,6 +230,10 @@ class SortStats:
     spilled_bytes: int = 0
     peak_buffer_bytes: int = 0
     merge_block_rows: int = 0
+    # hierarchical-merge passes that reduced the run count before the final
+    # merge (0 = every initial run merged in one pass); ``n_runs`` always
+    # reports the *initial* run count
+    merge_passes: int = 0
     run_files: List[str] = field(default_factory=list)
 
     def bump(self, n_bytes: int) -> None:
@@ -331,13 +335,18 @@ class _TupleSpillCursor(_SpillCursor):
 
 
 def _merge_spilled(cursors: List[_SpillCursor],
-                   stats: Optional[SortStats] = None) -> Iterator[np.ndarray]:
+                   stats: Optional[SortStats] = None,
+                   with_keys: bool = False) -> Iterator[np.ndarray]:
     """K-way merge over spilled runs, yielding permutation blocks.
 
     Same galloping strategy (and exact tie order) as ``_merge_runs_packed``:
     take from the smallest head the whole prefix that may precede every
     other head, but never more than one cursor window at a time is resident
     per run and each yielded block copies at most ``block`` rows.
+
+    ``with_keys`` yields ``(key_block, perm_block)`` pairs instead — the
+    producer side of a hierarchical merge pass, which must spill the merged
+    keys back to disk for the next pass to merge on.
     """
     heap = [(c.head(), r) for r, c in enumerate(cursors) if c.n]
     heapq.heapify(heap)
@@ -358,16 +367,96 @@ def _merge_spilled(cursors: List[_SpillCursor],
             if stats is not None:
                 stats.bump(sum(x._wkeys.nbytes for x in cursors)
                            + block.nbytes)
-            yield block
+            if with_keys:
+                yield np.array(c.keys[pos:pos + take], copy=True), block
+            else:
+                yield block
             pos += take
         c.pos = end
         if end < c.n:
             heapq.heappush(heap, (c.head(), r))
 
 
+# runaway-run backstop: with ``merge_fan_in=None`` a hierarchical merge
+# still kicks in automatically once this many runs exist, where the
+# flat merge's n_runs * merge_block_rows key windows dwarf the chunk budget
+_AUTO_MULTIPASS_RUNS = 512
+
+
+def _resolve_fan_in(merge_fan_in, chunk_rows: int, merge_block_rows: int,
+                    n_runs: int) -> Optional[int]:
+    """Concrete per-pass fan-in, or ``None`` for the flat single-pass merge.
+
+    ``None`` keeps the classic flat merge unless the run count passes the
+    ``_AUTO_MULTIPASS_RUNS`` backstop; ``"auto"`` sizes the fan-in so one
+    pass's merge windows fit the chunk budget
+    (``chunk_rows // merge_block_rows``); an integer pins it directly.
+    """
+    if merge_fan_in is None:
+        if n_runs <= _AUTO_MULTIPASS_RUNS:
+            return None
+        merge_fan_in = "auto"
+    if merge_fan_in == "auto":
+        return max(2, chunk_rows // max(merge_block_rows, 1))
+    fan = int(merge_fan_in)
+    if fan < 2:
+        raise ValueError(f"merge_fan_in must be >= 2, got {merge_fan_in}")
+    return fan
+
+
+def _reduce_runs(cursors: List[_SpillCursor], spill_dir: str, fan_in: int,
+                 stats: SortStats) -> List[_SpillCursor]:
+    """Hierarchically merge on-disk runs until at most ``fan_in`` remain.
+
+    Each pass merges consecutive groups of ``fan_in`` runs into one new
+    on-disk run (keys + permutation, streamed block by block), so no step
+    ever holds more than ``fan_in`` merge windows — the multi-pass external
+    merge of the classic tape-sort, triggered when
+    ``n_runs * merge_block_rows`` key windows would blow the chunk budget.
+    Groups stay consecutive and ties break by run id, so the final
+    permutation is bit-identical to the flat single-pass merge (and hence
+    to ``np.lexsort``).
+    """
+    pass_id = 0
+    while len(cursors) > fan_in:
+        pass_id += 1
+        stats.merge_passes = pass_id
+        nxt: List[_SpillCursor] = []
+        for g0 in range(0, len(cursors), fan_in):
+            group = cursors[g0:g0 + fan_in]
+            if len(group) == 1:
+                nxt.append(group[0])
+                continue
+            stem = os.path.join(spill_dir,
+                                f"pass{pass_id:02d}-run-{len(nxt):05d}")
+            kpath, ppath = stem + ".keys", stem + ".perm"
+            n_rows = sum(c.n for c in group)
+            with open(kpath, "wb") as kf, open(ppath, "wb") as pf:
+                for kblock, pblock in _merge_spilled(group, stats,
+                                                     with_keys=True):
+                    kblock.tofile(kf)
+                    pblock.tofile(pf)
+            stats.run_files += [kpath, ppath]
+            block = group[0].block
+            perm_mm = np.memmap(ppath, dtype=np.int64, mode="r",
+                                shape=(n_rows,))
+            if isinstance(group[0], _TupleSpillCursor):
+                d_key = group[0].keys.shape[1]
+                keys_mm = np.memmap(kpath, dtype=np.int64, mode="r",
+                                    shape=(n_rows, d_key))
+                nxt.append(_TupleSpillCursor(keys_mm, perm_mm, block))
+            else:
+                keys_mm = np.memmap(kpath, dtype=np.uint64, mode="r",
+                                    shape=(n_rows,))
+                nxt.append(_SpillCursor(keys_mm, perm_mm, block))
+            stats.spilled_bytes += keys_mm.nbytes + perm_mm.nbytes
+        cursors = nxt
+    return cursors
+
+
 def _spill_runs(table: np.ndarray, chunk_rows: int, order: Sequence[int],
                 spill_dir: str, merge_block_rows: Optional[int],
-                stats: SortStats) -> List[_SpillCursor]:
+                stats: SortStats, merge_fan_in=None) -> List[_SpillCursor]:
     """Chunk-sort ``table`` into on-disk runs; return merge cursors.
 
     Each run is two flat files in ``spill_dir`` — ``run-NNNNN.keys`` and
@@ -419,6 +508,10 @@ def _spill_runs(table: np.ndarray, chunk_rows: int, order: Sequence[int],
             cursors.append(_TupleSpillCursor(keys_mm, perm_mm,
                                              merge_block_rows))
     stats.n_runs = len(cursors)
+    fan_in = _resolve_fan_in(merge_fan_in, chunk_rows,
+                             stats.merge_block_rows, len(cursors))
+    if fan_in is not None and len(cursors) > fan_in:
+        cursors = _reduce_runs(cursors, spill_dir, fan_in, stats)
     return cursors
 
 
@@ -426,6 +519,7 @@ def external_merge_sort_perm(table: np.ndarray, chunk_rows: int,
                              col_order: Optional[Sequence[int]] = None,
                              spill_dir: Optional[str] = None,
                              merge_block_rows: Optional[int] = None,
+                             merge_fan_in=None,
                              stats: Optional[SortStats] = None) -> np.ndarray:
     """Row permutation of an external-merge lexicographic sort.
 
@@ -437,6 +531,12 @@ def external_merge_sort_perm(table: np.ndarray, chunk_rows: int,
     windows, so peak buffering is bounded by the chunk/window budget (the
     returned permutation itself is still O(n); use
     ``external_sorted_chunks`` to stream without materializing it).
+
+    ``merge_fan_in`` bounds how many runs any single merge touches:
+    ``"auto"`` derives it from the chunk budget, an integer pins it, and
+    ``None`` (default) merges flat unless the run count passes the
+    ``_AUTO_MULTIPASS_RUNS`` backstop — beyond the bound, hierarchical
+    passes reduce the runs on disk first (``SortStats.merge_passes``).
     """
     table = np.asarray(table)
     n, d = table.shape
@@ -459,7 +559,7 @@ def external_merge_sort_perm(table: np.ndarray, chunk_rows: int,
         stats.n_runs = 1 if n else 0
         return lex_sort(table, order)
     cursors = _spill_runs(table, chunk_rows, order, spill_dir,
-                          merge_block_rows, stats)
+                          merge_block_rows, stats, merge_fan_in)
     out = np.empty(n, dtype=np.int64)
     w = 0
     for block in _merge_spilled(cursors, stats):
@@ -474,6 +574,7 @@ def external_sorted_chunks(table: np.ndarray, chunk_rows: int,
                            out_rows: Optional[int] = None,
                            spill_dir: Optional[str] = None,
                            merge_block_rows: Optional[int] = None,
+                           merge_fan_in=None,
                            stats: Optional[SortStats] = None) -> Iterator[np.ndarray]:
     """Yield the externally merge-sorted table in chunks of ``out_rows`` rows.
 
@@ -493,6 +594,7 @@ def external_sorted_chunks(table: np.ndarray, chunk_rows: int,
         perm = external_merge_sort_perm(table, chunk_rows, col_order,
                                         spill_dir=spill_dir,
                                         merge_block_rows=merge_block_rows,
+                                        merge_fan_in=merge_fan_in,
                                         stats=stats)
         for s in range(0, len(perm), step):
             yield table_arr[perm[s:s + step]]
@@ -502,7 +604,7 @@ def external_sorted_chunks(table: np.ndarray, chunk_rows: int,
     d = table_arr.shape[1]
     order = list(range(d)) if col_order is None else list(col_order)
     cursors = _spill_runs(table_arr, chunk_rows, order, spill_dir,
-                          merge_block_rows, stats)
+                          merge_block_rows, stats, merge_fan_in)
     pending: List[np.ndarray] = []
     pending_rows = 0
     for block in _merge_spilled(cursors, stats):

@@ -330,21 +330,30 @@ def _write_manifest(dir_path: str, shard_files: List[str],
     _fsync_dir(dir_path)
 
 
-def save_sharded(index, dir_path: str, meta: Optional[Dict] = None) -> str:
+def save_sharded(index, dir_path: str, meta: Optional[Dict] = None,
+                 prefix: str = "") -> str:
     """Write a ``ShardedIndex`` (or a 1-shard ``BitmapIndex``) as a
     directory of atomic per-shard store files plus a manifest.
 
     ``meta`` (JSON-serializable) is carried verbatim in the manifest —
     the ``Dataset`` façade records its build recipe (sort order, cards,
-    encoding) there so ``Dataset.open`` can restore it."""
+    encoding) there so ``Dataset.open`` can restore it.
+
+    ``prefix`` is prepended to every shard filename.  The manifest records
+    the actual names, so loaders need no convention — live-ingest
+    compaction writes each new epoch's shards under an epoch prefix, and
+    the manifest rewrite at the end is the atomic cutover between the old
+    and new file sets (a crash in between leaves the old manifest naming
+    the old, untouched files)."""
     from .shard import ShardedIndex  # local: shard imports store lazily too
     os.makedirs(dir_path, exist_ok=True)
     shards = index.shards if isinstance(index, ShardedIndex) else [index]
     names = index.column_names
     files = []
     for i, sh in enumerate(shards):
-        save(sh, shard_path(dir_path, i))
-        files.append(SHARD_FILE_FMT.format(i))
+        fname = f"{prefix}{SHARD_FILE_FMT.format(i)}"
+        save(sh, os.path.join(dir_path, fname))
+        files.append(fname)
     _write_manifest(dir_path, files, names, meta)
     return dir_path
 
@@ -362,11 +371,16 @@ def write_shard_file(dir_path: str, i: int, shard: BitmapIndex) -> str:
     mmap keep serving the old inode; ``ShardedIndex.load`` / ``reload``
     picks up the new file whole or not at all.
     """
-    path = shard_path(dir_path, i)
     if not os.path.exists(os.path.join(dir_path, MANIFEST_NAME)):
         raise StoreError(f"{dir_path} has no {MANIFEST_NAME}; save the "
                          f"sharded index first")
-    return save(shard, path)
+    names = _read_manifest(dir_path)["shards"]
+    if not (0 <= i < len(names)):
+        raise StoreError(f"{dir_path}: shard {i} out of range "
+                         f"(manifest names {len(names)} shards)")
+    # resolve through the manifest, not the naming convention: compacted
+    # directories carry epoch-prefixed shard filenames
+    return save(shard, os.path.join(dir_path, names[i]))
 
 
 def _read_manifest(dir_path: str) -> Dict:

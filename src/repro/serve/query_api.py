@@ -31,14 +31,27 @@ Production-shaped serving on a dependency-free stack (stdlib ``http.server``
   indexes merge per-shard partial counts at the coordinator, never a global
   result bitmap) and are cached like row queries, keyed by the statement
   kind plus the filter's canonical key.
+* **Live ingest** — ``/ingest`` and ``/delete`` mutate the served dataset
+  through the WAL-backed LSM layer (``repro.core.ingest.LiveIndex``):
+  appends land in an in-memory delta index, deletes in compressed per-shard
+  tombstones, every mutation durably framed in a write-ahead log *first* so
+  a crashed service replays to its exact pre-crash state on warm start.
+  Queries keep evaluating in the compressed domain across the
+  ``(base ⊔ delta) AND NOT tombstones`` merge; a background ``Compactor``
+  (``--live``) folds the delta into freshly sorted shard files and
+  truncates the WAL, with the manifest rewrite as the atomic cutover.
 * ``serve()`` — a threaded HTTP server exposing the service:
     POST /query             {"query": <expr>}          -> one row result
     POST /query             {"queries": [<expr>, ...]} -> batched results
     POST /query             {"select": <sel>, "where": <expr>?} -> aggregate
+    POST /ingest            {"rows": [[...], ...]}     -> durable append
+    POST /delete            {"where": <expr>}          -> durable delete
+    POST /admin/compact                                -> compact now
     POST /admin/invalidate                             -> drop the result cache
     POST /admin/reload                                 -> reopen changed shards
     GET  /healthz                                      -> liveness
     GET  /stats                                        -> index + cache stats
+                                                          (+ live/compaction)
 
 Wire format for expressions (mirrors the AST):
     {"op": "eq", "col": 0, "value": 3}
@@ -74,7 +87,7 @@ import numpy as np
 from repro.core import BitmapIndex, ShardedIndex, lex_sort, synth
 from repro.core import store as index_store
 from repro.core.dataset import top_k_from_counts
-from repro.core.expr import And, Eq, Expr, In, Not, Or, Range, canonical_key
+from repro.core.expr import Expr, canonical_key, from_wire, to_wire
 from repro.core.executor import (execute, execute_count,
                                  execute_group_count)
 from repro.core.lru import LRUCache, payload_nbytes
@@ -84,50 +97,16 @@ DEFAULT_CACHE_BYTES = 64 << 20  # total EWAH payload budget for the result LRU
 
 
 def parse_expr(obj: Dict) -> Expr:
-    """JSON wire format -> Expr tree (raises ValueError on malformed input)."""
-    if not isinstance(obj, dict) or "op" not in obj:
-        raise ValueError(f"expression must be an object with 'op': {obj!r}")
-    op = obj["op"]
-    if op == "eq":
-        return Eq(obj["col"], int(obj["value"]))
-    if op == "in":
-        return In(obj["col"], tuple(int(v) for v in obj["values"]))
-    if op == "range":
-        lo, hi = obj.get("lo"), obj.get("hi")
-        if lo is None and hi is None:
-            raise ValueError("range needs at least one of lo/hi")
-        return Range(obj["col"], None if lo is None else int(lo),
-                     None if hi is None else int(hi))
-    if op in ("and", "or"):
-        args = [parse_expr(a) for a in obj["args"]]
-        if not args:
-            raise ValueError(f"{op} needs at least one argument")
-        return And(tuple(args)) if op == "and" else Or(tuple(args))
-    if op == "not":
-        return Not(parse_expr(obj["arg"]))
-    raise ValueError(f"unknown op {op!r}")
+    """JSON wire format -> Expr tree (raises ValueError on malformed input).
+
+    Alias of ``repro.core.expr.from_wire`` — one wire codec shared by the
+    HTTP layer and the write-ahead log's delete frames."""
+    return from_wire(obj)
 
 
 def expr_to_json(e: Expr) -> Dict:
-    """Inverse of ``parse_expr`` (for clients and round-trip tests)."""
-    if isinstance(e, Eq):
-        return {"op": "eq", "col": e.col, "value": e.value}
-    if isinstance(e, In):
-        return {"op": "in", "col": e.col, "values": list(e.values)}
-    if isinstance(e, Range):
-        out = {"op": "range", "col": e.col}
-        if e.lo is not None:
-            out["lo"] = e.lo
-        if e.hi is not None:
-            out["hi"] = e.hi
-        return out
-    if isinstance(e, And):
-        return {"op": "and", "args": [expr_to_json(c) for c in e.operands]}
-    if isinstance(e, Or):
-        return {"op": "or", "args": [expr_to_json(c) for c in e.operands]}
-    if isinstance(e, Not):
-        return {"op": "not", "arg": expr_to_json(e.operand)}
-    raise TypeError(f"cannot serialize {e!r}")
+    """Inverse of ``parse_expr`` (alias of ``repro.core.expr.to_wire``)."""
+    return to_wire(e)
 
 
 def parse_statement(obj: Dict):
@@ -215,19 +194,35 @@ class QueryService:
         # a parent jax runtime is not fork-safe).
         self.shard_processes = int(shard_processes)
         self._shard_pool = self._make_shard_pool()
+        # live-ingest bookkeeping: the mutable layer is attached lazily on
+        # the first mutation (or eagerly via enable_live/from_dir); the
+        # service closes the WAL only if it created the layer itself
+        self._live_owned = False
+        self._compactor = None
 
     @classmethod
     def from_dir(cls, index_dir: str, mmap: bool = True,
-                 **kwargs) -> "QueryService":
+                 live: Optional[bool] = None, **kwargs) -> "QueryService":
         """Warm start: open a saved sharded store directory and serve it.
 
         With ``mmap`` (default) open time is metadata-only — bitmap words
-        stay on disk until queries touch them."""
+        stay on disk until queries touch them.  ``live=True`` attaches the
+        WAL-backed mutable layer immediately; the default (``None``)
+        attaches it when the store's write-ahead log exists on disk —
+        replaying any mutations a crashed service never compacted."""
         # fingerprints BEFORE the load: a file replaced mid-open reads as
         # changed on the next /admin/reload instead of invisibly current
         prints = index_store.shard_fingerprints(index_dir)
         index = ShardedIndex.load(index_dir, mmap=mmap)
-        return cls(index, index_dir=index_dir, fingerprints=prints, **kwargs)
+        svc = cls(index, index_dir=index_dir, fingerprints=prints, **kwargs)
+        if live is None:
+            meta = index_store.manifest_meta(index_dir)
+            wal_name = meta.get("wal") \
+                or f"wal-{int(meta.get('epoch', 0)):05d}.log"
+            live = os.path.exists(os.path.join(index_dir, wal_name))
+        if live:
+            svc.enable_live()
+        return svc
 
     def _make_shard_pool(self):
         if self.shard_processes > 0 and isinstance(self.index, ShardedIndex):
@@ -292,6 +287,14 @@ class QueryService:
         """
         if not self.index_dir:
             raise ValueError("service was not opened from an index dir")
+        from repro.core.ingest import LiveIndex
+        if isinstance(self.index, LiveIndex):
+            # the live layer IS the source of truth here (it persisted the
+            # store itself at its last compaction) — just resync the prints
+            self._fingerprints = index_store.shard_fingerprints(
+                self.index_dir)
+            return {"reloaded": [], "full": False, "live": True,
+                    "n_shards": self.index.n_shards}
         new_prints = index_store.shard_fingerprints(self.index_dir)
         old_prints = self._fingerprints or []
         if (not isinstance(self.index, ShardedIndex)
@@ -317,8 +320,72 @@ class QueryService:
         self.cache.clear()
 
     def close(self) -> None:
+        if self._compactor is not None:
+            self._compactor.stop()
+            self._compactor = None
+        if self._live_owned:
+            self.index.close()  # flush + close the WAL we opened
         self._pool.shutdown(wait=False)
         self._shard_pool.shutdown(wait=False)
+
+    # -- live ingest ---------------------------------------------------------
+    def enable_live(self):
+        """Wrap the served index in the WAL-backed mutable layer
+        (``repro.core.ingest.LiveIndex``) so ``/ingest`` and ``/delete``
+        can mutate it.  Store-backed services get a durable WAL in the
+        store directory (replayed here if one already exists); purely
+        in-memory services get an in-memory delta with no log."""
+        from repro.core.ingest import LiveIndex
+        if isinstance(self.index, LiveIndex):
+            return self.index
+        self.set_index(LiveIndex(self.index, dir_path=self.index_dir))
+        self._live_owned = True
+        return self.index
+
+    def ingest(self, rows) -> Dict:
+        """Durably append rows; queries see them immediately (base ⊔ delta)."""
+        if rows is None:
+            raise ValueError('ingest needs {"rows": [[...], ...]}')
+        live = self.enable_live()
+        appended = live.append(np.asarray(rows))
+        return {"ok": True, "appended": appended, "n_rows": live.n_rows,
+                "delta_rows": live.delta.n_rows}
+
+    def delete(self, where) -> Dict:
+        """Durably delete rows matching ``where`` (compressed tombstones)."""
+        if where is None:
+            raise ValueError('delete needs {"where": <expr>}')
+        live = self.enable_live()
+        e = parse_expr(where) if isinstance(where, dict) else where
+        removed = live.delete(e)
+        return {"ok": True, "removed": removed, "n_rows": live.n_rows,
+                "tombstone_rows": live.tombstone_rows}
+
+    def compact(self) -> Dict:
+        """Fold pending mutations into a freshly sorted base now."""
+        live = self.enable_live()
+        info = live.compact()
+        self._after_compact(info)
+        return {"ok": True, **info}
+
+    def _after_compact(self, info=None) -> None:
+        # compaction rewrote the store (new epoch-prefixed shard files +
+        # manifest): refresh the fingerprints so /admin/reload compares
+        # against what the live layer just persisted
+        if self.index_dir:
+            self._fingerprints = index_store.shard_fingerprints(
+                self.index_dir)
+
+    def start_compactor(self, interval: float = 30.0,
+                        min_pending_rows: int = 1):
+        """Start the background compaction thread (idempotent)."""
+        from repro.core.ingest import Compactor
+        live = self.enable_live()
+        if self._compactor is None:
+            self._compactor = Compactor(
+                live, interval=interval, min_pending_rows=min_pending_rows,
+                on_compact=self._after_compact).start()
+        return self._compactor
 
     # -- execution ---------------------------------------------------------
     def _snapshot(self):
@@ -330,11 +397,15 @@ class QueryService:
     def _execute_cached(self, e: Expr, op_cache: Optional[Dict],
                         snapshot=None):
         gen, idx = snapshot if snapshot is not None else self._snapshot()
-        key = (gen, self.backend, canonical_key(e))
+        # a live index's own mutation generation joins the key (read before
+        # executing, like ``gen``): every append/delete/compaction retires
+        # all cached results without a cache clear
+        key = (gen, getattr(idx, "generation", None), self.backend,
+               canonical_key(e))
         bm = self.cache.get(key)
         if bm is not None:
             return bm, True
-        pool = self._shard_pool if isinstance(idx, ShardedIndex) else None
+        pool = None if isinstance(idx, BitmapIndex) else self._shard_pool
         bm = execute(idx, e, backend=self.backend, cache=op_cache, pool=pool)
         self.cache.put(key, bm)
         return bm, False
@@ -358,7 +429,10 @@ class QueryService:
         return out
 
     def explain(self, e: Expr) -> str:
+        from repro.core.ingest import LiveIndex
         idx = self.index
+        if isinstance(idx, LiveIndex):
+            idx = idx.base  # the delta layer plans the same tree
         if isinstance(idx, ShardedIndex):
             head = f"per-shard plans x{idx.n_shards}; shard 0:\n"
             return head + explain(plan(idx.shards[0], e))
@@ -393,12 +467,12 @@ class QueryService:
         ``set_index`` cache another column's counts under a live key."""
         gen, idx = self._snapshot()
         c = idx.resolve_column(col) if col is not None else None
-        key = (gen, self.backend, kind, c,
+        key = (gen, getattr(idx, "generation", None), self.backend, kind, c,
                canonical_key(e) if e is not None else None)
         val = self.cache.get(key)
         if val is not None:
             return val, True
-        pool = self._shard_pool if isinstance(idx, ShardedIndex) else None
+        pool = None if isinstance(idx, BitmapIndex) else self._shard_pool
         val = compute(idx, pool, c)
         self.cache.put(key, val)
         return val, False
@@ -447,9 +521,10 @@ class QueryService:
         return self._pool.submit(self._top_k_one, col, k, e).result()
 
     def stats(self) -> Dict:
+        from repro.core.ingest import LiveIndex
         idx = self.index
-        n_cols = (idx.n_columns if isinstance(idx, ShardedIndex)
-                  else len(idx.columns))
+        n_cols = (len(idx.columns) if isinstance(idx, BitmapIndex)
+                  else idx.n_columns)
         out = {
             "n_rows": idx.n_rows,
             "n_columns": n_cols,
@@ -461,10 +536,16 @@ class QueryService:
             "pool_workers": self.pool_workers,
             "cache": self.cache.stats(),
         }
-        if isinstance(idx, ShardedIndex):
-            out["n_shards"] = idx.n_shards
-            out["shard_rows"] = np.diff(idx.offsets).tolist()
-            out["shard_caches"] = idx.cache_stats()
+        sharded = idx
+        if isinstance(idx, LiveIndex):
+            out["live"] = idx.stats()
+            if self._compactor is not None:
+                out["compactor"] = self._compactor.stats()
+            sharded = idx.base
+        if isinstance(sharded, ShardedIndex):
+            out["n_shards"] = sharded.n_shards
+            out["shard_rows"] = np.diff(sharded.offsets).tolist()
+            out["shard_caches"] = sharded.cache_stats()
         return out
 
 
@@ -487,6 +568,10 @@ class _Handler(BaseHTTPRequestHandler):
         else:
             self._send(404, {"error": f"unknown path {self.path}"})
 
+    def _body(self) -> Dict:
+        n = int(self.headers.get("Content-Length", 0))
+        return json.loads(self.rfile.read(n) or b"{}")
+
     def do_POST(self):
         if self.path == "/admin/invalidate":
             self.service.invalidate_cache()
@@ -500,6 +585,19 @@ class _Handler(BaseHTTPRequestHandler):
                 return
             out["ok"] = True
             self._send(200, out)
+            return
+        if self.path in ("/ingest", "/delete", "/admin/compact"):
+            try:
+                if self.path == "/ingest":
+                    out = self.service.ingest(self._body().get("rows"))
+                elif self.path == "/delete":
+                    out = self.service.delete(self._body().get("where"))
+                else:
+                    out = self.service.compact()
+                self._send(200, out)
+            except (ValueError, KeyError, TypeError) as exc:
+                msg = exc.args[0] if exc.args else str(exc)
+                self._send(400, {"error": str(msg)})
             return
         if self.path != "/query":
             self._send(404, {"error": f"unknown path {self.path}"})
@@ -581,6 +679,13 @@ def main(argv=None):
     ap.add_argument("--save-index", default=None, metavar="DIR",
                     help="build the demo index, persist it to DIR, then "
                          "serve from the saved (mmap'd) files")
+    ap.add_argument("--live", action="store_true",
+                    help="enable /ingest + /delete (WAL-backed mutable "
+                         "layer) and start the background compactor")
+    ap.add_argument("--compact-interval", type=float, default=30.0,
+                    help="background compaction check period in seconds")
+    ap.add_argument("--compact-rows", type=int, default=10_000,
+                    help="pending mutation rows that trigger a compaction")
     args = ap.parse_args(argv)
     kw = dict(backend=args.backend, pool_workers=args.workers,
               cache_entries=args.cache,
@@ -603,6 +708,10 @@ def main(argv=None):
         else:
             service = QueryService(index, **kw)
             origin = f"built {args.rows} rows in memory"
+    if args.live:
+        service.enable_live()
+        service.start_compactor(interval=args.compact_interval,
+                                min_pending_rows=args.compact_rows)
     idx = service.index
     srv = make_server(service, args.host, args.port)
     print(f"[query_api] {origin}; serving {idx.n_rows} rows on "

@@ -136,8 +136,14 @@ def test_spilled_build_matches_in_memory(tables, tmp_path):
     assert q_mem.count() == q_spl.count()
     assert np.array_equal(q_mem.group_by("user").count(),
                           q_spl.group_by("user").count())
-    with pytest.raises(RuntimeError):
-        spl.shard(2)
+    # no retained rows, yet shard() still works: the compressed index is
+    # re-cut at 32-bit word boundaries (ShardedIndex.reshard), no rebuild
+    recut = spl.shard(2)
+    assert recut.n_shards == 2 and recut.table is None
+    assert recut.n_rows == spl.n_rows
+    assert recut.query().where(col(0) == v).count() == q_spl.count()
+    assert np.array_equal(recut.query().group_by("user").count(),
+                          spl.query().group_by("user").count())
 
 
 def test_from_chunks(tables, tmp_path):

@@ -360,6 +360,38 @@ def test_spill_handles_unpackable_keys(tmp_path):
     assert np.array_equal(np.concatenate(got), table[lex_sort(table)])
 
 
+def test_spill_multipass_merge_matches_flat(tmp_path):
+    table, _ = make_table(9_000, seed=3)
+    rng = np.random.default_rng(7)
+    shuffled = table[rng.permutation(len(table))]
+    flat = external_merge_sort_perm(shuffled, 1024,
+                                    spill_dir=str(tmp_path / "flat"))
+    stats = SortStats()
+    multi = external_merge_sort_perm(shuffled, 1024,
+                                     spill_dir=str(tmp_path / "multi"),
+                                     merge_fan_in=2, stats=stats)
+    # reduction passes change the file plan, never the permutation
+    assert np.array_equal(multi, flat)
+    assert stats.merge_passes >= 2              # 9 runs at fan-in 2
+    assert stats.n_runs == -(-len(table) // 1024)  # reports INITIAL runs
+    # the streaming-chunks front end honours the fan-in too
+    got = np.concatenate(list(external_sorted_chunks(
+        shuffled, 1000, out_rows=1500, spill_dir=str(tmp_path / "c"),
+        merge_fan_in=3)))
+    assert np.array_equal(got, shuffled[flat])
+
+
+def test_merge_fan_in_resolution():
+    from repro.core.sorting import _AUTO_MULTIPASS_RUNS, _resolve_fan_in
+    # default: flat single-pass merge below the runaway backstop
+    assert _resolve_fan_in(None, 1024, 128, 9) is None
+    assert _resolve_fan_in(None, 1024, 128, _AUTO_MULTIPASS_RUNS + 1) == 8
+    assert _resolve_fan_in("auto", 1024, 128, 9) == 8
+    assert _resolve_fan_in(4, 1024, 128, 9) == 4
+    with pytest.raises(ValueError):
+        _resolve_fan_in(1, 1024, 128, 9)
+
+
 def test_spill_small_table_no_spill(tmp_path):
     # n <= chunk_rows: sorts in memory, no run files written
     table = np.random.default_rng(0).integers(0, 5, size=(50, 2))

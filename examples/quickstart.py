@@ -5,6 +5,9 @@ The lifecycle this walks through:
 
     Dataset.from_rows(table, sort="lex", shards=4, spill_dir=...)
         -> external-merge sort (spilled runs) -> streaming sharded build
+    Dataset.from_rows(table, sort="none")  # container="auto" by default:
+        -> Roaring-style per-chunk array/dense/run encoding for unsortable
+           tables, bit-identical ops, collapses to plain EWAH when sorted
     .save(dir)   -> durable per-shard .ridx files + manifest
     Dataset.open(dir)                 -> zero-copy mmap warm start
     .query().where(e).count()         -> compressed-domain popcount
@@ -59,11 +62,27 @@ def _run(workdir):
                            spill_dir=os.path.join(workdir, "runs"),
                            chunk_rows=8192)
     shuffled = ranked[rng.permutation(len(ranked))]
-    raw = Dataset.from_rows(shuffled, names, sort="none", k=1)
+    raw = Dataset.from_rows(shuffled, names, sort="none", k=1,
+                            container="run")  # the paper's pure-EWAH baseline
     print(f"index size shuffled: {raw.size_words} words, "
           f"sorted: {ds.size_words} words "
           f"-> sorting gain {raw.size_words / ds.size_words:.2f}x "
           f"({ds.n_shards} shards, col order {ds.sort_order})")
+
+    # --- hybrid containers when you can't sort ------------------------------
+    # sort="none" defaults to container="auto": each bitmap is chunked into
+    # 2^16-bit word-aligned chunks and the cost model picks sorted-array /
+    # dense-words / run per chunk (whichever is smallest).  Sorted builds
+    # default to container="run" — plain run-lists, byte-identical stores;
+    # force "run" yourself for byte-stable files or interval-heavy reads.
+    hybrid = Dataset.from_rows(shuffled, names, sort="none", k=1)
+    print(f"containers on the shuffled table: {hybrid.size_words} words "
+          f"-> {raw.size_words / hybrid.size_words:.2f}x smaller than pure "
+          f"EWAH without sorting (calibrate the array/dense cutoff once "
+          f"with CostModel.calibrate_containers, persist via "
+          f"$REPRO_COST_MODEL)")
+    assert hybrid.query().where(col("region") == 0).count() == \
+        raw.query().where(col("region") == 0).count()
 
     # --- statements: filters + aggregates ---------------------------------
     # the spill build retains no rows; recover the sorted view for the

@@ -7,6 +7,8 @@ semantics) and the query engine.
 """
 from .bitpack import pack_bits, unpack_bits, pack_matrix
 from .ewah import EWAH, binary_op, and_many, or_many
+from .containers import (CHUNK_BITS, Containers, T_ARRAY, T_DENSE, T_EMPTY,
+                         T_FULL, T_RUN)
 from .wah import WAH
 from .encoding import ColumnEncoder, bitmaps_needed, choose_k, unrank_lex, revolving_door
 from .sorting import (
@@ -24,7 +26,7 @@ from .expr import (And, Col, Const, Eq, Expr, In, Not, Or, Range,
 from .planner import explain, plan
 from .executor import (QueryBatch, execute, execute_count,
                        execute_group_count, execute_rows)
-from .shard import ShardedIndex
+from .shard import ForkSafetyError, ShardedIndex, ShardProcessPool
 from .wal import WAL, WALError, replay as wal_replay
 from .ingest import Compactor, DeltaIndex, LiveIndex
 from .dataset import Dataset, Query
@@ -34,11 +36,14 @@ from . import synth
 __all__ = [
     "pack_bits", "unpack_bits", "pack_matrix",
     "EWAH", "binary_op", "and_many", "or_many", "WAH",
+    "Containers", "CHUNK_BITS",
+    "T_EMPTY", "T_FULL", "T_ARRAY", "T_DENSE", "T_RUN",
     "ColumnEncoder", "bitmaps_needed", "choose_k", "unrank_lex", "revolving_door",
     "SortStats", "lex_sort", "gray_sort", "lex_sort_bits", "random_sort",
     "random_shuffle", "block_sort", "external_merge_sort_perm",
     "external_sorted_chunks", "order_columns", "order_columns_freq_aware",
     "BitmapIndex", "ColumnIndex", "IndexBuilder", "ShardedIndex",
+    "ShardProcessPool", "ForkSafetyError",
     "concat_bitmaps", "validate_partition_rows",
     "StoreError", "StoreVersionError", "StoreCorruptError", "StoreWriter",
     "save", "load", "save_sharded", "load_sharded", "write_shard_file",

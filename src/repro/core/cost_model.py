@@ -33,6 +33,7 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 DEFAULT_DENSE_THRESHOLD = 0.5
+DEFAULT_ARRAY_CUTOFF = 4096  # Roaring size crossover: 2B/position vs dense
 ENV_PATH = "REPRO_COST_MODEL"
 
 
@@ -55,6 +56,34 @@ class CostModel:
     n_words: int = 0                  # calibration operand size
     n_operands: int = 0
     samples: List[dict] = field(default_factory=list)
+    # per-chunk container selection (Roaring-style array/dense/run):
+    # fields default so pre-container JSON files keep loading unchanged
+    array_cutoff: int = DEFAULT_ARRAY_CUTOFF
+    containers_calibrated: bool = False
+    container_samples: List[dict] = field(default_factory=list)
+
+    def choose_container(self, chunk_stats: dict) -> str:
+        """Pick a container for one 2^16-bit chunk from its stats.
+
+        ``chunk_stats`` needs ``count`` (set bits), ``n_words`` (chunk
+        words) and ``run_words`` (exact serialized run-list words).
+        Returns 'empty' | 'full' | 'run' | 'array' | 'dense' — the same
+        decision the conversion paths in ``core/containers.py`` apply,
+        exposed so planners/tools can predict the encoding.
+        """
+        count = int(chunk_stats["count"])
+        n_words = int(chunk_stats["n_words"])
+        if count == 0:
+            return "empty"
+        if count == 32 * n_words:
+            return "full"
+        run_words = int(chunk_stats["run_words"])
+        array_words = (count + 1) // 2
+        if run_words <= array_words and run_words <= n_words:
+            return "run"
+        if count <= self.array_cutoff and array_words < n_words:
+            return "array"
+        return "dense"
 
     def save(self, path: Optional[os.PathLike] = None) -> Path:
         p = Path(path) if path is not None else default_path()
@@ -171,3 +200,52 @@ def calibrate(n_words: int = 1 << 14, n_operands: int = 8,
     return CostModel(dense_threshold=threshold, calibrated=True,
                      source="calibrated", machine=platform.node() or "?",
                      n_words=n_words, n_operands=n_operands, samples=samples)
+
+
+def calibrate_containers(counts: Sequence[int] = (256, 512, 1024, 2048,
+                                                  4096, 6144, 8192),
+                         repeats: int = 5, seed: int = 0,
+                         base: Optional[CostModel] = None) -> CostModel:
+    """Measure the array-vs-dense container crossover on *this* machine.
+
+    For each per-chunk population, times the array path (sorted-position
+    membership intersect) against the dense path (word AND + popcount
+    re-normalization) on one 2^16-bit chunk.  The Roaring size crossover
+    (4096: above it an array is bigger than the dense words) is the
+    primary criterion — below it an array container is at least 2x
+    smaller — so the measured latency only *lowers* the cutoff where the
+    dense path is decisively (>4x) faster, i.e. where giving up the size
+    win is clearly paid back.  Micro-timing noise at small populations
+    (both paths are fixed-overhead-dominated microseconds) therefore
+    cannot flip chunks to the larger encoding.  Returns an uninstalled
+    model (merged over ``base`` or the current default); ``.save()`` +
+    ``get_default(refresh=True)`` puts it into effect.
+    """
+    from .containers import (CHUNK_BITS, CHUNK_WORDS, _membership,
+                             _norm_words, _scatter, T_ARRAY)
+
+    rng = np.random.default_rng(seed)
+    samples: List[dict] = []
+    crossover: Optional[int] = None
+    prev: Optional[int] = None
+    for count in counts:
+        pa = np.unique(rng.integers(0, CHUNK_BITS, count)).astype(np.uint16)
+        pb = np.unique(rng.integers(0, CHUNK_BITS, count)).astype(np.uint16)
+        wa, wb = _scatter(pa, CHUNK_WORDS), _scatter(pb, CHUNK_WORDS)
+        arr_s = _best_of(lambda: pa[_membership(pa, T_ARRAY, pb)], repeats)
+        dense_s = _best_of(
+            lambda: _norm_words(np.bitwise_and(wa, wb), 1 << 30), repeats)
+        samples.append({"count": count, "array_us": arr_s * 1e6,
+                        "dense_us": dense_s * 1e6})
+        if crossover is None and dense_s * 4 < arr_s:
+            crossover = count if prev is None else (prev + count) // 2
+        prev = count
+    cutoff = DEFAULT_ARRAY_CUTOFF if crossover is None \
+        else min(DEFAULT_ARRAY_CUTOFF, int(crossover))
+    model = base if base is not None else get_default()
+    return CostModel(
+        dense_threshold=model.dense_threshold, calibrated=model.calibrated,
+        source="calibrated", machine=platform.node() or "?",
+        n_words=model.n_words, n_operands=model.n_operands,
+        samples=model.samples, array_cutoff=cutoff,
+        containers_calibrated=True, container_samples=samples)

@@ -96,7 +96,8 @@ class Dataset:
                  sort_order: Optional[Sequence[int]] = None,
                  cards: Optional[Sequence[int]] = None,
                  k: int = 1, allocation: str = "alpha",
-                 partition_rows: Optional[int] = None):
+                 partition_rows: Optional[int] = None,
+                 container: str = "run"):
         self.index = index
         names = list(column_names) if column_names is not None \
             else index.column_names
@@ -109,6 +110,7 @@ class Dataset:
         self._k = int(k)
         self._allocation = allocation
         self._partition_rows = partition_rows
+        self._container = container
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -121,7 +123,8 @@ class Dataset:
                   partition_rows: Optional[int] = None,
                   spill_dir: Optional[str] = None,
                   chunk_rows: int = DEFAULT_CHUNK_ROWS,
-                  sort_stats: Optional[SortStats] = None) -> "Dataset":
+                  sort_stats: Optional[SortStats] = None,
+                  container: Optional[str] = None) -> "Dataset":
         """Sort + index a fact table of integer value ranks in one call.
 
         ``sort`` is ``"lex"`` (lexicographic with the paper's §4.3
@@ -134,7 +137,11 @@ class Dataset:
         table is *not* retained.  ``shards > 0`` cuts the sorted rows into
         that many word-aligned row shards (the scale-out unit);
         ``cards`` pins global cardinalities when ``rows`` may not contain
-        every value.
+        every value.  ``container`` is ``"run"`` (plain word-aligned
+        run-list bitmaps), ``"auto"`` (Roaring-style per-chunk containers
+        where the cost model says they pay off), or ``None`` to pick by
+        sort: sorted builds stay pure run-list (their bitmaps are runs
+        already), unsorted ``sort="none"`` builds use ``"auto"``.
         """
         rows = np.asarray(rows)
         if rows.ndim != 2:
@@ -146,6 +153,8 @@ class Dataset:
         cards = list(cards) if cards is not None else _table_cards(rows)
         order = cls._resolve_sort(sort, rows, cards, d)
         names = list(columns) if columns is not None else None
+        if container is None:
+            container = "run" if order is not None else "auto"
 
         if order is not None and spill_dir is not None:
             # out-of-core: sorted chunks stream off merged on-disk runs and
@@ -157,10 +166,11 @@ class Dataset:
                 rows, chunk_rows, order, spill_dir=spill_dir,
                 stats=sort_stats)
             index = _build_from_chunks(chunks, n, cards, k, allocation,
-                                       shards, part, names)
+                                       shards, part, names,
+                                       container=container)
             return cls(index, names, dir_path=None, sort_order=order,
                        cards=cards, k=k, allocation=allocation,
-                       partition_rows=part)
+                       partition_rows=part, container=container)
 
         if order is not None:
             perm = external_merge_sort_perm(rows, chunk_rows, order,
@@ -170,10 +180,12 @@ class Dataset:
             perm, table = None, rows
         index = _build_from_chunks(
             (table[s:s + chunk_rows] for s in range(0, max(n, 1), chunk_rows)),
-            n, cards, k, allocation, shards, partition_rows, names)
+            n, cards, k, allocation, shards, partition_rows, names,
+            container=container)
         return cls(index, names, table=table, row_perm=perm,
                    sort_order=order, cards=cards, k=k,
-                   allocation=allocation, partition_rows=partition_rows)
+                   allocation=allocation, partition_rows=partition_rows,
+                   container=container)
 
     @classmethod
     def from_chunks(cls, chunks: Iterable[np.ndarray],
@@ -359,12 +371,14 @@ class Dataset:
                                 DEFAULT_CHUNK_ROWS)),
                 len(self.table), self._cards or _table_cards(self.table),
                 self._k, self._allocation, int(n_shards),
-                self._partition_rows, self.column_names)
+                self._partition_rows, self.column_names,
+                container=self._container)
             return Dataset(index, self.column_names, table=self.table,
                            row_perm=self.row_perm, sort_order=self.sort_order,
                            cards=self._cards, k=self._k,
                            allocation=self._allocation,
-                           partition_rows=self._partition_rows)
+                           partition_rows=self._partition_rows,
+                           container=self._container)
         if not isinstance(idx, ShardedIndex):
             idx = ShardedIndex([idx], column_names=self.column_names)
         return Dataset(idx.reshard(int(n_shards)), self.column_names,
@@ -431,13 +445,14 @@ class Dataset:
 def _build_from_chunks(chunks: Iterable[np.ndarray], n_rows: int,
                        cards: Sequence[int], k: int, allocation: str,
                        shards: int, partition_rows: Optional[int],
-                       names: Optional[Sequence[str]]) -> AnyIndex:
+                       names: Optional[Sequence[str]],
+                       container: str = "run") -> AnyIndex:
     """Stream row chunks into one index — monolithic, or cut into
     ``shards`` word-aligned row shards built by independent builders."""
     def builder():
         return IndexBuilder(cards, k=k, allocation=allocation,
                             partition_rows=partition_rows,
-                            column_names=names)
+                            column_names=names, container=container)
 
     if shards and shards > 1:
         shard_rows = _aligned_rows(n_rows, shards)

@@ -93,20 +93,55 @@ class EWAH:
     exactly once.
     """
 
-    __slots__ = ("words", "n_bits", "_rl", "_popcnt", "_iv")
+    __slots__ = ("_words", "n_bits", "_rl", "_popcnt", "_iv", "_cont",
+                 "_sizew")
 
     def __init__(self, words: np.ndarray, n_bits: int):
-        self.words = np.asarray(words, dtype=WORD_DTYPE)
+        self._words = np.asarray(words, dtype=WORD_DTYPE)
         self.n_bits = int(n_bits)
         self._rl: Optional["RunList"] = None
         self._popcnt: Optional[int] = None
         self._iv: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        self._cont = None
+        self._sizew: Optional[int] = None
+
+    @classmethod
+    def _from_containers(cls, cont, n_bits: int) -> "EWAH":
+        """Container-backed bitmap: EWAH words are emitted lazily, only
+        if something actually asks for the marker stream."""
+        self = cls.__new__(cls)
+        self._words = None
+        self.n_bits = int(n_bits)
+        self._rl = None
+        self._popcnt = None
+        self._iv = None
+        self._cont = cont
+        self._sizew = None
+        return self
+
+    @property
+    def words(self) -> np.ndarray:
+        """Canonical EWAH marker stream (emitted on demand when this
+        bitmap is container-backed; bit-identical to the run-list path)."""
+        if self._words is None:
+            self._words = _rl_emit(self.runlist())
+        return self._words
 
     # -- stats ------------------------------------------------------------
     @property
     def size_words(self) -> int:
-        """Compressed size in 32-bit words (the paper's size unit)."""
-        return int(len(self.words))
+        """Compressed size in 32-bit words (the paper's size unit).
+
+        For container-backed bitmaps this is the exact serialized
+        container size (directory + payloads), cached so cache-byte
+        accounting stays stable across lazy word emission.
+        """
+        if self._sizew is None:
+            if self._words is None and self._cont is not None:
+                self._sizew = int(self._cont.size_words)
+            else:
+                self._sizew = int(len(self.words))
+        return self._sizew
 
     @property
     def size_bytes(self) -> int:
@@ -135,7 +170,8 @@ class EWAH:
         return cls.from_words(pack_bits(bits), len(bits))
 
     @classmethod
-    def from_positions(cls, positions: np.ndarray, n_bits: int) -> "EWAH":
+    def from_positions(cls, positions: np.ndarray, n_bits: int,
+                       container: str = "run") -> "EWAH":
         """Build directly from sorted set-bit positions — O(set bits).
 
         Emits a ``RunList`` directly (no ``_emit`` round-trip): each touched
@@ -144,8 +180,22 @@ class EWAH:
         reclassifies — so the words come out identical to the historical
         segment path *and* the freshly built bitmap's run-list memo is
         already warm for its first logical op.
+
+        ``container="auto"`` builds Roaring-style hybrid containers
+        natively (sparse chunks become position arrays without touching
+        the RLE codec — the delta-append path); when every chunk still
+        prefers the run form the plain run-list bitmap is returned, so
+        fully sorted batch builds are byte-identical either way.
+        ``container="run"`` (default) forces today's run-list encoding.
         """
         positions = np.asarray(positions, dtype=np.int64)
+        if container == "auto" and n_bits > 0 and positions.size:
+            from .containers import (containers_from_positions, worthwhile)
+            pos = np.unique(positions)
+            cont = containers_from_positions(pos, n_bits)
+            if worthwhile(cont):
+                return cls._from_containers(cont, n_bits)
+            positions = pos
         n_words = -(-n_bits // WORD_BITS)
         if positions.size == 0:
             rl = (_groups_to_runlist(
@@ -197,6 +247,11 @@ class EWAH:
                 i += n_lit
 
     def to_words(self) -> np.ndarray:
+        if self._words is None and self._cont is not None:
+            # assemble per chunk — dense containers feed the kernels
+            # without a marker-stream decode
+            from .containers import containers_to_dense
+            return containers_to_dense(self._cont)
         out = np.empty(self.n_words_uncompressed, dtype=WORD_DTYPE)
         pos = 0
         for seg in self.segments():
@@ -229,8 +284,39 @@ class EWAH:
     def runlist(self) -> "RunList":
         """Decoded interval view of this bitmap (memoized; treat read-only)."""
         if self._rl is None:
-            self._rl = _decode_runlist(self.words)
+            if self._words is None and self._cont is not None:
+                from .containers import containers_to_runlist
+                self._rl = containers_to_runlist(self._cont)
+            else:
+                self._rl = _decode_runlist(self._words)
         return self._rl
+
+    def to_containers(self, model=None, force: bool = False) -> "EWAH":
+        """Hybrid-container view of this bitmap (memoized on the object).
+
+        Chunks the run-list and lets the cost model pick array / dense /
+        run per chunk.  When no chunk benefits (pure run material — the
+        sorted-table case) the containers are discarded unless ``force``
+        is set, keeping the plain pipeline free of dispatch overhead.
+        Promotion is lazy: ops that mix container-backed and plain
+        operands call this with ``force=True`` on first use.
+        """
+        if self._cont is not None or self.n_words_uncompressed == 0:
+            return self
+        from .containers import runlist_to_containers, resolve_cutoff, \
+            worthwhile
+        cont = runlist_to_containers(self.runlist(), self.n_bits,
+                                     resolve_cutoff(model))
+        if force or worthwhile(cont):
+            self._cont = cont
+        return self
+
+    def container_summary(self) -> str:
+        """'run' | 'array' | 'dense' | 'mixed' | 'empty' | 'full' | 'ewah'
+        — what actually backs this bitmap (cache/stats classification)."""
+        if self._cont is None:
+            return "ewah"
+        return self._cont.type_summary()
 
     def count(self) -> int:
         """Number of set bits (popcount), ignoring padding bits.
@@ -243,6 +329,10 @@ class EWAH:
         """
         if self.n_bits == 0:
             return 0
+        if self._popcnt is None and self._rl is None \
+                and self._cont is not None:
+            # chunk directory: O(n_chunks), no payload access
+            self._popcnt = self._cont.count()
         if self._popcnt is None:
             rl = self.runlist()
             lens = np.diff(rl.bounds)
@@ -272,6 +362,11 @@ class EWAH:
         assert self.n_bits == other.n_bits, (self.n_bits, other.n_bits)
         if self.n_bits == 0 or self.n_words_uncompressed == 0:
             return 0
+        if self._cont is not None or other._cont is not None:
+            from .containers import and_count_containers
+            return and_count_containers(
+                self.to_containers(force=True)._cont,
+                other.to_containers(force=True)._cont)
         ra, rb = self.runlist(), other.runlist()
         bounds = np.union1d(ra.bounds, rb.bounds)
         left = bounds[:-1]
@@ -1037,10 +1132,20 @@ def _empty_ewah(n_bits: int) -> EWAH:
 
 
 def vec_binary_op(a: EWAH, b: EWAH, op: str) -> EWAH:
-    """Vectorized logical op — bit-identical to ``binary_op`` (the oracle)."""
+    """Vectorized logical op — bit-identical to ``binary_op`` (the oracle).
+
+    When either operand is container-backed the op dispatches per chunk
+    on the container-type pair (the other operand is promoted once,
+    memoized); all-plain operands take the run-list path unchanged.
+    """
     assert a.n_bits == b.n_bits, (a.n_bits, b.n_bits)
     if a.n_words_uncompressed == 0:
         return _empty_ewah(a.n_bits)
+    if a._cont is not None or b._cont is not None:
+        from .containers import binary_containers
+        cont = binary_containers(a.to_containers(force=True)._cont,
+                                 b.to_containers(force=True)._cont, op)
+        return EWAH._from_containers(cont, a.n_bits)
     return _rl_wrap(_rl_binary(a.runlist(), b.runlist(), op), a.n_bits)
 
 
@@ -1068,6 +1173,11 @@ def or_many(bitmaps: Sequence[EWAH]) -> EWAH:
         [bm.n_bits for bm in bitmaps]
     if bitmaps[0].n_words_uncompressed == 0:
         return _empty_ewah(n_bits)
+    if any(bm._cont is not None for bm in bitmaps):
+        from .containers import or_many_containers
+        cont = or_many_containers(
+            [bm.to_containers(force=True)._cont for bm in bitmaps])
+        return EWAH._from_containers(cont, n_bits)
     items = [bm.runlist() for bm in bitmaps]
     while len(items) > 1:
         nxt = []
@@ -1100,6 +1210,11 @@ def and_many(bitmaps: Sequence[EWAH]) -> EWAH:
         [bm.n_bits for bm in bitmaps]
     if bitmaps[0].n_words_uncompressed == 0:
         return _empty_ewah(n_bits)
+    if any(bm._cont is not None for bm in bitmaps):
+        from .containers import and_many_containers
+        cont = and_many_containers(
+            [bm.to_containers(force=True)._cont for bm in bitmaps])
+        return EWAH._from_containers(cont, n_bits)
     live: List[EWAH] = []
     for bm in bitmaps:
         rl = bm.runlist()

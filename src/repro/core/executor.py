@@ -125,6 +125,10 @@ class Executor:
         w = bm.to_words()
         if len(w) < cp:
             w = np.pad(w, (0, cp - len(w)))
+        if bm._cont is not None and bm._words is None:
+            # container-backed: flags come off the chunk directory (EMPTY/
+            # FULL/ARRAY chunks never scan words), bit-identical to below
+            return w, kops.container_row_flags(bm._cont, len(w))
         return w, kops.np_row_flags(w)
 
     # -- evaluation --------------------------------------------------------

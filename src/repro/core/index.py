@@ -133,7 +133,16 @@ class IndexBuilder:
                  partition_rows: Optional[int] = None,
                  apply_heuristic: bool = True,
                  column_names: Optional[Sequence[str]] = None,
-                 store_path: Optional[str] = None):
+                 store_path: Optional[str] = None,
+                 container: str = "run"):
+        if container not in ("run", "auto"):
+            raise ValueError(f"container must be 'run' or 'auto', "
+                             f"got {container!r}")
+        # "auto": each bitmap picks hybrid containers per 2^16-bit chunk
+        # when the cost model says they beat word-aligned RLE — the
+        # unsorted/delta-append path.  "run" (default) forces today's
+        # run-list encoding, the right call for fully sorted batch builds.
+        self.container = container
         self.cards = [int(c) for c in cards]
         d = len(self.cards)
         names = list(column_names) if column_names is not None else None
@@ -251,7 +260,8 @@ class IndexBuilder:
             idx = np.searchsorted(flat_s, np.arange(enc.L + 1))
             for b in range(enc.L):
                 pos = rows_s[idx[b]: idx[b + 1]]
-                bms.append(EWAH.from_positions(pos, rows_part))
+                bms.append(EWAH.from_positions(pos, rows_part,
+                                               container=self.container))
             if self._writer is None:
                 col.bitmaps.append(bms)
                 col.invalidate_sizes()
@@ -279,6 +289,7 @@ class BitmapIndex:
         partition_rows: Optional[int] = None,
         apply_heuristic: bool = True,
         column_names: Optional[Sequence[str]] = None,
+        container: str = "run",
     ) -> "BitmapIndex":
         """Build the index in one shot (thin wrapper over ``IndexBuilder``).
 
@@ -291,7 +302,8 @@ class BitmapIndex:
         builder = IndexBuilder(cards, k=k, allocation=allocation,
                                partition_rows=partition_rows,
                                apply_heuristic=apply_heuristic,
-                               column_names=column_names)
+                               column_names=column_names,
+                               container=container)
         return builder.append(table).finish()
 
     # -- stats -------------------------------------------------------------

@@ -83,9 +83,13 @@ class DeltaIndex:
         self._allocation = allocation
         p = max(int(partition_rows), WORD_ROWS)
         self._partition_rows = p - p % WORD_ROWS
+        # container="auto": arrival-order rows are exactly the distribution
+        # where word-aligned RLE degrades — sparse chunks become position
+        # arrays natively instead of paying the unsorted-RLE penalty
         self._builder = IndexBuilder(self.cards, k=1, allocation=allocation,
                                      partition_rows=self._partition_rows,
-                                     column_names=self.column_names)
+                                     column_names=self.column_names,
+                                     container="auto")
         self._chunks: List[np.ndarray] = []
         self.n_rows = 0
         self._version = 0
@@ -125,7 +129,8 @@ class DeltaIndex:
         tail_idx = None
         if tail_rows:
             tb = IndexBuilder(self.cards, k=1, allocation=self._allocation,
-                              column_names=self.column_names)
+                              column_names=self.column_names,
+                              container="auto")
             for chunk in b._buf:
                 tb.append(chunk)
             tail_idx = tb.finish()

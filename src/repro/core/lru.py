@@ -19,11 +19,29 @@ from typing import Callable, Dict, Optional
 def payload_nbytes(v) -> int:
     """Byte sizer for cached query results: EWAH bitmaps (``size_bytes``),
     count vectors (``nbytes``) or plain ints (0) — shared by the serving
-    result cache and the shard-local result caches."""
+    result cache and the shard-local result caches.
+
+    ``size_bytes`` on a container-backed bitmap is its exact serialized
+    container size (chunk directory + payloads), *not* the cost of the
+    EWAH words it would lazily emit — so the byte budget tracks what the
+    cache actually holds in memory."""
     size = getattr(v, "size_bytes", None)
     if size is None:
         size = getattr(v, "nbytes", 0)
     return int(size)
+
+
+def payload_kind(v) -> str:
+    """Classifier for cached query results, keyed per container encoding:
+    ``'ewah' | 'run' | 'array' | 'dense' | 'mixed' | 'empty' | 'full'``
+    for bitmaps (``EWAH.container_summary``), ``'vector'`` for count
+    vectors, ``'scalar'`` for plain aggregates."""
+    summary = getattr(v, "container_summary", None)
+    if summary is not None:
+        return summary()
+    if hasattr(v, "nbytes"):
+        return "vector"
+    return "scalar"
 
 
 class LRUCache:
@@ -45,12 +63,19 @@ class LRUCache:
                  max_bytes: Optional[int] = None,
                  sizeof: Optional[Callable[[object], int]] = None,
                  ttl: Optional[float] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 classify: Optional[Callable[[object], str]] = None):
         self.capacity = None if capacity is None else max(int(capacity), 0)
         self.max_bytes = None if max_bytes is None else max(int(max_bytes), 0)
         self._sizeof = sizeof or (lambda _v: 0)
         self.ttl = None if not ttl or ttl <= 0 else float(ttl)
         self._clock = clock
+        # optional value classifier (e.g. ``payload_kind``): kinds are
+        # computed once at put time; hits are counted per kind so /stats
+        # can show which container encodings the cache actually serves
+        self._classify = classify
+        self._kinds: Dict = {}
+        self.hits_by_type: Dict[str, int] = {}
         self._od: "OrderedDict" = OrderedDict()
         self._sizes: Dict = {}
         self._stamps: Dict = {}
@@ -65,6 +90,7 @@ class LRUCache:
         del self._od[key]
         self._bytes -= self._sizes.pop(key)
         self._stamps.pop(key, None)
+        self._kinds.pop(key, None)
 
     def get(self, key):
         with self._lock:
@@ -80,6 +106,9 @@ class LRUCache:
                 return None
             self._od.move_to_end(key)
             self.hits += 1
+            if self._classify is not None:
+                kind = self._kinds.get(key, "?")
+                self.hits_by_type[kind] = self.hits_by_type.get(kind, 0) + 1
             return val
 
     def put(self, key, val) -> None:
@@ -92,6 +121,8 @@ class LRUCache:
             self._od[key] = val
             self._sizes[key] = size
             self._stamps[key] = self._clock()
+            if self._classify is not None:
+                self._kinds[key] = self._classify(val)
             self._bytes += size
             self._od.move_to_end(key)
             while len(self._od) > 1 and (
@@ -100,6 +131,7 @@ class LRUCache:
                 k, _ = self._od.popitem(last=False)
                 self._bytes -= self._sizes.pop(k)
                 self._stamps.pop(k, None)
+                self._kinds.pop(k, None)
                 self.evictions += 1
             # a single entry larger than the whole byte budget is not worth
             # keeping either
@@ -108,6 +140,7 @@ class LRUCache:
                 k, _ = self._od.popitem(last=False)
                 self._bytes -= self._sizes.pop(k)
                 self._stamps.pop(k, None)
+                self._kinds.pop(k, None)
                 self.evictions += 1
 
     def clear(self) -> None:
@@ -115,6 +148,7 @@ class LRUCache:
             self._od.clear()
             self._sizes.clear()
             self._stamps.clear()
+            self._kinds.clear()
             self._bytes = 0
 
     def __len__(self) -> int:
@@ -123,8 +157,11 @@ class LRUCache:
 
     def stats(self) -> Dict:
         with self._lock:
-            return {"entries": len(self._od), "capacity": self.capacity,
-                    "bytes": self._bytes, "max_bytes": self.max_bytes,
-                    "ttl": self.ttl, "hits": self.hits,
-                    "misses": self.misses, "evictions": self.evictions,
-                    "expired": self.expired}
+            out = {"entries": len(self._od), "capacity": self.capacity,
+                   "bytes": self._bytes, "max_bytes": self.max_bytes,
+                   "ttl": self.ttl, "hits": self.hits,
+                   "misses": self.misses, "evictions": self.evictions,
+                   "expired": self.expired}
+            if self._classify is not None:
+                out["hits_by_type"] = dict(self.hits_by_type)
+            return out

@@ -40,7 +40,7 @@ from .ewah import EWAH
 from .expr import Expr, canonical_key
 from .index import (BitmapIndex, ColumnIndex, IndexBuilder, WORD_ROWS,
                     concat_bitmaps, validate_partition_rows)
-from .lru import LRUCache, payload_nbytes
+from .lru import LRUCache, payload_kind, payload_nbytes
 
 # per-shard result-cache defaults (entries + byte budget per shard)
 SHARD_CACHE_ENTRIES = 64
@@ -76,7 +76,7 @@ class ShardedIndex:
     def _new_cache(self) -> LRUCache:
         return LRUCache(capacity=self._cache_entries,
                         max_bytes=self._cache_bytes,
-                        sizeof=payload_nbytes)
+                        sizeof=payload_nbytes, classify=payload_kind)
 
     @staticmethod
     def _validate_shard(i: int, sh: BitmapIndex, ref: BitmapIndex,
@@ -454,6 +454,48 @@ class ShardedIndex:
 # Fork-based shard execution: CPU-bound EWAH work beyond the GIL.
 # ---------------------------------------------------------------------------
 
+class ForkSafetyError(Exception):
+    """An explicit jax-backend request reached a forked shard worker.
+
+    Deliberately *not* a ``RuntimeError``: ``ShardProcessPool.run_shards``
+    retries ``RuntimeError`` once (racing generation bumps shut executors
+    down mid-map), and a fork-safety violation must fail loudly, not be
+    retried into the same violation.
+    """
+
+
+# True only in processes forked by a ShardProcessPool (set by the pool's
+# worker initializer).  Forked children inherit the parent's ``sys.modules``
+# — including an already-imported jax — so fork safety cannot be "jax is not
+# imported here"; it is "this process never *calls* into the jax runtime":
+# XLA client threads and locks do not survive fork, and a first-use
+# initialization in a worker would boot one runtime per worker.  The guard
+# therefore pins forked workers to the pure-NumPy EWAH backend.
+_IN_FORK_WORKER = False
+
+
+def _fork_worker_init() -> None:
+    global _IN_FORK_WORKER
+    _IN_FORK_WORKER = True
+
+
+def _guard_backend(backend: str) -> str:
+    """Resolve ``backend`` under the fork-safety rule (worker side).
+
+    ``auto`` quietly degrades to ``ewah`` (the executor's kernel path is
+    an optimization, never a semantic change); an *explicit* ``kernel``
+    request is a caller error and raises ``ForkSafetyError``.
+    """
+    if not _IN_FORK_WORKER:
+        return backend
+    if backend == "kernel":
+        raise ForkSafetyError(
+            "backend='kernel' inside a forked shard worker: the jax "
+            "runtime is not fork-safe; use backend='auto'/'ewah' with "
+            "ShardProcessPool, or a thread pool for kernel execution")
+    return "ewah" if backend == "auto" else backend
+
+
 # indexes visible to forked workers, keyed per pool.  Entries are written in
 # the parent *before* its pool forks, so every worker inherits its own
 # pool's index by copy-on-write — or, when the pool was given an
@@ -493,10 +535,14 @@ def _forked_run(args):
     from .executor import Executor
     from .planner import Planner, plan
     pool_key, shard_i, task, backend, optimize = args
+    backend = _guard_backend(backend)
+    kind = task[0]
+    if kind == "probe":
+        return {"pid": os.getpid(), "fork_worker": _IN_FORK_WORKER,
+                "backend": backend}
     sh = _fork_index(pool_key).shards[shard_i]
     cache = _FORK_CACHES.setdefault((pool_key, shard_i), {})
     ex = Executor(sh, backend=backend, cache=cache)
-    kind = task[0]
     if kind == "expr":
         e = task[1]
         node = plan(sh, e, optimize=optimize) if isinstance(e, Expr) else e
@@ -525,8 +571,12 @@ class ShardProcessPool:
     Workers fork lazily on first use and automatically re-fork when the
     index ``generation`` changes (``replace_shard``), so a worker never
     serves a stale shard.  Per-worker operand caches persist across queries.
-    Note: forked workers should stay on the EWAH backend — a jax runtime
-    initialized in the parent is not fork-safe to reuse.
+    Fork safety is *enforced*: every worker runs ``_fork_worker_init`` and
+    ``_guard_backend`` pins it to the pure-NumPy EWAH path — ``auto``
+    degrades to ``ewah``, an explicit ``kernel`` raises ``ForkSafetyError``
+    — so a worker never initializes (or re-enters) a jax runtime inherited
+    from the parent.  ``run_shards(("probe",), shard_ids)`` returns each
+    worker's pid / fork flag / effective backend for verification.
 
     With ``index_dir`` (a saved ``ShardedIndex`` store directory), workers
     do not rely on fork-time copy-on-write of the parent's heap at all:
@@ -561,7 +611,8 @@ class ShardProcessPool:
                     else self.index)
                 self._executor = ProcessPoolExecutor(
                     max_workers=min(self.workers, self.index.n_shards),
-                    mp_context=multiprocessing.get_context("fork"))
+                    mp_context=multiprocessing.get_context("fork"),
+                    initializer=_fork_worker_init)
                 self._forked_generation = self.index.generation
             return self._executor
 
@@ -574,7 +625,7 @@ class ShardProcessPool:
         accepted for backward compatibility and treated as ``("expr", e)``.
         """
         if not (isinstance(task, tuple) and task
-                and task[0] in ("expr", "count", "gcount")):
+                and task[0] in ("expr", "count", "gcount", "probe")):
             task = ("expr", task)
         args = [(self._key, i, task, backend, optimize) for i in shard_ids]
         # a concurrent generation bump can shut this executor down between

@@ -53,7 +53,12 @@ from .ewah import EWAH, WORD_DTYPE
 from .index import BitmapIndex, ColumnIndex
 
 MAGIC = b"REPROIDX"
-VERSION = 1
+VERSION = 2            # v2: container-tagged segments (TOC entries grow a
+                       # 4th element; tag 0 / absent = raw EWAH words, tag 1
+                       # = hybrid-container blob).  v1 files read unchanged.
+COMPAT_VERSIONS = (1, 2)
+SEG_EWAH = 0
+SEG_CONTAINERS = 1
 _PREAMBLE = struct.Struct("<8sIIQQI")  # magic, version, flags, off, len, crc
 PAYLOAD_START = 64  # 64-byte aligned payload keeps every segment word-aligned
 
@@ -133,10 +138,22 @@ class StoreWriter:
                     raise ValueError(
                         f"bitmap over {bm.n_bits} bits in a {rows_part}-row "
                         f"partition")
-                raw = np.ascontiguousarray(bm.words, dtype=WORD_DTYPE)
+                # container-backed bitmaps persist their chunk directory +
+                # payloads verbatim (no round-trip through the RLE codec);
+                # plain bitmaps keep the v1 raw-word layout and a 3-element
+                # TOC entry, so sorted batch builds stay byte-compatible
+                if bm._cont is not None and bm._words is None:
+                    raw = np.ascontiguousarray(bm._cont.serialize(),
+                                               dtype=WORD_DTYPE)
+                    tag = SEG_CONTAINERS
+                else:
+                    raw = np.ascontiguousarray(bm.words, dtype=WORD_DTYPE)
+                    tag = SEG_EWAH
                 data = raw.tobytes()
-                entries.append([self._pos, len(raw),
-                                zlib.crc32(data) & 0xFFFFFFFF])
+                entry = [self._pos, len(raw), zlib.crc32(data) & 0xFFFFFFFF]
+                if tag != SEG_EWAH:
+                    entry.append(tag)
+                entries.append(entry)
                 self._f.write(data)
                 self._pos += len(data)
             self._toc[c].append(entries)
@@ -213,10 +230,10 @@ def _parse_header(data: np.ndarray, path: str) -> Dict:
         _PREAMBLE.unpack(data[:_PREAMBLE.size].tobytes())
     if magic != MAGIC:
         raise StoreVersionError(f"{path}: bad magic {magic!r}")
-    if version != VERSION:
+    if version not in COMPAT_VERSIONS:
         raise StoreVersionError(
             f"{path}: format version {version}, this build reads "
-            f"{VERSION}")
+            f"{sorted(COMPAT_VERSIONS)}")
     if hdr_off + hdr_len > size:
         raise StoreCorruptError(
             f"{path}: header [{hdr_off}, {hdr_off + hdr_len}) past EOF "
@@ -283,7 +300,9 @@ def load(path: str, mmap: bool = True,
                     f"{path}: column {c} partition {p} TOC has "
                     f"{len(entries)} bitmaps, encoder needs {enc.L}")
             bms = []
-            for b, (off, n_words, crc) in enumerate(entries):
+            for b, entry in enumerate(entries):
+                off, n_words, crc = entry[:3]
+                tag = entry[3] if len(entry) > 3 else SEG_EWAH
                 end = off + 4 * n_words
                 if off < PAYLOAD_START or end > payload_end or off % 4:
                     raise StoreCorruptError(
@@ -295,7 +314,18 @@ def load(path: str, mmap: bool = True,
                     raise StoreCorruptError(
                         f"{path}: checksum mismatch in segment (col {c}, "
                         f"part {p}, bitmap {b})")
-                bms.append(EWAH(words, rows_part))
+                if tag == SEG_CONTAINERS:
+                    # array/dense payloads stay zero-copy views into the
+                    # mapped blob; run payloads decode lazily on first use
+                    from .containers import Containers
+                    bms.append(EWAH._from_containers(
+                        Containers.deserialize(words, rows_part), rows_part))
+                elif tag == SEG_EWAH:
+                    bms.append(EWAH(words, rows_part))
+                else:
+                    raise StoreVersionError(
+                        f"{path}: segment (col {c}, part {p}, bitmap {b}) "
+                        f"carries unknown container tag {tag}")
             parts.append(bms)
         columns.append(ColumnIndex(encoder=enc, bitmaps=parts))
     names = meta["column_names"]
@@ -394,10 +424,10 @@ def _read_manifest(dir_path: str) -> Dict:
     except ValueError as exc:
         raise StoreCorruptError(
             f"{manifest_path}: unparseable manifest: {exc}") from exc
-    if manifest.get("version") != VERSION:
+    if manifest.get("version") not in COMPAT_VERSIONS:
         raise StoreVersionError(
             f"{manifest_path}: manifest version {manifest.get('version')}, "
-            f"this build reads {VERSION}")
+            f"this build reads {sorted(COMPAT_VERSIONS)}")
     return manifest
 
 

@@ -59,6 +59,60 @@ def np_row_flags(words: np.ndarray, block_cols: int = 1024) -> np.ndarray:
                     np.where(all1, _wl.CLEAN1, _wl.DIRTY)).astype(np.int32)
 
 
+def container_row_flags(cont, padded_words: int,
+                        block_cols: int = 1024) -> np.ndarray:
+    """Per-block clean flags straight off a container chunk directory.
+
+    Equivalent to ``np_row_flags`` on the padded dense words, but EMPTY /
+    FULL chunks resolve from the directory alone and ARRAY chunks from a
+    position shift — only DENSE / RUN chunk payloads are scanned.  The
+    flags are exact (bit-identical to ``np_row_flags``), not merely
+    conservative, so kernel short-circuiting is equally effective.
+    """
+    from repro.core import containers as C  # lazy: avoid import cycle
+    if C.CHUNK_WORDS % block_cols:
+        return np_row_flags(_np_pad_words(C.containers_to_dense(cont),
+                                          padded_words), block_cols)
+    bpc = C.CHUNK_WORDS // block_cols          # blocks per chunk
+    bits_per_block = block_cols * 32
+    n_blocks = padded_words // block_cols
+    flags = np.full(n_blocks, _wl.CLEAN0, dtype=np.int32)
+    for i in range(cont.n_chunks):
+        t, _, payload = cont.chunk(i)
+        if t == C.T_EMPTY:
+            continue
+        b0, nw = i * bpc, cont.chunk_nw(i)
+        nb = -(-nw // block_cols)              # blocks this chunk spans
+        if t == C.T_FULL:
+            fb = nw // block_cols              # fully covered blocks
+            flags[b0:b0 + fb] = _wl.CLEAN1
+            if nw % block_cols:                # ragged tail: ones then pad
+                flags[b0 + fb] = _wl.DIRTY
+            continue
+        if t == C.T_ARRAY:
+            # a block holding any position is DIRTY (all-ones needs 32768
+            # positions, above any array cutoff); empty blocks stay CLEAN0
+            occupied = np.unique(np.asarray(payload).astype(np.int64)
+                                 // bits_per_block)
+            flags[b0 + occupied] = _wl.DIRTY
+            continue
+        w = C._to_chunk_words(t, payload, nw)
+        if nw % block_cols:
+            w = np.pad(w, (0, nb * block_cols - nw))
+        tw = w.reshape(nb, block_cols)
+        all0 = (tw == 0).all(axis=1)
+        all1 = (tw == _ALL_ONES).all(axis=1)
+        flags[b0:b0 + nb] = np.where(
+            all0, _wl.CLEAN0,
+            np.where(all1, _wl.CLEAN1, _wl.DIRTY)).astype(np.int32)
+    return flags
+
+
+def _np_pad_words(w: np.ndarray, padded_words: int) -> np.ndarray:
+    return np.pad(w, (0, padded_words - len(w))) \
+        if len(w) < padded_words else w
+
+
 def _combine_row_flags(rf: np.ndarray, block_rows: int) -> np.ndarray:
     """Conservatively merge (R, gc) per-row flags into (R/br, gc) tile flags
     (a tile mixing clean values — or any dirty row — is DIRTY)."""

@@ -24,7 +24,12 @@ Production-shaped serving on a dependency-free stack (stdlib ``http.server``
   build-once / serve-many flow.  ``POST /admin/reload`` re-stats the shard
   files and swaps in any that changed on disk (an atomically-replaced shard
   file from an out-of-band reindex), keeping the *other* shards' caches
-  warm.  Result-cache entries can also expire after ``--cache-ttl`` seconds
+  warm; ``--watch-interval N`` runs the same manifest/shard-fingerprint
+  check on a background poller so replaced files are picked up with no
+  admin call.  On a store directory, shard fan-out defaults to a
+  fork-based ``ShardProcessPool`` (workers mmap-open the shard files and
+  are pinned to the fork-safe EWAH backend); ``--shard-procs 0`` forces
+  the thread pool.  Result-cache entries can also expire after ``--cache-ttl`` seconds
   (lazily, on lookup), with hit/miss/expired counters in ``/stats``.
 * **Aggregation statements** — count / group-by / top-k evaluate *in the
   compressed domain* (memoized popcounts + interval intersection; sharded
@@ -90,7 +95,7 @@ from repro.core.dataset import top_k_from_counts
 from repro.core.expr import Expr, canonical_key, from_wire, to_wire
 from repro.core.executor import (execute, execute_count,
                                  execute_group_count)
-from repro.core.lru import LRUCache, payload_nbytes
+from repro.core.lru import LRUCache, payload_kind, payload_nbytes
 from repro.core.planner import explain, plan
 
 DEFAULT_CACHE_BYTES = 64 << 20  # total EWAH payload budget for the result LRU
@@ -164,15 +169,15 @@ class QueryService:
                  cache_entries: int = 256,
                  cache_bytes: Optional[int] = DEFAULT_CACHE_BYTES,
                  cache_ttl: Optional[float] = None,
-                 shard_processes: int = 0,
+                 shard_processes: Optional[int] = None,
                  index_dir: Optional[str] = None,
                  fingerprints: Optional[List[tuple]] = None):
         self.index = index
         self.backend = backend
         self.max_rows = max_rows  # cap rows per response, count is exact
         self.cache = LRUCache(capacity=cache_entries, max_bytes=cache_bytes,
-                              sizeof=payload_nbytes,
-                              ttl=cache_ttl)
+                              sizeof=payload_nbytes, ttl=cache_ttl,
+                              classify=payload_kind)
         self._generation = 0
         self.pool_workers = max(int(pool_workers), 1)
         self._pool = ThreadPoolExecutor(max_workers=self.pool_workers,
@@ -190,10 +195,24 @@ class QueryService:
         # shard fan-out pool: query workers wait on shard tasks, shard tasks
         # submit nothing, so the wait graph is acyclic (no pool deadlock).
         # ``shard_processes`` > 0 swaps in a fork-based ShardProcessPool so
-        # CPU-bound EWAH shard work runs beyond the GIL (EWAH backend only —
-        # a parent jax runtime is not fork-safe).
-        self.shard_processes = int(shard_processes)
+        # CPU-bound EWAH shard work runs beyond the GIL (the pool's worker
+        # initializer pins workers to the fork-safe EWAH backend); ``None``
+        # (the default) picks the process pool automatically for sharded
+        # indexes opened from a store directory — there the workers
+        # mmap-open the shard files themselves, so no fork-COW of the
+        # parent heap is involved — and a thread pool everywhere else.
+        # ``0`` forces the thread pool.
+        self.shard_processes = shard_processes if shard_processes is None \
+            else int(shard_processes)
         self._shard_pool = self._make_shard_pool()
+        # manifest fingerprint for the change watcher (None when not
+        # store-backed); shard-file prints live in ``_fingerprints``
+        self._manifest_print = self._manifest_fingerprint() \
+            if index_dir else None
+        self._reload_lock = threading.Lock()
+        self._watcher: Optional[threading.Thread] = None
+        self._watch_stop: Optional[threading.Event] = None
+        self._watch_interval = 0.0
         # live-ingest bookkeeping: the mutable layer is attached lazily on
         # the first mutation (or eagerly via enable_live/from_dir); the
         # service closes the WAL only if it created the layer itself
@@ -224,12 +243,23 @@ class QueryService:
             svc.enable_live()
         return svc
 
+    def _resolve_shard_processes(self) -> int:
+        if self.shard_processes is not None:
+            return self.shard_processes
+        import multiprocessing
+        if (self.index_dir is not None
+                and isinstance(self.index, ShardedIndex)
+                and "fork" in multiprocessing.get_all_start_methods()):
+            return os.cpu_count() or 2
+        return 0
+
     def _make_shard_pool(self):
-        if self.shard_processes > 0 and isinstance(self.index, ShardedIndex):
+        procs = self._resolve_shard_processes()
+        if procs > 0 and isinstance(self.index, ShardedIndex):
             from repro.core.shard import ShardProcessPool
             # with a store directory, workers mmap-open the shard files
             # themselves instead of depending on fork-COW of the parent heap
-            return ShardProcessPool(self.index, workers=self.shard_processes,
+            return ShardProcessPool(self.index, workers=procs,
                                     index_dir=self.index_dir)
         return ThreadPoolExecutor(max_workers=self.pool_workers,
                                   thread_name_prefix="shard")
@@ -284,9 +314,14 @@ class QueryService:
         Unchanged shards keep their objects *and* their warm shard-local
         result caches; a shard-count change falls back to a full
         ``set_index``.  Returns a summary for the ``/admin/reload`` caller.
+        Serialized against the background watcher by ``_reload_lock``.
         """
         if not self.index_dir:
             raise ValueError("service was not opened from an index dir")
+        with self._reload_lock:
+            return self._reload_locked(mmap)
+
+    def _reload_locked(self, mmap: bool = True) -> Dict:
         from repro.core.ingest import LiveIndex
         if isinstance(self.index, LiveIndex):
             # the live layer IS the source of truth here (it persisted the
@@ -316,10 +351,74 @@ class QueryService:
         return {"reloaded": changed, "full": False,
                 "n_shards": len(new_prints)}
 
+    # -- change watcher (auto /admin/reload) --------------------------------
+    def _manifest_fingerprint(self):
+        try:
+            st = os.stat(os.path.join(self.index_dir,
+                                      index_store.MANIFEST_NAME))
+        except OSError:
+            return None
+        return (st.st_mtime_ns, st.st_size)
+
+    def check_reload(self) -> Optional[Dict]:
+        """One watcher tick: stat the manifest and shard files, reload iff
+        anything changed since the last look.  Returns the reload summary,
+        or ``None`` when the directory is current (the common, cheap case —
+        a handful of ``stat`` calls, no file is opened).
+
+        The fingerprints are snapshotted *before* the reload: a rewrite
+        racing the reload just looks changed again on the next tick, never
+        silently current.
+        """
+        if not self.index_dir:
+            raise ValueError("service was not opened from an index dir")
+        mf = self._manifest_fingerprint()
+        try:
+            prints = index_store.shard_fingerprints(self.index_dir)
+        except index_store.StoreError:
+            return None  # mid-rewrite; the next tick sees the finished state
+        if mf == self._manifest_print and prints == (self._fingerprints or []):
+            return None
+        out = self.reload_from_dir()
+        self._manifest_print = mf
+        return out
+
+    def start_watcher(self, interval: float = 2.0) -> threading.Thread:
+        """Poll the store directory every ``interval`` seconds and pick up
+        atomically replaced shard files / manifests without an explicit
+        ``/admin/reload`` (idempotent; the thread is a daemon)."""
+        if not self.index_dir:
+            raise ValueError("service was not opened from an index dir")
+        if self._watcher is not None:
+            return self._watcher
+        self._watch_interval = float(interval)
+        self._watch_stop = threading.Event()
+        t = threading.Thread(target=self._watch_loop, daemon=True,
+                             name="reload-watch")
+        self._watcher = t
+        t.start()
+        return t
+
+    def _watch_loop(self) -> None:
+        while not self._watch_stop.wait(self._watch_interval):
+            try:
+                self.check_reload()
+            except Exception:
+                pass  # transient (mid-rewrite stat races); keep watching
+
+    def stop_watcher(self) -> None:
+        if self._watcher is None:
+            return
+        self._watch_stop.set()
+        self._watcher.join(timeout=5)
+        self._watcher = None
+        self._watch_stop = None
+
     def invalidate_cache(self) -> None:
         self.cache.clear()
 
     def close(self) -> None:
+        self.stop_watcher()
         if self._compactor is not None:
             self._compactor.stop()
             self._compactor = None
@@ -671,8 +770,14 @@ def main(argv=None):
                     help="result-cache byte budget in MiB (total EWAH bytes)")
     ap.add_argument("--cache-ttl", type=float, default=0,
                     help="result-cache entry TTL in seconds (0 = no expiry)")
-    ap.add_argument("--shard-procs", type=int, default=0,
-                    help="shard-parallel worker *processes* (0 = thread pool)")
+    ap.add_argument("--shard-procs", type=int, default=None,
+                    help="shard-parallel worker *processes* (0 = thread "
+                         "pool; default: processes when serving a store "
+                         "directory, threads otherwise)")
+    ap.add_argument("--watch-interval", type=float, default=0,
+                    help="poll the store directory every N seconds and "
+                         "auto-reload changed shard files (0 = off; "
+                         "needs --index-dir)")
     ap.add_argument("--index-dir", default=None,
                     help="warm start: serve a saved index store directory "
                          "(mmap'd; skips the demo build entirely)")
@@ -712,6 +817,8 @@ def main(argv=None):
         service.enable_live()
         service.start_compactor(interval=args.compact_interval,
                                 min_pending_rows=args.compact_rows)
+    if args.watch_interval and service.index_dir:
+        service.start_watcher(interval=args.watch_interval)
     idx = service.index
     srv = make_server(service, args.host, args.port)
     print(f"[query_api] {origin}; serving {idx.n_rows} rows on "

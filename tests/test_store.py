@@ -23,7 +23,7 @@ from repro.core import (BitmapIndex, IndexBuilder, ShardedIndex, SortStats,
 from repro.core.lru import LRUCache
 from repro.core.store import (MAGIC, PAYLOAD_START, StoreCorruptError,
                               StoreError, StoreVersionError, _PREAMBLE)
-from repro.serve.query_api import QueryService
+from repro.serve.query_api import QueryService, expr_to_json
 
 NAMES = ["region", "day", "user"]
 
@@ -474,6 +474,54 @@ def test_service_warm_start_and_reload(sharded_dir):
         assert out["reloaded"] == [0] and not out["full"]
         assert svc.query({"op": "eq", "col": "region", "value": 0})["count"] \
             >= 4096
+    finally:
+        svc.close()
+
+
+def test_service_watcher_picks_up_shard_swap(sharded_dir):
+    """The --watch-interval poller: an out-of-band shard-file replacement is
+    swapped in with no /admin/reload call, and the *sibling* shards'
+    local result caches stay warm across the swap."""
+    import time
+    table, cards, sh, d = sharded_dir
+    svc = QueryService.from_dir(d)
+    try:
+        e = (col("region") == 1) & (col("day") != 2)
+        svc.query(expr_to_json(e))  # prime every shard-local LRU
+        warm = [c["entries"] for c in svc.index.cache_stats()]
+        assert all(n > 0 for n in warm)
+        gen0 = svc.index.generation
+
+        variant = table[:4096].copy()
+        variant[:, 0] = 0
+        new_shard = IndexBuilder(cards, k=2, column_names=NAMES) \
+            .append(variant).finish()
+        write_shard_file(d, 0, new_shard)
+
+        svc.start_watcher(interval=0.05)
+        deadline = time.monotonic() + 15
+        while svc.index.generation == gen0 and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert svc.index.generation > gen0, "watcher never reloaded"
+        after = [c["entries"] for c in svc.index.cache_stats()]
+        assert after[0] == 0                      # swapped shard: cold
+        assert after[1:] == warm[1:]              # siblings: still warm
+        # the served answer reflects the replaced shard immediately
+        assert svc.query({"op": "eq", "col": "region",
+                          "value": 0})["count"] >= 4096
+        # idempotent + stoppable
+        svc.start_watcher(interval=0.05)
+        svc.stop_watcher()
+        assert svc._watcher is None
+    finally:
+        svc.close()
+
+
+def test_service_check_reload_noop_when_current(sharded_dir):
+    _, _, _, d = sharded_dir
+    svc = QueryService.from_dir(d)
+    try:
+        assert svc.check_reload() is None  # nothing changed: cheap no-op
     finally:
         svc.close()
 

@@ -1,0 +1,222 @@
+"""Cluster chaos benchmark: scatter/gather latency, hedge win rate,
+failover recovery time — every number gated on bit-exactness.
+
+Spins up the real multi-process topology (``repro.launch.cluster``: N
+worker processes mmap-serving shard subsets + an in-process coordinator)
+over a freshly built sharded store, then measures:
+
+* **scatter/gather latency** — p50/p95 of the count/group-by/top-k suite
+  fanned out over the workers, every answer asserted bit-identical to the
+  single-process ``ShardedIndex`` serving the same store.
+* **hedge win rate** — one worker delays every data response past the
+  hedge threshold (seeded ``FaultInjector``); the speculative replica
+  request must win often enough to keep answers exact with zero deadline
+  misses.
+* **corruption detection** — one worker bit-flips responses after the CRC
+  is computed; every corrupt frame must be detected and retried elsewhere
+  (any accepted corruption would break the bit-exact gate).
+* **recovery time** — SIGKILL one worker mid-serving and measure (a) time
+  to the first exact full-coverage answer (replica failover) and (b) time
+  until eviction + re-placement restore full replication, without
+  restarting the coordinator.
+
+Writes ``BENCH_cluster.json`` (uploaded as a CI artifact).
+
+    PYTHONPATH=src python benchmarks/bench_cluster.py [--tiny] \
+        [--out BENCH_cluster.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import ShardedIndex, col, lex_sort, synth
+from repro.distributed.cluster import Policy
+from repro.launch.cluster import LocalCluster
+from repro.serve.query_api import QueryService
+
+try:  # package-style and script-style execution both work
+    from .common import emit
+except ImportError:  # pragma: no cover
+    from common import emit
+
+BACKEND = "ewah"  # deterministic numeric path on every worker
+
+
+def _make_store(n: int, shards: int, d: str) -> ShardedIndex:
+    rng = np.random.default_rng(0)
+    table, _ = synth.factorize(synth.census_like_table(n, rng))
+    table = table[lex_sort(table)]
+    shard_rows = max(-(-n // shards) // 32 * 32, 32)
+    idx = ShardedIndex.build(table, shard_rows=shard_rows, k=2,
+                             column_names=["region", "day", "user"])
+    idx.save(d)
+    return idx
+
+
+def _suite():
+    # group/top-k run on "region" (card ~91): a group-by costs one EWAH
+    # merge per distinct value per shard, so cardinality — not row count —
+    # dominates, and the high-card "user" column would swamp the scatter
+    # latency this benchmark is measuring.
+    return [
+        ("count", col("region") == 3),
+        ("count", (col("region") == 2) & ~(col("day") == 1)),
+        ("group", col("user").isin([0, 3, 7])),
+        ("topk", (col("region") == 1) | (col("day") == 4)),
+    ]
+
+
+def _run_suite(svc, mono, clear_cache: bool = True):
+    """One pass over the suite; asserts bit-exactness, returns wall times."""
+    times = []
+    for kind, e in _suite():
+        if clear_cache:
+            svc.cache.clear()
+        t0 = time.perf_counter()
+        if kind == "count":
+            out = svc.count(e)
+            ref = mono.count(e)["count"]
+            assert out["count"] == ref, (out, ref)
+        elif kind == "group":
+            out = svc.group_count("region", e)
+            assert out["counts"] == mono.group_count("region", e)["counts"]
+        else:
+            out = svc.top_k("region", 5, e)
+            assert out["top"] == mono.top_k("region", 5, e)["top"]
+        times.append(time.perf_counter() - t0)
+        assert out["exact"], f"degraded answer in healthy phase: {out}"
+    return times
+
+
+def run(n: int = 200_000, shards: int = 8, n_workers: int = 3,
+        repeats: int = 10, out_path: str = "BENCH_cluster.json") -> dict:
+    results: dict = {"n_rows": n, "n_shards_requested": shards,
+                     "n_workers": n_workers, "replication": 2}
+    with tempfile.TemporaryDirectory() as tmp:
+        d = os.path.join(tmp, "store")
+        idx = _make_store(n, shards, d)
+        results["n_shards"] = idx.n_shards
+        mono = QueryService(ShardedIndex.load(d, mmap=True), backend=BACKEND)
+
+        # group-by scatter tasks cost ~cardinality EWAH merges per shard,
+        # so give them a batch-analytics deadline rather than the 2s
+        # point-lookup default; hedge only after a real stall.
+        policy = Policy(deadline_s=15.0, retries=2, backoff_s=0.05,
+                        hedge_min_s=0.1, probe_interval_s=0.5)
+        with LocalCluster(d, n_workers=n_workers, replication=2,
+                          backend=BACKEND, policy=policy) as cluster:
+            svc = cluster.service
+
+            # -- healthy scatter/gather latency --------------------------
+            lat = []
+            for _ in range(repeats):
+                lat.extend(_run_suite(svc, mono))
+            lat_us = np.array(lat) * 1e6
+            results["scatter_gather"] = {
+                "queries": len(lat),
+                "p50_us": round(float(np.percentile(lat_us, 50)), 1),
+                "p95_us": round(float(np.percentile(lat_us, 95)), 1),
+            }
+            emit("cluster_scatter_p50", float(np.percentile(lat_us, 50)),
+                 f"{idx.n_shards}shards_x{n_workers}workers")
+
+            # -- hedged requests under a slow worker ---------------------
+            c0 = dict(svc.stats()["counters"])
+            hedge_delay = max(svc._hedge_delay() * 3, 0.05)
+            cluster.set_fault(1, {"seed": 11, "delay": 1.0,
+                                  "delay_s": hedge_delay})
+            for _ in range(repeats):
+                _run_suite(svc, mono)
+            cluster.set_fault(1, None)
+            c1 = dict(svc.stats()["counters"])
+            hedges = c1["hedges"] - c0["hedges"]
+            wins = c1["hedge_wins"] - c0["hedge_wins"]
+            results["hedging"] = {
+                "delay_s": round(hedge_delay, 4),
+                "hedges": hedges,
+                "hedge_wins": wins,
+                "win_rate": round(wins / hedges, 3) if hedges else None,
+            }
+            emit("cluster_hedge_win_rate",
+                 100.0 * wins / hedges if hedges else 0.0,
+                 f"{wins}_of_{hedges}")
+            assert hedges > 0, "slow worker never triggered a hedge"
+            assert wins > 0, "hedged requests never won against the delay"
+
+            # -- corrupt responses must be detected, never merged --------
+            cluster.set_fault(0, {"seed": 13, "corrupt": 0.5})
+            for _ in range(max(repeats // 2, 2)):
+                _run_suite(svc, mono)
+            cluster.set_fault(0, None)
+            c2 = dict(svc.stats()["counters"])
+            results["corruption"] = {
+                "failures_seen": c2["failures"] - c1["failures"],
+                "failovers": c2["failovers"] - c1["failovers"],
+            }
+            assert c2["failures"] > c1["failures"], \
+                "corrupt injection produced no detected failures"
+
+            # -- SIGKILL recovery ----------------------------------------
+            victim = 2
+            victim_shards = [s for s, reps in enumerate(svc.placement)
+                             if victim in reps]
+            t_kill = time.perf_counter()
+            cluster.kill_worker(victim)
+            svc.cache.clear()
+            first = _run_suite(svc, mono)  # asserts exact: replicas answer
+            t_first = time.perf_counter() - t_kill
+            # drive probes until eviction + re-placement finish
+            deadline = time.perf_counter() + 30
+            while True:
+                svc.probe_all()
+                stats = svc.stats()
+                live = {w for w in range(n_workers)
+                        if stats["workers"][w]["up"]}
+                if victim not in live and all(
+                        len([w for w in reps if w in live]) >= 2
+                        for reps in stats["placement"]):
+                    break
+                assert time.perf_counter() < deadline, "re-placement stalled"
+                time.sleep(0.02)
+            t_replaced = time.perf_counter() - t_kill
+            svc.cache.clear()
+            _run_suite(svc, mono)  # killed worker's shards re-served
+            results["recovery"] = {
+                "victim_shards": victim_shards,
+                "first_exact_answer_s": round(t_first, 4),
+                "replication_restored_s": round(t_replaced, 4),
+                "evictions": stats["counters"]["evictions"],
+                "replacements": stats["counters"]["replacements"],
+            }
+            emit("cluster_recovery_ms", t_replaced * 1e3,
+                 f"first_answer_{t_first * 1e3:.0f}ms")
+            assert stats["counters"]["evictions"] >= 1
+            assert first, "no queries completed after the kill"
+            results["counters"] = stats["counters"]
+
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_path}", flush=True)
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized run (fewer rows and repeats)")
+    ap.add_argument("--out", default="BENCH_cluster.json")
+    args = ap.parse_args(argv)
+    if args.tiny:
+        run(n=30_000, shards=6, repeats=4, out_path=args.out)
+    else:
+        run(out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

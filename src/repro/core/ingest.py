@@ -172,14 +172,18 @@ class LiveIndex:
     """
 
     def __init__(self, base, dir_path: Optional[str] = None,
-                 wal_path: Optional[str] = None, sync: bool = True,
+                 wal_path: Optional[str] = None, fsync: bool = False,
+                 sync: Optional[bool] = None,
                  recipe: Optional[Dict] = None,
                  delta_partition_rows: int = DELTA_PARTITION_ROWS):
         if isinstance(base, BitmapIndex):
             base = ShardedIndex([base])
         self.base = base
         self.dir_path = dir_path
-        self.sync = bool(sync)
+        # WAL durability knob (see repro.core.wal.WAL): default off — frames
+        # flush to the page cache per append, fsync=True gates every
+        # acknowledgement on stable storage.  ``sync=`` is the legacy alias.
+        self.sync = bool(fsync if sync is None else sync)
         self.cards = [base.card(c) for c in range(base.n_columns)]
         self.column_names = base.column_names
         meta: Dict = {}
@@ -212,7 +216,7 @@ class LiveIndex:
                 dir_path, meta.get("wal") or f"wal-{self.epoch:05d}.log")
         self.wal: Optional[walmod.WAL] = None
         if wal_path is not None:
-            self.wal = walmod.WAL(wal_path, sync=self.sync)
+            self.wal = walmod.WAL(wal_path, fsync=self.sync)
             if self.wal.n_frames == 0:
                 self.wal.log_epoch(self.epoch)
             else:
@@ -562,30 +566,45 @@ class LiveIndex:
             old_wal = self.wal
             new_wal = None
             wal_name = None
-            if self.wal is not None:
+            try:
+                if self.wal is not None:
+                    if self.dir_path is not None:
+                        wal_name = f"wal-{new_epoch:05d}.log"
+                        new_wal_path = os.path.join(self.dir_path, wal_name)
+                    else:
+                        new_wal_path = self.wal.path + ".next"
+                    new_wal = walmod.WAL(new_wal_path, fsync=self.sync)
+                    new_wal.log_epoch(new_epoch)
+                    for kind, payload in tail:
+                        new_wal.log(kind, payload)
                 if self.dir_path is not None:
-                    wal_name = f"wal-{new_epoch:05d}.log"
-                    new_wal_path = os.path.join(self.dir_path, wal_name)
-                else:
-                    new_wal_path = self.wal.path + ".next"
-                new_wal = walmod.WAL(new_wal_path, sync=self.sync)
-                new_wal.log_epoch(new_epoch)
-                for kind, payload in tail:
-                    new_wal.log(kind, payload)
-            if self.dir_path is not None:
-                old_names = [f[0] for f in
-                             store.shard_fingerprints(self.dir_path)]
-                meta = {
-                    "sort_order": self.recipe.get("sort_order"),
-                    "cards": self.recipe.get("cards") or self.cards,
-                    "k": self.recipe.get("k", 1),
-                    "allocation": self.recipe.get("allocation", "alpha"),
-                    "epoch": new_epoch,
-                    "wal": wal_name,
-                }
-                # shard files first, manifest last: the rename IS the cutover
-                store.save_sharded(new_base, self.dir_path, meta=meta,
-                                   prefix=f"e{new_epoch:05d}-")
+                    old_names = [f[0] for f in
+                                 store.shard_fingerprints(self.dir_path)]
+                    meta = {
+                        "sort_order": self.recipe.get("sort_order"),
+                        "cards": self.recipe.get("cards") or self.cards,
+                        "k": self.recipe.get("k", 1),
+                        "allocation": self.recipe.get("allocation", "alpha"),
+                        "epoch": new_epoch,
+                        "wal": wal_name,
+                    }
+                    # shard files first, manifest last: the rename IS the
+                    # cutover
+                    store.save_sharded(new_base, self.dir_path, meta=meta,
+                                       prefix=f"e{new_epoch:05d}-")
+            except BaseException:
+                # a failed compaction leaves the old manifest + old WAL as
+                # the live truth; the half-built next-epoch log must be
+                # retired too, or a retry would append its epoch frame and
+                # tail AFTER this attempt's stale copies — replay after the
+                # retry's cutover would then double-apply the tail
+                if new_wal is not None:
+                    new_wal.close()
+                    try:
+                        os.unlink(new_wal.path)
+                    except OSError:
+                        pass
+                raise
             # swap under the lock: concurrent readers snapshot either the
             # whole old stack or the whole new one
             self.base = new_base

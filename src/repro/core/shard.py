@@ -524,24 +524,22 @@ def _fork_index(pool_key: int) -> "ShardedIndex":
     return idx
 
 
-def _forked_run(args):
-    """Worker-side shard statement execution (operand caches per worker).
+def run_shard_task(sh: BitmapIndex, task, backend: str = "auto",
+                   optimize: bool = True, cache: Optional[Dict] = None):
+    """Execute one shard *statement task* against one shard.
 
     ``task`` mirrors the coordinator's statement kinds: ``("expr", e)``
     returns the shard's EWAH result, ``("count", e)`` its partial count and
     ``("gcount", col, e)`` its partial per-value count vector — aggregates
-    ship a few integers across the process boundary instead of a bitmap.
+    ship a few integers across a process or network boundary instead of a
+    bitmap.  This is the single shard-side execution path shared by the
+    fork-based ``ShardProcessPool`` and the RPC worker tier
+    (``repro.serve.worker_api``), so a remote worker computes exactly what
+    the single-process ``ShardedIndex`` fan-out would.
     """
     from .executor import Executor
     from .planner import Planner, plan
-    pool_key, shard_i, task, backend, optimize = args
-    backend = _guard_backend(backend)
     kind = task[0]
-    if kind == "probe":
-        return {"pid": os.getpid(), "fork_worker": _IN_FORK_WORKER,
-                "backend": backend}
-    sh = _fork_index(pool_key).shards[shard_i]
-    cache = _FORK_CACHES.setdefault((pool_key, shard_i), {})
     ex = Executor(sh, backend=backend, cache=cache)
     if kind == "expr":
         e = task[1]
@@ -553,6 +551,19 @@ def _forked_run(args):
         return ex.run_group_count(
             Planner(sh, optimize=optimize).plan_group_count(task[1], task[2]))
     raise ValueError(f"unknown shard task {kind!r}")
+
+
+def _forked_run(args):
+    """Worker-side shard statement execution (operand caches per worker)."""
+    pool_key, shard_i, task, backend, optimize = args
+    backend = _guard_backend(backend)
+    if task[0] == "probe":
+        return {"pid": os.getpid(), "fork_worker": _IN_FORK_WORKER,
+                "backend": backend}
+    sh = _fork_index(pool_key).shards[shard_i]
+    cache = _FORK_CACHES.setdefault((pool_key, shard_i), {})
+    return run_shard_task(sh, task, backend=backend, optimize=optimize,
+                          cache=cache)
 
 
 class ShardProcessPool:

@@ -141,14 +141,31 @@ class WAL:
 
     Opening an existing file replays it (``self.replayed`` holds the valid
     frames for the caller to apply) and truncates any torn tail so appended
-    frames extend acknowledged history.  ``sync=True`` (default) fsyncs
-    after every frame — durability before acknowledgement; tests and bulk
-    loads can trade that off.
+    frames extend acknowledged history.
+
+    **Durability knob** — ``fsync`` controls whether every frame append is
+    followed by ``os.fsync`` (default off):
+
+    * ``fsync=False`` (default): frames are flushed to the OS page cache on
+      every append.  A crashed *process* replays every acknowledged frame
+      (the kernel owns the bytes); an ill-timed *power loss or kernel
+      panic* may lose the last few frames — replay still lands on a
+      consistent earlier state because the CRC framing truncates the torn
+      tail.  This is the throughput mode: ingest-while-serving appends cost
+      a memcpy, not a disk round trip.
+    * ``fsync=True``: durability before acknowledgement — every frame hits
+      stable storage before ``log`` returns.  Appends are gated on device
+      flush latency (typically 100x slower on commodity SSDs), which is the
+      right trade only when an acknowledged write must survive power loss.
+
+    ``sync=`` is accepted as a backward-compatible alias and wins when
+    given explicitly.
     """
 
-    def __init__(self, path: str, sync: bool = True):
+    def __init__(self, path: str, fsync: bool = False,
+                 sync: "bool | None" = None):
         self.path = path
-        self.sync = sync
+        self.sync = bool(fsync if sync is None else sync)
         if os.path.exists(path):
             self.replayed, valid = replay(path)
             self._f = open(path, "r+b")

@@ -1,1 +1,18 @@
-from . import sharding
+"""Distributed layer: mesh sharding rules for the model stack and the
+bitmap-index scatter/gather serving tier.
+
+Submodules import lazily — ``sharding``/``checkpoint``/``fault_tolerance``
+pull in jax, while ``wire``/``cluster`` are stdlib+NumPy only so cluster
+workers and the coordinator start without paying the jax import."""
+
+_LAZY = ("sharding", "checkpoint", "fault_tolerance", "grad_compression",
+         "wire", "cluster")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f".{name}", __name__)
+        globals()[name] = mod
+        return mod
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

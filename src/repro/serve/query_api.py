@@ -647,9 +647,39 @@ class QueryService:
             out["shard_caches"] = sharded.cache_stats()
         return out
 
+    def scrub(self) -> Dict:
+        """Full-CRC audit of the backing store directory.
+
+        Reads every TOC segment through a fresh read-only memmap, so it is
+        safe to run against files this service is concurrently serving
+        mmap'd — no lock, no cache invalidation, no interference.  Corrupt
+        segments are reported per shard, never raised (``ok`` flags the
+        aggregate verdict)."""
+        if not self.index_dir:
+            raise ValueError("scrub needs a store directory "
+                             "(serve with --index-dir / --save-index)")
+        return index_store.scrub_sharded(self.index_dir)
+
+
+class _HTTPError(Exception):
+    """Request rejected before (or instead of) reaching the service.
+
+    Carries an HTTP status plus a stable machine-readable ``code`` so
+    clients can branch on the *kind* of rejection without parsing prose:
+    ``bad_json`` (unparseable body), ``bad_request`` (parseable but
+    invalid — wrong shape, unknown statement kind, bad expression),
+    ``too_large`` (body over the ``--max-body-bytes`` cap → 413),
+    ``not_found`` (unknown route)."""
+
+    def __init__(self, status: int, code: str, msg):
+        super().__init__(str(msg))
+        self.status = int(status)
+        self.code = code
+
 
 class _Handler(BaseHTTPRequestHandler):
     service: QueryService  # set by make_server
+    max_body_bytes: Optional[int] = None  # set by make_server
 
     def _send(self, code: int, payload: Dict):
         body = json.dumps(payload).encode()
@@ -659,19 +689,54 @@ class _Handler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(body)
 
+    def _fail(self, exc: _HTTPError):
+        self._send(exc.status, {"error": str(exc), "code": exc.code})
+
     def do_GET(self):
         if self.path == "/healthz":
             self._send(200, {"ok": True})
         elif self.path == "/stats":
             self._send(200, self.service.stats())
         else:
-            self._send(404, {"error": f"unknown path {self.path}"})
+            self._fail(_HTTPError(404, "not_found",
+                                  f"unknown path {self.path}"))
 
     def _body(self) -> Dict:
-        n = int(self.headers.get("Content-Length", 0))
-        return json.loads(self.rfile.read(n) or b"{}")
+        """Read + parse the request body under the hardening rules: the
+        byte cap is enforced on the declared length *before reading*, the
+        JSON must parse, and the top level must be an object."""
+        try:
+            n = int(self.headers.get("Content-Length", 0) or 0)
+        except (TypeError, ValueError):
+            raise _HTTPError(400, "bad_request", "invalid Content-Length")
+        cap = self.max_body_bytes
+        if cap is not None and n > cap:
+            raise _HTTPError(413, "too_large",
+                             f"request body is {n} bytes; this server "
+                             f"accepts at most {cap}")
+        try:
+            obj = json.loads(self.rfile.read(n) or b"{}")
+        except json.JSONDecodeError as exc:
+            raise _HTTPError(400, "bad_json", f"malformed JSON body: {exc}")
+        if not isinstance(obj, dict):
+            raise _HTTPError(400, "bad_request",
+                             "body must be a JSON object, got "
+                             f"{type(obj).__name__}")
+        return obj
 
     def do_POST(self):
+        try:
+            self._post()
+        except _HTTPError as exc:
+            self._fail(exc)
+        except (ValueError, KeyError, TypeError) as exc:
+            # service-level rejection (unknown statement kind, bad column,
+            # malformed expression...).  KeyError's str() wraps its message
+            # in quotes; unwrap it.
+            msg = exc.args[0] if exc.args else str(exc)
+            self._fail(_HTTPError(400, "bad_request", msg))
+
+    def _post(self):
         if self.path == "/admin/invalidate":
             self.service.invalidate_cache()
             self._send(200, {"ok": True})
@@ -679,61 +744,65 @@ class _Handler(BaseHTTPRequestHandler):
         if self.path == "/admin/reload":
             try:
                 out = self.service.reload_from_dir()
-            except (ValueError, index_store.StoreError) as exc:
-                self._send(400, {"error": str(exc)})
-                return
+            except index_store.StoreError as exc:
+                raise _HTTPError(400, "bad_request", exc)
             out["ok"] = True
             self._send(200, out)
             return
-        if self.path in ("/ingest", "/delete", "/admin/compact"):
-            try:
-                if self.path == "/ingest":
-                    out = self.service.ingest(self._body().get("rows"))
-                elif self.path == "/delete":
-                    out = self.service.delete(self._body().get("where"))
-                else:
-                    out = self.service.compact()
-                self._send(200, out)
-            except (ValueError, KeyError, TypeError) as exc:
-                msg = exc.args[0] if exc.args else str(exc)
-                self._send(400, {"error": str(msg)})
+        if self.path == "/admin/scrub":
+            # corruption is *reported*, not fatal: a store with bad
+            # segments still answers 200 with ok=false + the per-shard list
+            self._send(200, self.service.scrub())
+            return
+        if self.path == "/ingest":
+            self._send(200, self.service.ingest(self._body().get("rows")))
+            return
+        if self.path == "/delete":
+            self._send(200, self.service.delete(self._body().get("where")))
+            return
+        if self.path == "/admin/compact":
+            self._send(200, self.service.compact())
             return
         if self.path != "/query":
-            self._send(404, {"error": f"unknown path {self.path}"})
-            return
-        try:
-            n = int(self.headers.get("Content-Length", 0))
-            req = json.loads(self.rfile.read(n) or b"{}")
-            if "select" in req:
-                self._send(200, self.service.statement(req))
-            elif "queries" in req:
-                self._send(200, {"results":
-                                 self.service.query_batch(req["queries"])})
-            elif "query" in req:
-                self._send(200, self.service.query(
-                    req["query"], explain_plan=bool(req.get("explain"))))
-            else:
-                self._send(400, {"error":
-                                 "body needs 'query', 'queries' or 'select'"})
-        except (ValueError, KeyError, TypeError) as exc:
-            # KeyError's str() wraps its message in quotes; unwrap it
-            msg = exc.args[0] if exc.args else str(exc)
-            self._send(400, {"error": str(msg)})
+            raise _HTTPError(404, "not_found", f"unknown path {self.path}")
+        req = self._body()
+        if "select" in req:
+            self._send(200, self.service.statement(req))
+        elif "queries" in req:
+            if not isinstance(req["queries"], list):
+                raise _HTTPError(400, "bad_request",
+                                 "'queries' must be a list of expressions")
+            self._send(200, {"results":
+                             self.service.query_batch(req["queries"])})
+        elif "query" in req:
+            self._send(200, self.service.query(
+                req["query"], explain_plan=bool(req.get("explain"))))
+        else:
+            raise _HTTPError(400, "bad_request",
+                             "body needs 'query', 'queries' or 'select'")
 
     def log_message(self, *args):  # quiet by default
         pass
 
 
 def make_server(service: QueryService, host: str = "127.0.0.1",
-                port: int = 8321) -> ThreadingHTTPServer:
-    handler = type("BoundHandler", (_Handler,), {"service": service})
+                port: int = 8321,
+                max_body_bytes: Optional[int] = None) -> ThreadingHTTPServer:
+    """HTTP front end for a ``QueryService`` — or anything statement-
+    compatible with one (``repro.distributed.cluster.ClusterService``
+    mounts here unchanged).  ``max_body_bytes`` caps accepted request
+    bodies (413 + code ``too_large`` beyond it); coordinator and worker
+    endpoints share one cap so an oversized statement is rejected at
+    whichever tier sees it first."""
+    handler = type("BoundHandler", (_Handler,),
+                   {"service": service, "max_body_bytes": max_body_bytes})
     return ThreadingHTTPServer((host, port), handler)
 
 
 def serve_in_thread(service: QueryService, host: str = "127.0.0.1",
-                    port: int = 0):
+                    port: int = 0, max_body_bytes: Optional[int] = None):
     """Start the server on a daemon thread; returns (server, port)."""
-    srv = make_server(service, host, port)
+    srv = make_server(service, host, port, max_body_bytes=max_body_bytes)
     t = threading.Thread(target=srv.serve_forever, daemon=True)
     t.start()
     return srv, srv.server_address[1]
@@ -791,6 +860,10 @@ def main(argv=None):
                     help="background compaction check period in seconds")
     ap.add_argument("--compact-rows", type=int, default=10_000,
                     help="pending mutation rows that trigger a compaction")
+    ap.add_argument("--max-body-bytes", type=int, default=None,
+                    help="largest accepted HTTP request body in bytes "
+                         "(413 + code 'too_large' beyond it; default "
+                         "unlimited)")
     args = ap.parse_args(argv)
     kw = dict(backend=args.backend, pool_workers=args.workers,
               cache_entries=args.cache,
@@ -820,7 +893,8 @@ def main(argv=None):
     if args.watch_interval and service.index_dir:
         service.start_watcher(interval=args.watch_interval)
     idx = service.index
-    srv = make_server(service, args.host, args.port)
+    srv = make_server(service, args.host, args.port,
+                      max_body_bytes=args.max_body_bytes)
     print(f"[query_api] {origin}; serving {idx.n_rows} rows on "
           f"http://{args.host}:{srv.server_address[1]} "
           f"(backend={args.backend}, "

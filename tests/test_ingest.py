@@ -4,6 +4,7 @@ NumPy row oracle, compaction, and concurrent HTTP mutation."""
 import json
 import os
 import threading
+import time
 import urllib.error
 import urllib.request
 
@@ -557,3 +558,146 @@ def test_dataset_live_facade(tmp_path):
     assert isinstance(ds2.index, LiveIndex)
     assert ds2.query().where(col("user") == 4).count() == want
     ds2.index.close()
+
+
+# -- durability knob ----------------------------------------------------------
+
+def test_wal_fsync_knob(tmp_path, monkeypatch):
+    """``fsync`` gates the per-frame ``os.fsync``; default stays off (page-
+    cache flush only) and the legacy ``sync=`` alias wins when given."""
+    calls = []
+    real_fsync = os.fsync
+    monkeypatch.setattr(os, "fsync", lambda fd: (calls.append(fd),
+                                                 real_fsync(fd))[1])
+    p = str(tmp_path / "durable.log")
+    w = walmod.WAL(p)
+    assert w.sync is False
+    w.log_epoch(1)
+    w.log_append(np.zeros((2, 3), dtype=np.int64))
+    assert calls == []  # throughput mode: no disk barrier per append
+    w.close()
+
+    w = walmod.WAL(p, fsync=True)
+    assert w.sync is True
+    n0 = len(calls)
+    w.log_append(np.ones((1, 3), dtype=np.int64))
+    w.log_delete(col(0) == 1)
+    assert len(calls) == n0 + 2  # one barrier per acknowledged frame
+    w.close()
+
+    # both modes replay identically
+    frames, _ = walmod.replay(p)
+    assert [k for k, _ in frames] == [walmod.KIND_EPOCH, walmod.KIND_APPEND,
+                                      walmod.KIND_APPEND, walmod.KIND_DELETE]
+
+    # alias compatibility: explicit sync= wins over fsync=
+    assert walmod.WAL(p, fsync=True, sync=False).sync is False
+    assert walmod.WAL(p, sync=True).sync is True
+
+
+def test_live_index_fsync_plumbs_through(tmp_path):
+    _, base = make_base(seed=21)
+    live = LiveIndex(base, wal_path=str(tmp_path / "w.log"), fsync=True)
+    assert live.sync is True and live.wal.sync is True
+    live.close()
+    live = LiveIndex(base, wal_path=str(tmp_path / "w2.log"))
+    assert live.sync is False and live.wal.sync is False
+    live.close()
+
+
+# -- compaction error path ----------------------------------------------------
+
+def _store_backed_live(tmp_path, seed=22):
+    rng = np.random.default_rng(seed)
+    d = str(tmp_path / "cidx")
+    table, base = make_base(seed=seed)
+    store.save_sharded(base, d, meta={"cards": CARDS, "k": 1,
+                                      "allocation": "alpha"})
+    live = LiveIndex(store.load_sharded(d), dir_path=d, sync=False)
+    live.append(make_table(80, rng))
+    live.delete(col("day") == 1)
+    return d, live, rng
+
+
+def test_failed_compaction_leaves_state_untouched(tmp_path, monkeypatch):
+    """An injected store-write failure mid-compaction must not move the
+    manifest, the WAL, or any serving result — and the next compact()
+    (store healed) succeeds from exactly that state."""
+    d, live, rng = _store_backed_live(tmp_path)
+    probe = (col("region") == 3) | ~(col("user") == 0)
+    want_n = live.count(probe)
+    want_g = live.group_count("day", probe)
+    want_rows = live.n_rows
+    with open(os.path.join(d, store.MANIFEST_NAME), "rb") as f:
+        manifest_before = f.read()
+    wal_path, wal_frames = live.wal.path, live.wal.n_frames
+    epoch_before = live.epoch
+
+    def boom(*a, **kw):
+        raise OSError("disk full (injected)")
+
+    monkeypatch.setattr(store, "save_sharded", boom)
+    with pytest.raises(OSError, match="injected"):
+        live.compact()
+
+    # the old stack is still the live truth, bit for bit
+    assert live.epoch == epoch_before
+    assert live.wal.path == wal_path and live.wal.n_frames == wal_frames
+    with open(os.path.join(d, store.MANIFEST_NAME), "rb") as f:
+        assert f.read() == manifest_before
+    assert live.count(probe) == want_n
+    assert np.array_equal(live.group_count("day", probe), want_g)
+    # the half-built next-epoch WAL was retired: a crashed attempt leaves
+    # no file a retry (or a warm start) could double-replay
+    assert not [n for n in os.listdir(d)
+                if n.startswith("wal-") and
+                os.path.join(d, n) != wal_path]
+    # mutations keep landing against the old stack
+    live.append(make_table(5, rng))
+    assert live.n_rows == want_rows + 5
+
+    # heal the store: the retry compacts the accumulated state
+    monkeypatch.undo()
+    info = live.compact()
+    assert info["epoch"] == epoch_before + 1
+    assert live.count(probe) == live.count(probe)  # serving still coherent
+    recovered = LiveIndex(store.load_sharded(d), dir_path=d, sync=False)
+    assert recovered.n_rows == live.n_rows
+    assert recovered.count(probe) == live.count(probe)
+    live.close()
+    recovered.close()
+
+
+def test_compactor_records_error_and_retries(tmp_path, monkeypatch):
+    """The background compactor survives a failing compact(): the error is
+    surfaced via stats(), the thread stays alive, and the next cycle
+    retries and drains the debt once the fault clears."""
+    d, live, _rng = _store_backed_live(tmp_path, seed=23)
+    fail = {"on": True}
+    real = store.save_sharded
+
+    def flaky(*a, **kw):
+        if fail["on"]:
+            raise OSError("injected store failure")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(store, "save_sharded", flaky)
+    comp = Compactor(live, interval=0.02, min_pending_rows=1)
+    fired = threading.Event()
+    comp.on_compact = lambda info: fired.set()
+    comp.start()
+    try:
+        deadline = time.monotonic() + 10
+        while comp.stats()["last_error"] is None:
+            assert time.monotonic() < deadline, "error never surfaced"
+            time.sleep(0.01)
+        st = comp.stats()
+        assert "injected store failure" in st["last_error"]
+        assert st["alive"] and st["runs"] == 0
+        assert live.compactions == 0  # nothing half-applied
+        fail["on"] = False
+        assert fired.wait(10.0), "retry never succeeded"
+        assert live.compactions >= 1 and live.pending_rows == 0
+    finally:
+        comp.stop()
+        live.close()

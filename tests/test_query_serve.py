@@ -185,3 +185,81 @@ def test_http_endpoint(setup):
             assert err.code == 400
     finally:
         srv.shutdown()
+
+
+# -- hardened HTTP error surface ---------------------------------------------
+
+def _raw_post(base, path, data, headers=None):
+    import urllib.error
+    req = urllib.request.Request(f"{base}{path}", data=data,
+                                 headers=headers or {})
+    try:
+        with urllib.request.urlopen(req) as resp:
+            return resp.status, json.loads(resp.read())
+    except urllib.error.HTTPError as err:
+        return err.code, json.loads(err.read())
+
+
+def test_http_structured_errors(setup):
+    """Malformed JSON, wrong body shapes, unknown statements and unknown
+    routes each answer a structured error with a stable machine-readable
+    code — never a stack trace, never a 500."""
+    _table, _idx, svc = setup
+    srv, port = serve_in_thread(svc)
+    base = f"http://127.0.0.1:{port}"
+    try:
+        code, out = _raw_post(base, "/query", b"{not json")
+        assert code == 400 and out["code"] == "bad_json"
+        assert "error" in out
+
+        code, out = _raw_post(base, "/query", b"[1, 2, 3]")
+        assert code == 400 and out["code"] == "bad_request"
+
+        code, out = _raw_post(base, "/query", b'"just a string"')
+        assert code == 400 and out["code"] == "bad_request"
+
+        code, out = _raw_post(base, "/query",
+                              json.dumps({"queries": {"op": "eq"}}).encode())
+        assert code == 400 and out["code"] == "bad_request"
+        assert "list" in out["error"]
+
+        code, out = _raw_post(base, "/query", json.dumps(
+            {"select": {"frobnicate": True}}).encode())
+        assert code == 400 and out["code"] == "bad_request"
+
+        code, out = _raw_post(base, "/query", json.dumps(
+            {"neither": "shape"}).encode())
+        assert code == 400 and out["code"] == "bad_request"
+
+        code, out = _raw_post(base, "/nope", b"{}")
+        assert code == 404 and out["code"] == "not_found"
+
+        # an in-memory service has no store directory to scrub
+        code, out = _raw_post(base, "/admin/scrub", b"{}")
+        assert code == 400 and out["code"] == "bad_request"
+
+        # a valid query still works after all that abuse
+        code, out = _raw_post(base, "/query", json.dumps(
+            {"select": {"count": True}}).encode())
+        assert code == 200 and out["count"] == svc.index.n_rows
+    finally:
+        srv.shutdown()
+
+
+def test_http_max_body_bytes(setup):
+    """Bodies over the shared --max-body-bytes cap are refused with 413 +
+    code too_large — before the body is read or parsed."""
+    _table, _idx, svc = setup
+    srv, port = serve_in_thread(svc, max_body_bytes=512)
+    base = f"http://127.0.0.1:{port}"
+    try:
+        big = json.dumps({"query": expr_to_json(col(0) == 0),
+                          "pad": "x" * 2048}).encode()
+        code, out = _raw_post(base, "/query", big)
+        assert code == 413 and out["code"] == "too_large"
+
+        small = json.dumps({"select": {"count": True}}).encode()
+        code, out = _raw_post(base, "/query", small)
+        assert code == 200 and out["count"] == svc.index.n_rows
+    finally:
+        srv.shutdown()

@@ -8,13 +8,18 @@ paper's §4.3 closing remark, made executable) matches or beats both.
 """
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
 from repro.core import (BitmapIndex, lex_sort, order_columns,
                         order_columns_freq_aware, random_shuffle)
 from repro.core import synth
 
-from .common import emit, time_call
+try:  # package-style and script-style execution both work
+    from .common import emit, time_call
+except ImportError:  # pragma: no cover
+    from common import emit, time_call
 
 
 def _sizes(table, cards, k, order=None, shuffle_rng=None):
@@ -26,15 +31,15 @@ def _sizes(table, cards, k, order=None, shuffle_rng=None):
     return idx.words_per_column(), idx.size_words
 
 
-def _dataset(name: str, rng):
+def _dataset(name: str, rng, scale: float = 1.0):
     if name == "census_like":  # d3 cardinality ~ n/2 (DBLP/census regime)
-        t = synth.census_like_table(30_000, rng)
+        t = synth.census_like_table(int(30_000 * scale), rng)
     elif name == "dbgen_like":  # big column still repeats often
-        n = 30_000
+        n = int(30_000 * scale)
         t = np.stack([rng.integers(0, 7, n), rng.integers(0, 11, n),
                       rng.integers(0, 400, n)], axis=1)
     else:  # netflix_like: tiny cards vs n
-        n = 60_000
+        n = int(60_000 * scale)
         t = np.stack([rng.integers(0, 5, n),
                       (rng.pareto(1.2, n) * 100).astype(np.int64) % 2182,
                       rng.integers(0, 17_770, n)], axis=1)
@@ -43,10 +48,10 @@ def _dataset(name: str, rng):
     return r, cards
 
 
-def run():
+def run(scale: float = 1.0):
     rng = np.random.default_rng(0)
     for ds in ("census_like", "dbgen_like", "netflix_like"):
-        table, cards = _dataset(ds, rng)
+        table, cards = _dataset(ds, rng, scale)
         for k in (1, 2, 4):
             us = time_call(lex_sort, table)
             _, none_sz = _sizes(table, cards, k, shuffle_rng=rng)
@@ -63,7 +68,7 @@ def run():
                  f"words={freq};gain={none_sz/max(freq,1):.2f}x;beats_best={freq <= min(asc, desc)}")
 
     # Table 7: 10-column projection — effect persists down the column list
-    n = 40_000
+    n = int(40_000 * scale)
     cards10 = [2, 3, 7, 9, 11, 50, 400, 1200, 5000, 20_000]
     t = np.stack([rng.integers(0, c, n) for c in cards10], axis=1)
     r, _ = synth.factorize(t)
@@ -75,5 +80,14 @@ def run():
              f"total={total};first3={per[order[0]]}/{per[order[1]]}/{per[order[2]]}")
 
 
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized run (fast, same tables at 1/5 scale)")
+    ap.add_argument("--scale", type=float, default=None)
+    args = ap.parse_args()
+    run(scale=args.scale or (0.2 if args.tiny else 1.0))
+
+
 if __name__ == "__main__":
-    run()
+    main()

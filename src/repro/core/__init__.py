@@ -11,6 +11,8 @@ from .containers import (CHUNK_BITS, Containers, T_ARRAY, T_DENSE, T_EMPTY,
                          T_FULL, T_RUN)
 from .wah import WAH
 from .encoding import ColumnEncoder, bitmaps_needed, choose_k, unrank_lex, revolving_door
+from .layout import (ADVISOR_VERSION, LayoutDecision, LayoutStats,
+                     advise_order, remap_from_counts, validate_remap)
 from .sorting import (
     SortStats, lex_sort, gray_sort, lex_sort_bits, random_sort,
     random_shuffle, block_sort, external_merge_sort_perm,
@@ -39,6 +41,8 @@ __all__ = [
     "Containers", "CHUNK_BITS",
     "T_EMPTY", "T_FULL", "T_ARRAY", "T_DENSE", "T_RUN",
     "ColumnEncoder", "bitmaps_needed", "choose_k", "unrank_lex", "revolving_door",
+    "ADVISOR_VERSION", "LayoutDecision", "LayoutStats", "advise_order",
+    "remap_from_counts", "validate_remap",
     "SortStats", "lex_sort", "gray_sort", "lex_sort_bits", "random_sort",
     "random_shuffle", "block_sort", "external_merge_sort_perm",
     "external_sorted_chunks", "order_columns", "order_columns_freq_aware",

@@ -22,6 +22,7 @@ when no calibration has ever run on this machine.
 from __future__ import annotations
 
 import json
+import logging
 import os
 import platform
 import threading
@@ -35,6 +36,8 @@ import numpy as np
 DEFAULT_DENSE_THRESHOLD = 0.5
 DEFAULT_ARRAY_CUTOFF = 4096  # Roaring size crossover: 2B/position vs dense
 ENV_PATH = "REPRO_COST_MODEL"
+
+log = logging.getLogger(__name__)
 
 
 def default_path() -> Path:
@@ -61,6 +64,14 @@ class CostModel:
     array_cutoff: int = DEFAULT_ARRAY_CUTOFF
     containers_calibrated: bool = False
     container_samples: List[dict] = field(default_factory=list)
+
+    @property
+    def machine_match(self) -> bool:
+        """Whether the calibration was measured on *this* host.  Uncalibrated
+        models (no machine recorded) trivially match; a loaded calibration
+        from another box is stale — the crossover is a machine property."""
+        return (not self.machine or self.machine == "?"
+                or self.machine == (platform.node() or "?"))
 
     def choose_container(self, chunk_stats: dict) -> str:
         """Pick a container for one 2^16-bit chunk from its stats.
@@ -116,6 +127,15 @@ def get_default(refresh: bool = False) -> CostModel:
                 _default = CostModel.load(p) if p.exists() else CostModel()
             except (OSError, ValueError, TypeError):
                 _default = CostModel()
+            if _default.calibrated and not _default.machine_match:
+                # still applied — thresholds from a similar box beat the
+                # static default — but flagged, and /stats exposes
+                # machine_match so operators can see the staleness
+                log.warning(
+                    "cost model %s was calibrated on machine %r, this host "
+                    "is %r — thresholds may be stale; re-run calibrate()",
+                    _default.source, _default.machine,
+                    platform.node() or "?")
     return _default
 
 
@@ -165,11 +185,32 @@ def calibrate(n_words: int = 1 << 14, n_operands: int = 8,
     before timing) and brackets the smallest density where the kernel wins.
     Returns an uninstalled ``CostModel``; call ``.save()`` + ``set_default``
     (or ``get_default(refresh=True)`` after saving) to put it into effect.
+
+    ``interpret=False`` compiles the Pallas kernel for the real accelerator
+    — the measurement that matters in production.  On a host without one,
+    jax raises at compile/dispatch time; calibration then falls back to
+    ``interpret=True`` and records ``source="calibrated-interpret"`` so
+    ``/stats`` can tell a hardware-measured crossover from an interpreted
+    one.
     """
     from .ewah import and_many
     from repro.kernels import ops as kops
 
     rng = np.random.default_rng(seed)
+    source = "calibrated"
+    if not interpret:
+        # probe compiled dispatch once, tiny: an accelerator-less host
+        # raises here (not per density sweep), and we degrade gracefully
+        probe = np.zeros((2, 8), dtype=np.uint32)
+        try:
+            np.asarray(kops.logical_reduce(probe, op="and", interpret=False))
+        except Exception as exc:  # noqa: BLE001 - jax error types vary by backend
+            log.warning(
+                "calibrate(interpret=False): compiled Pallas dispatch "
+                "unavailable (%s: %s) — falling back to interpret mode",
+                type(exc).__name__, exc)
+            interpret = True
+            source = "calibrated-interpret"
     samples: List[dict] = []
     crossover: Optional[float] = None
     prev_density: Optional[float] = None
@@ -198,7 +239,7 @@ def calibrate(n_words: int = 1 << 14, n_operands: int = 8,
     else:
         threshold = float(crossover)
     return CostModel(dense_threshold=threshold, calibrated=True,
-                     source="calibrated", machine=platform.node() or "?",
+                     source=source, machine=platform.node() or "?",
                      n_words=n_words, n_operands=n_operands, samples=samples)
 
 

@@ -46,6 +46,7 @@ import numpy as np
 
 from .expr import Expr
 from .index import WORD_ROWS, BitmapIndex, IndexBuilder
+from .layout import LayoutDecision, LayoutStats
 from .shard import ShardedIndex
 from .sorting import (SortStats, external_merge_sort_perm,
                       external_sorted_chunks, order_columns_freq_aware)
@@ -97,7 +98,8 @@ class Dataset:
                  cards: Optional[Sequence[int]] = None,
                  k: int = 1, allocation: str = "alpha",
                  partition_rows: Optional[int] = None,
-                 container: str = "run"):
+                 container: str = "run",
+                 layout: Optional[LayoutDecision] = None):
         self.index = index
         names = list(column_names) if column_names is not None \
             else index.column_names
@@ -111,6 +113,18 @@ class Dataset:
         self._allocation = allocation
         self._partition_rows = partition_rows
         self._container = container
+        self._layout = layout
+
+    @property
+    def layout(self) -> Optional[LayoutDecision]:
+        """The frozen physical-layout decision (order, remaps, advisor
+        provenance), when one was made."""
+        return self._layout
+
+    @property
+    def remaps(self) -> Optional[List[Optional[np.ndarray]]]:
+        """Per-column frequency remaps in effect (None = no remapping)."""
+        return self._layout.remaps if self._layout is not None else None
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -124,7 +138,9 @@ class Dataset:
                   spill_dir: Optional[str] = None,
                   chunk_rows: int = DEFAULT_CHUNK_ROWS,
                   sort_stats: Optional[SortStats] = None,
-                  container: Optional[str] = None) -> "Dataset":
+                  container: Optional[str] = None,
+                  remap: bool = False,
+                  layout: Optional[LayoutDecision] = None) -> "Dataset":
         """Sort + index a fact table of integer value ranks in one call.
 
         ``sort`` is ``"lex"`` (lexicographic with the paper's §4.3
@@ -142,6 +158,15 @@ class Dataset:
         where the cost model says they pay off), or ``None`` to pick by
         sort: sorted builds stay pure run-list (their bitmaps are runs
         already), unsorted ``sort="none"`` builds use ``"auto"``.
+
+        ``remap=True`` additionally applies histogram-aware value
+        remapping (``repro.core.layout``): a streaming pass collects
+        per-column value histograms, frequent values get adjacent encoded
+        ranks, and the sort + encoders both use the remapped ranks — runs
+        get longer, query results stay in original ranks.  ``layout``
+        short-circuits both: a pre-frozen ``LayoutDecision`` (e.g. from
+        ``from_chunks``'s streaming collector or ``optimize``) is obeyed
+        verbatim and no statistics pass runs here.
         """
         rows = np.asarray(rows)
         if rows.ndim != 2:
@@ -150,8 +175,25 @@ class Dataset:
         if columns is not None and len(columns) != d:
             raise ValueError(
                 f"columns has {len(columns)} names for {d} columns")
-        cards = list(cards) if cards is not None else _table_cards(rows)
-        order = cls._resolve_sort(sort, rows, cards, d)
+        if layout is not None:
+            decision = layout
+            cards = list(decision.cards) if decision.cards is not None \
+                else (list(cards) if cards is not None else _table_cards(rows))
+            order = list(decision.order) if decision.order is not None \
+                else None
+        else:
+            cards = list(cards) if cards is not None else _table_cards(rows)
+            if remap:
+                stats = LayoutStats()
+                for s in range(0, max(n, 1), chunk_rows):
+                    stats.observe(rows[s:s + chunk_rows])
+                decision = stats.decision(sort=sort, remap=True, cards=cards)
+                order = decision.order
+            else:
+                order = cls._resolve_sort(sort, rows, cards, d)
+                decision = LayoutDecision(order=order, remaps=None,
+                                          cards=cards, n_rows=n)
+        remaps = decision.remaps
         names = list(columns) if columns is not None else None
         if container is None:
             container = "run" if order is not None else "auto"
@@ -164,28 +206,29 @@ class Dataset:
                 part = max(chunk_rows - chunk_rows % WORD_ROWS, WORD_ROWS)
             chunks = external_sorted_chunks(
                 rows, chunk_rows, order, spill_dir=spill_dir,
-                stats=sort_stats)
+                stats=sort_stats, remaps=remaps)
             index = _build_from_chunks(chunks, n, cards, k, allocation,
                                        shards, part, names,
-                                       container=container)
+                                       container=container, remaps=remaps)
             return cls(index, names, dir_path=None, sort_order=order,
                        cards=cards, k=k, allocation=allocation,
-                       partition_rows=part, container=container)
+                       partition_rows=part, container=container,
+                       layout=decision)
 
         if order is not None:
             perm = external_merge_sort_perm(rows, chunk_rows, order,
-                                            stats=sort_stats)
+                                            stats=sort_stats, remaps=remaps)
             table = rows[perm]
         else:
             perm, table = None, rows
         index = _build_from_chunks(
             (table[s:s + chunk_rows] for s in range(0, max(n, 1), chunk_rows)),
             n, cards, k, allocation, shards, partition_rows, names,
-            container=container)
+            container=container, remaps=remaps)
         return cls(index, names, table=table, row_perm=perm,
                    sort_order=order, cards=cards, k=k,
                    allocation=allocation, partition_rows=partition_rows,
-                   container=container)
+                   container=container, layout=decision)
 
     @classmethod
     def from_chunks(cls, chunks: Iterable[np.ndarray],
@@ -200,6 +243,14 @@ class Dataset:
         raw table is never resident; without it the chunks are concatenated
         in memory.  Everything else (``sort``, ``k``, ``shards``, ...)
         behaves exactly like ``from_rows``.
+
+        On the spilled path the layout advisor runs *streaming*: a
+        ``LayoutStats`` collector observes each chunk as it is appended to
+        the spill file, and the sort column order (plus the frequency
+        remaps when ``remap=True``) is frozen from those statistics before
+        the external-merge sort starts — the same order the materialized
+        ``from_rows`` path would pick, decided without a second pass over
+        the memmap and without holding any rows beyond one chunk.
         """
         it = iter(chunks)
         if spill_dir is None:
@@ -211,6 +262,7 @@ class Dataset:
         os.makedirs(spill_dir, exist_ok=True)
         path = os.path.join(spill_dir, "input-rows.i64")
         n = d = 0
+        stats = LayoutStats()
         with open(path, "wb") as f:
             for c in it:
                 c = np.atleast_2d(np.asarray(c))
@@ -221,11 +273,20 @@ class Dataset:
                 elif c.shape[1] != d:
                     raise ValueError(
                         f"chunk has {c.shape[1]} columns, expected {d}")
+                stats.observe(c)
                 np.ascontiguousarray(c, dtype=np.int64).tofile(f)
                 n += len(c)
         if n == 0:
             raise ValueError("from_chunks got no rows")
         table = np.memmap(path, dtype=np.int64, mode="r", shape=(n, d))
+        if kwargs.get("layout") is None:
+            # freeze the advisor's decision from the streaming statistics
+            # (cards from the stream when not pinned) — from_rows then
+            # never rescans the memmap for cards/order/histograms
+            cards = list(cards) if cards is not None else stats.cards()
+            kwargs["layout"] = stats.decision(
+                sort=kwargs.get("sort", "lex"),
+                remap=bool(kwargs.get("remap", False)), cards=cards)
         return cls.from_rows(table, columns, cards=cards,
                              spill_dir=spill_dir, **kwargs)
 
@@ -260,15 +321,21 @@ class Dataset:
             index = index.base
         if not isinstance(index, ShardedIndex):
             index = ShardedIndex([index])
-        index.save(dir_path, meta={
+        index.save(dir_path, meta=self._recipe_meta())
+        self.dir_path = dir_path
+        return self
+
+    def _recipe_meta(self) -> Dict:
+        """The manifest ``meta`` block: build recipe + layout provenance."""
+        return {
             "sort_order": self.sort_order,
             "cards": self._cards,
             "k": self._k,
             "allocation": self._allocation,
             "partition_rows": self._partition_rows,
-        })
-        self.dir_path = dir_path
-        return self
+            "layout": self._layout.to_meta() if self._layout is not None
+            else None,
+        }
 
     @classmethod
     def open(cls, dir_path: str, mmap: bool = True,
@@ -295,7 +362,8 @@ class Dataset:
                  cards=meta.get("cards"),
                  k=int(meta.get("k", 1)),
                  allocation=meta.get("allocation", "alpha"),
-                 partition_rows=meta.get("partition_rows"))
+                 partition_rows=meta.get("partition_rows"),
+                 layout=LayoutDecision.from_meta(meta.get("layout")))
         if live is None:
             wal_name = meta.get("wal") \
                 or f"wal-{int(meta.get('epoch', 0)):05d}.log"
@@ -320,7 +388,9 @@ class Dataset:
             self.index, dir_path=self.dir_path,
             recipe={"sort_order": self.sort_order,
                     "k": self._k, "allocation": self._allocation,
-                    "partition_rows": self._partition_rows})
+                    "partition_rows": self._partition_rows,
+                    "layout": self._layout.to_meta()
+                    if self._layout is not None else None})
         self.table = None
         self.row_perm = None
         return self.index
@@ -339,11 +409,18 @@ class Dataset:
         bitmaps — no shard file is rewritten until compaction."""
         return self._ensure_live().delete(where)
 
-    def compact(self) -> Dict:
+    def compact(self, relayout: bool = False) -> Dict:
         """Fold pending mutations into a freshly sorted base (and, when
-        store-bound, new shard files + a truncated WAL).  Returns the
-        compaction info dict."""
-        return self._ensure_live().compact()
+        store-bound, new shard files + a truncated WAL).  ``relayout=True``
+        re-runs the layout advisor over the merged rows first (see
+        ``LiveIndex.compact``).  Returns the compaction info dict."""
+        info = self._ensure_live().compact(relayout=relayout)
+        if relayout:
+            # the live layer's recipe now carries the advisor's new choice
+            rec = self.index.recipe
+            self.sort_order = rec.get("sort_order")
+            self._layout = LayoutDecision.from_meta(rec.get("layout"))
+        return info
 
     # -- reshaping ----------------------------------------------------------
     def shard(self, n_shards: int) -> "Dataset":
@@ -372,19 +449,130 @@ class Dataset:
                 len(self.table), self._cards or _table_cards(self.table),
                 self._k, self._allocation, int(n_shards),
                 self._partition_rows, self.column_names,
-                container=self._container)
+                container=self._container, remaps=self.remaps)
             return Dataset(index, self.column_names, table=self.table,
                            row_perm=self.row_perm, sort_order=self.sort_order,
                            cards=self._cards, k=self._k,
                            allocation=self._allocation,
                            partition_rows=self._partition_rows,
-                           container=self._container)
+                           container=self._container, layout=self._layout)
         if not isinstance(idx, ShardedIndex):
             idx = ShardedIndex([idx], column_names=self.column_names)
         return Dataset(idx.reshard(int(n_shards)), self.column_names,
                        sort_order=self.sort_order, cards=self._cards,
                        k=self._k, allocation=self._allocation,
-                       partition_rows=self._partition_rows)
+                       partition_rows=self._partition_rows,
+                       layout=self._layout)
+
+    def optimize(self, col_order: Union[str, Sequence[int]] = "auto",
+                 remap: bool = True, *,
+                 spill_dir: Optional[str] = None,
+                 chunk_rows: int = DEFAULT_CHUNK_ROWS,
+                 sort_stats: Optional[SortStats] = None,
+                 shards: Optional[int] = None) -> Dict:
+        """Re-sort an existing dataset into the advisor's physical layout.
+
+        Reconstructs the rows shard by shard from the compressed bitmaps
+        (never more than one shard of rows resident), streams them through
+        the layout advisor + external-merge sort + index builders exactly
+        like a fresh build, and adopts the result in place.  On a
+        store-backed dataset the new shard files land under an
+        ``oNNNNN-`` prefix and the manifest rewrite is the atomic cutover
+        (the same path live-ingest compaction uses): a crash mid-optimize
+        leaves the old manifest naming the old, untouched files, and
+        concurrent readers holding mmaps keep serving the old inodes.
+
+        ``col_order`` is ``"auto"`` (re-run the §4.3 advisor), an explicit
+        column order, or ``"none"``; ``remap`` re-derives the per-column
+        frequency remaps from fresh histograms.  Query results are
+        unchanged — only row order and value encoding move.  Returns an
+        info dict with before/after sizes and the adopted layout.
+        """
+        from .ingest import LiveIndex
+        from . import store as store_mod
+        idx = self.index
+        was_live = isinstance(idx, LiveIndex)
+        if was_live:
+            if idx.pending_rows:
+                raise RuntimeError(
+                    "optimize() on a live dataset with pending mutations — "
+                    "compact() first so the base reflects the live rows")
+            old_live, idx = idx, idx.base
+        if not idx.n_rows:
+            raise ValueError("optimize() on an empty dataset")
+        size_before = idx.size_words
+        n_shards = int(shards) if shards is not None \
+            else getattr(idx, "n_shards", 1)
+        sort = "lex" if (isinstance(col_order, str) and col_order == "auto") \
+            else col_order
+
+        def _chunks():
+            for sh in (idx.shards if isinstance(idx, ShardedIndex)
+                       else [idx]):
+                if not sh.n_rows:
+                    continue
+                t = sh.reconstruct_rows()
+                for s in range(0, len(t), chunk_rows):
+                    yield t[s:s + chunk_rows]
+
+        new = Dataset.from_chunks(
+            _chunks(), self.column_names, cards=self._cards,
+            spill_dir=spill_dir, sort=sort, remap=remap,
+            k=self._k, allocation=self._allocation,
+            shards=n_shards if n_shards > 1 else 0,
+            partition_rows=self._partition_rows, chunk_rows=chunk_rows,
+            sort_stats=sort_stats)
+        # adopt the rebuilt layout in place
+        self.sort_order = new.sort_order
+        self._cards = new._cards
+        self._layout = new._layout
+        self._container = new._container
+        self.row_perm = None  # permutations are relative to the old order
+        info: Dict = {"n_rows": int(new.n_rows),
+                      "size_words_before": int(size_before),
+                      "order": self.sort_order,
+                      "remapped_columns": self._layout.remapped_columns
+                      if self._layout is not None else []}
+        if was_live:
+            old_live.close()
+        if self.dir_path is not None:
+            meta_old = store_mod.manifest_meta(self.dir_path)
+            opt_epoch = int(meta_old.get("opt_epoch", 0)) + 1
+            old_files = store_mod.manifest_shards(self.dir_path)
+            nidx = new.index if isinstance(new.index, ShardedIndex) \
+                else ShardedIndex([new.index],
+                                  column_names=self.column_names)
+            meta = self._recipe_meta()
+            meta["opt_epoch"] = opt_epoch
+            # live-ingest provenance (epoch counter, WAL name) survives the
+            # layout swap — the WAL is empty here, but its name must keep
+            # matching the manifest for the next live open
+            for key in ("epoch", "wal"):
+                if meta_old.get(key) is not None:
+                    meta[key] = meta_old[key]
+            # shard files first, manifest rewrite last: the rename IS the
+            # cutover (identical to the compaction path)
+            store_mod.save_sharded(nidx, self.dir_path, meta=meta,
+                                   prefix=f"o{opt_epoch:05d}-")
+            keep = set(store_mod.manifest_shards(self.dir_path))
+            for name in old_files:
+                if name not in keep:
+                    try:
+                        os.unlink(os.path.join(self.dir_path, name))
+                    except OSError:
+                        pass
+            self.index = ShardedIndex.load(self.dir_path)
+            self.table = None
+            info["opt_epoch"] = opt_epoch
+        else:
+            self.index = new.index
+            self.table = new.table
+        if was_live:
+            self._ensure_live()
+        info["size_words_after"] = int(self.index.size_words
+                                       if not was_live
+                                       else self.index.base.size_words)
+        return info
 
     # -- stats --------------------------------------------------------------
     @property
@@ -421,10 +609,12 @@ class Dataset:
         idx = self.index
         if isinstance(idx, LiveIndex):
             idx = idx.base  # the delta layer plans the same tree
+        head = f"{self._layout.describe()}\n" if self._layout is not None \
+            else ""
         if isinstance(idx, ShardedIndex):
-            return (f"per-shard plans x{idx.n_shards}; shard 0:\n"
+            return (f"{head}per-shard plans x{idx.n_shards}; shard 0:\n"
                     + explain(plan(idx.shards[0], e)))
-        return explain(plan(idx, e))
+        return head + explain(plan(idx, e))
 
     # -- serving ------------------------------------------------------------
     def serve(self, **service_kwargs):
@@ -446,13 +636,15 @@ def _build_from_chunks(chunks: Iterable[np.ndarray], n_rows: int,
                        cards: Sequence[int], k: int, allocation: str,
                        shards: int, partition_rows: Optional[int],
                        names: Optional[Sequence[str]],
-                       container: str = "run") -> AnyIndex:
+                       container: str = "run",
+                       remaps: Optional[Sequence] = None) -> AnyIndex:
     """Stream row chunks into one index — monolithic, or cut into
     ``shards`` word-aligned row shards built by independent builders."""
     def builder():
         return IndexBuilder(cards, k=k, allocation=allocation,
                             partition_rows=partition_rows,
-                            column_names=names, container=container)
+                            column_names=names, container=container,
+                            remaps=remaps)
 
     if shards and shards > 1:
         shard_rows = _aligned_rows(n_rows, shards)

@@ -108,14 +108,28 @@ def revolving_door(L: int, k: int, limit: int | None = None) -> np.ndarray:
 
 
 class ColumnEncoder:
-    """Maps attribute-value ranks (0..card-1) to k bitmap positions."""
+    """Maps attribute-value ranks (0..card-1) to k bitmap positions.
 
-    def __init__(self, card: int, k: int = 1, allocation: str = "alpha"):
+    ``remap`` is an optional rank permutation (``remap[original] = encoded``)
+    — the histogram-aware value reordering of ``repro.core.layout``: frequent
+    values get adjacent low encoded ranks so their codes share bitmap
+    prefixes and their runs merge.  Applied transparently inside ``codes``;
+    every consumer (planner value lowering, builder scatter, equality
+    bitmaps) therefore keeps speaking *original* ranks and query results
+    never change.  An identity permutation collapses to ``None``.
+    """
+
+    def __init__(self, card: int, k: int = 1, allocation: str = "alpha",
+                 remap=None):
         assert card >= 1
         self.card = int(card)
         self.k = int(k)
         self.allocation = allocation
         self.L = bitmaps_needed(card, k)
+        if remap is not None:
+            from .layout import validate_remap
+            remap = validate_remap(remap, self.card)
+        self.remap = remap
         if allocation == "alpha" or k == 1:
             self._codes = None  # computed on demand via unranking
         elif allocation == "gray":
@@ -126,6 +140,8 @@ class ColumnEncoder:
     def codes(self, value_ranks: np.ndarray) -> np.ndarray:
         """(n,) value ranks -> (n, k) bitmap positions within this column."""
         value_ranks = np.asarray(value_ranks)
+        if self.remap is not None:
+            value_ranks = self.remap[value_ranks.astype(np.int64)]
         if self.k == 1:
             return value_ranks.reshape(-1, 1).astype(np.int32)
         if self._codes is not None:
@@ -137,5 +153,6 @@ class ColumnEncoder:
         return self.codes(np.arange(self.card))
 
     def __repr__(self):
+        remap = ", remap" if self.remap is not None else ""
         return (f"ColumnEncoder(card={self.card}, k={self.k}, L={self.L}, "
-                f"alloc={self.allocation})")
+                f"alloc={self.allocation}{remap})")

@@ -134,7 +134,8 @@ class IndexBuilder:
                  apply_heuristic: bool = True,
                  column_names: Optional[Sequence[str]] = None,
                  store_path: Optional[str] = None,
-                 container: str = "run"):
+                 container: str = "run",
+                 remaps: Optional[Sequence] = None):
         if container not in ("run", "auto"):
             raise ValueError(f"container must be 'run' or 'auto', "
                              f"got {container!r}")
@@ -149,13 +150,20 @@ class IndexBuilder:
         if names is not None and len(names) != d:
             raise ValueError(
                 f"column_names has {len(names)} entries for {d} columns")
+        if remaps is not None and len(remaps) != d:
+            raise ValueError(
+                f"remaps has {len(remaps)} entries for {d} columns")
         self.column_names = names
         self.partition_rows = validate_partition_rows(partition_rows)
         self.columns: List[ColumnIndex] = []
-        for card in self.cards:
+        for c, card in enumerate(self.cards):
             kc = choose_k(card, k) if apply_heuristic else k
-            self.columns.append(
-                ColumnIndex(encoder=ColumnEncoder(card, kc, allocation)))
+            # the frequency remap lives inside the encoder: the scatter in
+            # _close_partition and every query lowering go through
+            # encoder.codes, so original ranks stay the API everywhere
+            self.columns.append(ColumnIndex(encoder=ColumnEncoder(
+                card, kc, allocation,
+                remap=remaps[c] if remaps is not None else None)))
         self._buf: List[np.ndarray] = []
         self._buffered = 0
         self._bounds: List[int] = [0]
@@ -290,6 +298,7 @@ class BitmapIndex:
         apply_heuristic: bool = True,
         column_names: Optional[Sequence[str]] = None,
         container: str = "run",
+        remaps: Optional[Sequence] = None,
     ) -> "BitmapIndex":
         """Build the index in one shot (thin wrapper over ``IndexBuilder``).
 
@@ -303,7 +312,8 @@ class BitmapIndex:
                                partition_rows=partition_rows,
                                apply_heuristic=apply_heuristic,
                                column_names=column_names,
-                               container=container)
+                               container=container,
+                               remaps=remaps)
         return builder.append(table).finish()
 
     # -- stats -------------------------------------------------------------

@@ -200,6 +200,9 @@ class LiveIndex:
             "k": int(meta.get("k", 1)),
             "allocation": meta.get("allocation", "alpha"),
             "partition_rows": meta.get("partition_rows"),
+            # layout provenance (order, frequency remaps) rides along so a
+            # compaction rebuild re-applies the same physical layout
+            "layout": meta.get("layout"),
         }
         if recipe:
             self.recipe.update(recipe)
@@ -518,8 +521,13 @@ class LiveIndex:
         return out
 
     # -- compaction ----------------------------------------------------------
-    def compact(self) -> Dict:
+    def compact(self, relayout: bool = False) -> Dict:
         """Fold delta + tombstones into a freshly sorted, compacted base.
+
+        ``relayout=True`` re-runs the layout advisor (column order +
+        frequency remaps) over the merged rows before the rebuild, so the
+        new epoch's physical layout reflects the data as it is *now*, not
+        as it was at the original build.
 
         Reconstructs the live rows (base rows through interval scatter with
         tombstones masked out, plus undeleted delta rows), re-sorts them by
@@ -554,7 +562,7 @@ class LiveIndex:
                 self._lock.release()
                 lock_held = False
             table = self._reconstruct(base, tombs, drows, dt)
-            new_base = self._rebuild(table)
+            new_base = self._rebuild(table, relayout=relayout)
             if not lock_held:
                 self._lock.acquire()
                 lock_held = True
@@ -585,6 +593,8 @@ class LiveIndex:
                         "cards": self.recipe.get("cards") or self.cards,
                         "k": self.recipe.get("k", 1),
                         "allocation": self.recipe.get("allocation", "alpha"),
+                        "partition_rows": self.recipe.get("partition_rows"),
+                        "layout": self.recipe.get("layout"),
                         "epoch": new_epoch,
                         "wal": wal_name,
                     }
@@ -672,19 +682,36 @@ class LiveIndex:
             return np.empty((0, len(self.cards)), dtype=np.int64)
         return parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
 
-    def _rebuild(self, table: np.ndarray) -> ShardedIndex:
+    def _rebuild(self, table: np.ndarray,
+                 relayout: bool = False) -> ShardedIndex:
         from .dataset import DEFAULT_CHUNK_ROWS, _build_from_chunks
+        from .layout import LayoutDecision, LayoutStats
         n = len(table)
-        order = self.recipe.get("sort_order")
         chunk = DEFAULT_CHUNK_ROWS
+        if relayout and n:
+            # re-run the layout advisor on the merged rows: as deltas
+            # accumulate across epochs the original order/remaps drift from
+            # optimal; this is how a live dataset converges back
+            stats = LayoutStats()
+            for s in range(0, n, chunk):
+                stats.observe(table[s:s + chunk])
+            decision = stats.decision(sort="lex", remap=True,
+                                      cards=self.cards)
+            self.recipe["sort_order"] = decision.order
+            self.recipe["layout"] = decision.to_meta()
+        order = self.recipe.get("sort_order")
+        layout = LayoutDecision.from_meta(self.recipe.get("layout"))
+        remaps = layout.remaps if layout is not None else None
         if order is not None and n > 1:
             from .sorting import external_merge_sort_perm
-            table = table[external_merge_sort_perm(table, chunk, order)]
+            table = table[external_merge_sort_perm(table, chunk, order,
+                                                   remaps=remaps)]
         idx = _build_from_chunks(
             (table[s:s + chunk] for s in range(0, max(n, 1), chunk)),
             n, self.cards, self.recipe.get("k", 1),
             self.recipe.get("allocation", "alpha"), self.base.n_shards,
-            self.recipe.get("partition_rows"), self.column_names)
+            self.recipe.get("partition_rows"), self.column_names,
+            remaps=remaps)
         if not isinstance(idx, ShardedIndex):
             idx = ShardedIndex([idx], column_names=self.column_names)
         return idx
@@ -701,11 +728,15 @@ class Compactor:
     """
 
     def __init__(self, live: LiveIndex, interval: float = 30.0,
-                 min_pending_rows: int = 1, on_compact=None):
+                 min_pending_rows: int = 1, on_compact=None,
+                 relayout: bool = False):
         self.live = live
         self.interval = float(interval)
         self.min_pending_rows = max(int(min_pending_rows), 1)
         self.on_compact = on_compact
+        # relayout=True: every epoch re-runs the layout advisor, so the
+        # physical layout tracks the (drifting) live data distribution
+        self.relayout = bool(relayout)
         self.n_runs = 0
         self.last_error: Optional[str] = None
         self._stop = threading.Event()
@@ -726,7 +757,7 @@ class Compactor:
         info dict, or None if there was nothing to do."""
         if self.live.pending_rows < self.min_pending_rows:
             return None
-        info = self.live.compact()
+        info = self.live.compact(relayout=self.relayout)
         self.n_runs += 1
         if self.on_compact is not None:
             self.on_compact(info)
@@ -743,5 +774,6 @@ class Compactor:
         return {"interval": self.interval,
                 "min_pending_rows": self.min_pending_rows,
                 "runs": self.n_runs,
+                "relayout": self.relayout,
                 "alive": self._thread.is_alive(),
                 "last_error": self.last_error}

@@ -92,6 +92,14 @@ class ShardedIndex:
                     f"shard {i} column {c} encoder {ea!r} differs from "
                     f"shard 0's {eb!r}; shards must share global "
                     f"cardinalities")
+            same_remap = (ea.remap is None and eb.remap is None) or (
+                ea.remap is not None and eb.remap is not None
+                and np.array_equal(ea.remap, eb.remap))
+            if not same_remap:
+                raise ValueError(
+                    f"shard {i} column {c} value remap differs from shard "
+                    f"0's; shards must share the frequency remap or query "
+                    f"results would disagree across shard boundaries")
         if interior and sh.n_rows % WORD_ROWS:
             raise ValueError(
                 f"interior shard {i} has {sh.n_rows} rows, not a "

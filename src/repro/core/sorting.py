@@ -19,17 +19,40 @@ from .encoding import ColumnEncoder
 MAX_GRAY_BITS = 8192  # guard: Gray sort materializes the row-bit matrix
 
 
-def lex_sort(table: np.ndarray, col_order: Optional[Sequence[int]] = None) -> np.ndarray:
+def _key_cols(rows: np.ndarray, order: Sequence[int],
+              remaps=None) -> List[np.ndarray]:
+    """Sort-key columns of ``rows`` in ``order``, with the per-column
+    frequency remaps (``repro.core.layout``) applied where present.
+
+    The physical sort must order rows by *encoded* rank — remapped values
+    are what the alphabetic allocation lays out adjacently — so every key
+    construction site (in-memory lexsort, packed spill keys, tuple spill
+    keys) funnels through here.
+    """
+    cols = []
+    for c in order:
+        col = np.asarray(rows[:, c])
+        r = remaps[c] if remaps is not None else None
+        if r is not None:
+            col = np.asarray(r, dtype=np.int64)[col]
+        cols.append(col)
+    return cols
+
+
+def lex_sort(table: np.ndarray, col_order: Optional[Sequence[int]] = None,
+             remaps=None) -> np.ndarray:
     """Return the row permutation of a lexicographic sort.
 
     ``col_order[0]`` is the *primary* sort column (paper: d3d2d1 == highest-
-    cardinality column first when col_order = [2, 1, 0]).
+    cardinality column first when col_order = [2, 1, 0]).  ``remaps``
+    (optional per-column rank permutations) sort by encoded rank instead of
+    original rank — the histogram-aware layout's row order.
     """
     table = np.asarray(table)
     n, d = table.shape
     order = list(range(d)) if col_order is None else list(col_order)
     # np.lexsort: last key is primary
-    keys = tuple(table[:, c] for c in reversed(order))
+    keys = tuple(reversed(_key_cols(table, order, remaps)))
     return np.lexsort(keys)
 
 
@@ -127,16 +150,22 @@ def block_sort(table: np.ndarray, n_blocks: int,
 # ``SortStats.peak_buffer_bytes`` reports the measured bound.
 # ---------------------------------------------------------------------------
 
-def _key_cards(table: np.ndarray, order: Sequence[int]) -> Optional[List[int]]:
+def _key_cards(table: np.ndarray, order: Sequence[int],
+               remaps=None) -> Optional[List[int]]:
     """Per-column key cardinalities (max+1) over the whole table, or ``None``
-    when the combined key space overflows a uint64."""
+    when the combined key space overflows a uint64.
+
+    With ``remaps``, a remapped column's cardinality is the permutation's
+    length — a cheap exact bound that avoids re-scanning the (possibly
+    memmapped) table through the remap."""
     cards = []
     capacity = 1
     for c in order:
         lo = int(table[:, c].min())
         if lo < 0:
             raise ValueError(f"column {c} has negative rank {lo}")
-        card = int(table[:, c].max()) + 1
+        r = remaps[c] if remaps is not None else None
+        card = len(r) if r is not None else int(table[:, c].max()) + 1
         cards.append(card)
         capacity *= card
     if capacity >= 1 << 64:
@@ -145,16 +174,17 @@ def _key_cards(table: np.ndarray, order: Sequence[int]) -> Optional[List[int]]:
 
 
 def _pack_rows(rows: np.ndarray, order: Sequence[int],
-               cards: Sequence[int]) -> np.ndarray:
+               cards: Sequence[int], remaps=None) -> np.ndarray:
     """Pack each row's sort key into one uint64 using *global* cardinalities
     (so per-chunk keys from different runs compare consistently)."""
     key = np.zeros(len(rows), dtype=np.uint64)
-    for c, card in zip(order, cards):
-        key = key * np.uint64(card) + rows[:, c].astype(np.uint64)
+    for col, card in zip(_key_cols(rows, order, remaps), cards):
+        key = key * np.uint64(card) + col.astype(np.uint64)
     return key
 
 
-def _pack_keys(table: np.ndarray, order: Sequence[int]) -> Optional[np.ndarray]:
+def _pack_keys(table: np.ndarray, order: Sequence[int],
+               remaps=None) -> Optional[np.ndarray]:
     """Pack each row's sort key into one uint64 (None if it would overflow).
 
     The packed key preserves lexicographic order over ``order``; packing lets
@@ -163,10 +193,10 @@ def _pack_keys(table: np.ndarray, order: Sequence[int]) -> Optional[np.ndarray]:
     table = np.asarray(table)
     if len(table) == 0:
         return np.zeros(0, dtype=np.uint64)
-    cards = _key_cards(table, order)
+    cards = _key_cards(table, order, remaps)
     if cards is None:
         return None
-    return _pack_rows(table, order, cards)
+    return _pack_rows(table, order, cards, remaps)
 
 
 def _merge_runs_packed(keys: List[np.ndarray], runs: List[np.ndarray]) -> np.ndarray:
@@ -203,10 +233,11 @@ def _merge_runs_packed(keys: List[np.ndarray], runs: List[np.ndarray]) -> np.nda
 
 
 def _merge_runs_tuples(table: np.ndarray, order: Sequence[int],
-                       runs: List[np.ndarray]) -> np.ndarray:
+                       runs: List[np.ndarray], remaps=None) -> np.ndarray:
     """Fallback merge on Python tuple keys (key space too wide to pack)."""
     def cursor(r: int, run: np.ndarray):
-        key_cols = table[np.ix_(run, list(order))]
+        key_cols = np.stack(_key_cols(table[run], list(order), remaps),
+                            axis=1)
         for i, row in enumerate(run):
             yield (tuple(key_cols[i].tolist()), r, int(row))
 
@@ -456,7 +487,8 @@ def _reduce_runs(cursors: List[_SpillCursor], spill_dir: str, fan_in: int,
 
 def _spill_runs(table: np.ndarray, chunk_rows: int, order: Sequence[int],
                 spill_dir: str, merge_block_rows: Optional[int],
-                stats: SortStats, merge_fan_in=None) -> List[_SpillCursor]:
+                stats: SortStats, merge_fan_in=None,
+                remaps=None) -> List[_SpillCursor]:
     """Chunk-sort ``table`` into on-disk runs; return merge cursors.
 
     Each run is two flat files in ``spill_dir`` — ``run-NNNNN.keys`` and
@@ -469,7 +501,7 @@ def _spill_runs(table: np.ndarray, chunk_rows: int, order: Sequence[int],
     post-mortem inspection and reuse.
     """
     n = len(table)
-    cards = _key_cards(table, order)
+    cards = _key_cards(table, order, remaps)
     os.makedirs(spill_dir, exist_ok=True)
     cursors: List[_SpillCursor] = []
     n_runs = -(-n // chunk_rows)
@@ -481,12 +513,14 @@ def _spill_runs(table: np.ndarray, chunk_rows: int, order: Sequence[int],
     d_key = len(list(order))
     for run_id, s in enumerate(range(0, n, chunk_rows)):
         chunk = table[s:s + chunk_rows]
-        perm_c = lex_sort(chunk, order)
+        perm_c = lex_sort(chunk, order, remaps)
         if cards is not None:
-            keys_c = _pack_rows(np.asarray(chunk)[perm_c], order, cards)
+            keys_c = _pack_rows(np.asarray(chunk)[perm_c], order, cards,
+                                remaps)
         else:
             keys_c = np.ascontiguousarray(
-                np.asarray(chunk)[perm_c][:, list(order)], dtype=np.int64)
+                np.stack(_key_cols(np.asarray(chunk)[perm_c], order, remaps),
+                         axis=1), dtype=np.int64)
         stats.bump(keys_c.nbytes + perm_c.nbytes)
         kpath = os.path.join(spill_dir, f"run-{run_id:05d}.keys")
         ppath = os.path.join(spill_dir, f"run-{run_id:05d}.perm")
@@ -520,7 +554,8 @@ def external_merge_sort_perm(table: np.ndarray, chunk_rows: int,
                              spill_dir: Optional[str] = None,
                              merge_block_rows: Optional[int] = None,
                              merge_fan_in=None,
-                             stats: Optional[SortStats] = None) -> np.ndarray:
+                             stats: Optional[SortStats] = None,
+                             remaps=None) -> np.ndarray:
     """Row permutation of an external-merge lexicographic sort.
 
     Equivalent to ``lex_sort`` (bit-identical permutation, including tie
@@ -550,16 +585,16 @@ def external_merge_sort_perm(table: np.ndarray, chunk_rows: int,
             runs = []
             for s in range(0, n, chunk_rows):
                 chunk = table[s:s + chunk_rows]
-                runs.append(s + lex_sort(chunk, order))
-            keys = _pack_keys(table, order)
+                runs.append(s + lex_sort(chunk, order, remaps))
+            keys = _pack_keys(table, order, remaps)
             stats.n_runs = len(runs)
             if keys is None:
-                return _merge_runs_tuples(table, order, runs)
+                return _merge_runs_tuples(table, order, runs, remaps)
             return _merge_runs_packed([keys[r] for r in runs], runs)
         stats.n_runs = 1 if n else 0
-        return lex_sort(table, order)
+        return lex_sort(table, order, remaps)
     cursors = _spill_runs(table, chunk_rows, order, spill_dir,
-                          merge_block_rows, stats, merge_fan_in)
+                          merge_block_rows, stats, merge_fan_in, remaps)
     out = np.empty(n, dtype=np.int64)
     w = 0
     for block in _merge_spilled(cursors, stats):
@@ -575,7 +610,8 @@ def external_sorted_chunks(table: np.ndarray, chunk_rows: int,
                            spill_dir: Optional[str] = None,
                            merge_block_rows: Optional[int] = None,
                            merge_fan_in=None,
-                           stats: Optional[SortStats] = None) -> Iterator[np.ndarray]:
+                           stats: Optional[SortStats] = None,
+                           remaps=None) -> Iterator[np.ndarray]:
     """Yield the externally merge-sorted table in chunks of ``out_rows`` rows.
 
     The natural producer for ``IndexBuilder.append``: chunks stream out in
@@ -595,7 +631,7 @@ def external_sorted_chunks(table: np.ndarray, chunk_rows: int,
                                         spill_dir=spill_dir,
                                         merge_block_rows=merge_block_rows,
                                         merge_fan_in=merge_fan_in,
-                                        stats=stats)
+                                        stats=stats, remaps=remaps)
         for s in range(0, len(perm), step):
             yield table_arr[perm[s:s + step]]
         return
@@ -604,7 +640,7 @@ def external_sorted_chunks(table: np.ndarray, chunk_rows: int,
     d = table_arr.shape[1]
     order = list(range(d)) if col_order is None else list(col_order)
     cursors = _spill_runs(table_arr, chunk_rows, order, spill_dir,
-                          merge_block_rows, stats, merge_fan_in)
+                          merge_block_rows, stats, merge_fan_in, remaps)
     pending: List[np.ndarray] = []
     pending_rows = 0
     for block in _merge_spilled(cursors, stats):
@@ -647,9 +683,11 @@ def order_columns_freq_aware(table: np.ndarray, cards: Sequence[int],
     Implements the paper's §4.3 closing remark ("une dimension n'ayant que des
     valeurs avec une fréquence inférieure à 32 ne devrait sans doute pas servir
     de base au tri") as an executable strategy.
+
+    Delegates to ``layout.advise_order`` — the rule is a pure function of
+    (row count, cardinalities), which is exactly why the streaming
+    ``LayoutStats`` collector reproduces this order without materializing
+    the table.
     """
-    n = len(table)
-    mean_freq = [n / max(c, 1) for c in cards]
-    eligible = [c for c in range(len(cards)) if mean_freq[c] >= word_bits]
-    rest = [c for c in range(len(cards)) if mean_freq[c] < word_bits]
-    return sorted(eligible, key=lambda c: -cards[c]) + sorted(rest, key=lambda c: cards[c])
+    from .layout import advise_order
+    return advise_order(len(table), cards, word_bits)

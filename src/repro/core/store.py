@@ -56,7 +56,11 @@ MAGIC = b"REPROIDX"
 VERSION = 2            # v2: container-tagged segments (TOC entries grow a
                        # 4th element; tag 0 / absent = raw EWAH words, tag 1
                        # = hybrid-container blob).  v1 files read unchanged.
-COMPAT_VERSIONS = (1, 2)
+VERSION_REMAP = 3      # v3: column metadata may carry a "remap" permutation
+                       # (frequency-remapped value encoding).  Only written
+                       # when a remap is present — an old build must refuse
+                       # the file rather than silently decode wrong values.
+COMPAT_VERSIONS = (1, 2, 3)
 SEG_EWAH = 0
 SEG_CONTAINERS = 1
 _PREAMBLE = struct.Struct("<8sIIQQI")  # magic, version, flags, off, len, crc
@@ -91,8 +95,11 @@ class StoreCorruptError(StoreError):
 
 
 def _encoder_meta(enc: ColumnEncoder) -> Dict:
-    return {"card": enc.card, "k": enc.k,
+    meta = {"card": enc.card, "k": enc.k,
             "allocation": enc.allocation, "L": enc.L}
+    if enc.remap is not None:
+        meta["remap"] = [int(v) for v in enc.remap]
+    return meta
 
 
 class StoreWriter:
@@ -171,7 +178,9 @@ class StoreWriter:
         hdr_off = self._pos
         self._f.write(header)
         self._f.seek(0)
-        self._f.write(_PREAMBLE.pack(MAGIC, VERSION, 0, hdr_off,
+        version = VERSION_REMAP if any(
+            e.remap is not None for e in self._encoders) else VERSION
+        self._f.write(_PREAMBLE.pack(MAGIC, version, 0, hdr_off,
                                      len(header), zlib.crc32(header)))
         self._f.flush()
         os.fsync(self._f.fileno())
@@ -275,7 +284,8 @@ def load(path: str, mmap: bool = True,
     payload_end = meta["_header_off"]
     encoders = []
     for c, cm in enumerate(meta["columns"]):
-        enc = ColumnEncoder(cm["card"], cm["k"], cm["allocation"])
+        enc = ColumnEncoder(cm["card"], cm["k"], cm["allocation"],
+                            remap=cm.get("remap"))
         if enc.L != cm["L"]:
             raise StoreCorruptError(
                 f"{path}: column {c} encoder derives L={enc.L} but the file "

@@ -54,6 +54,9 @@ Production-shaped serving on a dependency-free stack (stdlib ``http.server``
     POST /admin/compact                                -> compact now
     POST /admin/invalidate                             -> drop the result cache
     POST /admin/reload                                 -> reopen changed shards
+    POST /admin/optimize    {"col_order"?, "remap"?}   -> rewrite the store
+                                                          into the advisor's
+                                                          layout, rolling swap
     GET  /healthz                                      -> liveness
     GET  /stats                                        -> index + cache stats
                                                           (+ live/compaction)
@@ -90,6 +93,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core import BitmapIndex, ShardedIndex, lex_sort, synth
+from repro.core import cost_model
 from repro.core import store as index_store
 from repro.core.dataset import top_k_from_counts
 from repro.core.expr import Expr, canonical_key, from_wire, to_wire
@@ -340,6 +344,18 @@ class QueryService:
                     "n_shards": len(new_prints)}
         changed = [i for i, (a, b) in enumerate(zip(old_prints, new_prints))
                    if a != b]
+        if changed and len(changed) == len(new_prints):
+            # every shard file changed (e.g. a layout optimize rewrote the
+            # whole store under new oNNNNN- names): no shard-local cache
+            # would stay warm anyway, and the replacement encoders may
+            # legitimately differ from the retiring ones (frequency remaps)
+            # — which the per-shard swap validation rejects mid-swap.  Swap
+            # the whole index in one generation bump; in-flight queries
+            # finish on their snapshot of the old index.
+            self.set_index(ShardedIndex.load(self.index_dir, mmap=mmap))
+            self._fingerprints = new_prints
+            return {"reloaded": changed, "full": True,
+                    "n_shards": len(new_prints)}
         for i in changed:
             shard = index_store.load(
                 os.path.join(self.index_dir, new_prints[i][0]), mmap=mmap)
@@ -485,6 +501,56 @@ class QueryService:
                 live, interval=interval, min_pending_rows=min_pending_rows,
                 on_compact=self._after_compact).start()
         return self._compactor
+
+    def optimize(self, col_order="auto", remap: bool = True) -> Dict:
+        """Rewrite the backing store into the layout advisor's physical
+        layout (column sort order + frequency remaps), then swap the
+        rewritten shards in without dropping the service.
+
+        The rewrite itself is ``Dataset.optimize`` on the store directory:
+        new ``oNNNNN-`` prefixed shard files land first, the manifest
+        rewrite is the atomic cutover, and the old files are unlinked only
+        after it (mmaps held by in-flight queries keep the old inodes
+        alive).  Because every new shard file has a new name, the normal
+        ``/admin/reload`` fingerprint diff then sees every shard as changed
+        and swaps the rewritten index in behind one generation bump —
+        queries keep answering throughout (in-flight ones finish on their
+        snapshot of the old index).  Live services fold pending mutations
+        in with a compaction first, then get a fresh live layer over the
+        optimized base (the WAL is empty at that point, so nothing
+        replays)."""
+        if not self.index_dir:
+            raise ValueError("optimize needs a store directory "
+                             "(serve with --index-dir / --save-index)")
+        from repro.core.dataset import Dataset
+        from repro.core.ingest import LiveIndex
+        with self._reload_lock:
+            live = isinstance(self.index, LiveIndex)
+            if live and self.index.pending_rows:
+                # the optimize rewrite reads the *store*; fold the delta +
+                # tombstones into it first so no live row is left behind
+                self._after_compact(self.index.compact())
+            ds = Dataset.open(self.index_dir, live=False)
+            out = ds.optimize(col_order=col_order, remap=remap)
+            if live:
+                # the old live layer's base mmaps now reference unlinked
+                # files; rebuild it over the optimized store (its recipe and
+                # layout come from the fresh manifest).  In-flight queries
+                # finish against their snapshot of the old layer.
+                old = self.index
+                self.set_index(LiveIndex(ShardedIndex.load(self.index_dir),
+                                         dir_path=self.index_dir))
+                old.close()
+                out["reloaded"] = list(range(self.index.n_shards))
+                out["live"] = True
+            else:
+                rl = self._reload_locked()
+                out["reloaded"] = list(range(rl["n_shards"])) \
+                    if rl.get("full") else rl["reloaded"]
+            self._fingerprints = index_store.shard_fingerprints(
+                self.index_dir)
+            self._manifest_print = self._manifest_fingerprint()
+            return out
 
     # -- execution ---------------------------------------------------------
     def _snapshot(self):
@@ -645,6 +711,28 @@ class QueryService:
             out["n_shards"] = sharded.n_shards
             out["shard_rows"] = np.diff(sharded.offsets).tolist()
             out["shard_caches"] = sharded.cache_stats()
+        # physical-layout provenance: the advisor's decision (column order,
+        # frequency remaps, stats snapshot) as persisted in the manifest —
+        # the live layer's recipe when serving live (it survives relayout
+        # compactions), the manifest otherwise; None for pre-advisor stores
+        if isinstance(idx, LiveIndex):
+            out["layout"] = idx.recipe.get("layout")
+        elif self.index_dir:
+            out["layout"] = index_store.manifest_meta(
+                self.index_dir).get("layout")
+        else:
+            out["layout"] = None
+        m = cost_model.get_default()
+        th = m.dense_threshold
+        out["cost_model"] = {
+            # inf (= "EWAH always wins here") is not JSON; null carries it
+            "dense_threshold": float(th) if np.isfinite(th) else None,
+            "calibrated": bool(m.calibrated),
+            "source": m.source,
+            "machine": m.machine,
+            "machine_match": bool(m.machine_match),
+            "array_cutoff": int(m.array_cutoff),
+        }
         return out
 
     def scrub(self) -> Dict:
@@ -762,6 +850,14 @@ class _Handler(BaseHTTPRequestHandler):
             return
         if self.path == "/admin/compact":
             self._send(200, self.service.compact())
+            return
+        if self.path == "/admin/optimize":
+            req = self._body()
+            out = self.service.optimize(
+                col_order=req.get("col_order", "auto"),
+                remap=bool(req.get("remap", True)))
+            out["ok"] = True
+            self._send(200, out)
             return
         if self.path != "/query":
             raise _HTTPError(404, "not_found", f"unknown path {self.path}")

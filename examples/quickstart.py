@@ -13,6 +13,11 @@ The lifecycle this walks through:
     .query().where(e).count()         -> compressed-domain popcount
     .query().where(e).group_by(c).count() -> bincount-shaped aggregation
     .query().top_k(c, k)              -> heavy hitters, no rows decompressed
+    Dataset.from_rows(..., measures={"sales": arr})  -> v4 measure sidecar
+    .query().where(e).sum("sales")    -> interval-sliced scalar aggregates
+    .group_by(a, b).sum("sales")      -> two-column measure matrices
+    .top_k(c, k, measure="sales")     -> shard-pruned sum-ranked top-k
+    .serve().sql("SELECT sum(sales) FROM t WHERE ... GROUP BY day")
     .serve()                          -> pooled caching HTTP service
     Dataset.open(dir, live=True)      -> WAL-backed mutable layer
     .append(rows) / .delete(e)        -> delta index + compressed tombstones
@@ -140,6 +145,57 @@ def _run(workdir):
           f"count={again['count']} "
           f"(cache {svc.stats()['cache']['misses']} misses)")
     svc.close()
+
+    # --- OLAP dashboard: measures + sum/avg + SQL ---------------------------
+    # declare numeric measure columns and the store grows a columnar
+    # sidecar (format v4); sum/avg/min/max, two-column group-by and
+    # measure-ranked top-k all evaluate by slicing the mmap'd measure
+    # arrays with the filter's EWAH run intervals — no rows reconstructed.
+    # (spill_dir builds don't take measures: the row permutation never
+    # materializes there.)
+    sales = rng.integers(0, 1_000, len(ranked)).astype(np.int64)
+    facts = Dataset.from_rows(ranked, names, sort="lex", k=1, shards=2,
+                              measures={"sales": sales})
+    olap_dir = os.path.join(workdir, "olap")
+    facts.save(olap_dir)                      # v4 store: bitmaps + sidecar
+    facts = Dataset.open(olap_dir)            # measures mmap back zero-copy
+
+    fq = facts.query().where(col("region") == v_region)
+    total = fq.sum("sales")
+    by_day_region = fq.group_by("day", "region").sum("sales")
+    leaders = facts.query().top_k("user", 3, measure="sales")
+    print(f"\ndashboard: sum(sales)={total}, avg={fq.avg('sales'):.1f}, "
+          f"group_by(day,region) -> {by_day_region.shape} matrix, "
+          f"top spenders {leaders}")
+
+    # bit-exact against the NumPy row oracle (sales in the dataset's
+    # sorted row order)
+    s_sorted = sales[lex_sort(ranked, facts.sort_order)]
+    s_mask = sorted_table[:, 0] == v_region
+    assert total == int(s_sorted[s_mask].sum())
+    g = np.zeros((facts.card("day"), facts.card("region")), dtype=np.int64)
+    np.add.at(g, (sorted_table[s_mask, 1], sorted_table[s_mask, 0]),
+              s_sorted[s_mask])
+    assert np.array_equal(by_day_region, g)
+
+    # the service answers the same statement in JSON or SQL — both
+    # compile to one statement object and share cache entries
+    dash = facts.serve(pool_workers=2)
+    out = dash.statement({"select": {"sum": "sales", "by": ["day"]},
+                          "where": {"op": "eq", "col": "region",
+                                    "value": v_region}})
+    via_sql = dash.sql(f"SELECT sum(sales) FROM t "
+                       f"WHERE region = {v_region} GROUP BY day")
+    assert via_sql["values"] == out["values"] and via_sql["cached"]
+    top_sql = dash.sql("SELECT sum(sales) FROM t GROUP BY user LIMIT 3")
+    assert [tuple(t) for t in top_sql["top"]] == leaders
+    print(f"service: SQL group-by cached={via_sql['cached']}; "
+          f"LIMIT 3 rewrote into pruned top-k {top_sql['top']}")
+    # on the cluster tier the same statements degrade instead of failing:
+    # with every replica of a shard down the response carries
+    # exact=false + missing_shards + covered_rows and is never cached
+    # (see examples/cluster_quickstart.py for the worker-kill demo)
+    dash.close()
 
     # --- streaming ingest: append / delete / compact ------------------------
     # the sorted base is immutable; mutations go to a WAL-framed delta

@@ -79,6 +79,22 @@ def top_k_from_counts(counts: np.ndarray, k: int) -> List[Tuple[int, int]]:
     return [(int(v), int(counts[v])) for v in order]
 
 
+def top_k_from_values(values: np.ndarray, counts: np.ndarray,
+                      k: int) -> List[Tuple[int, Union[int, float]]]:
+    """The ``k`` largest entries of a per-group value vector (measure sums)
+    as ``[(value_rank, value), ...]``: descending value, ties by ascending
+    rank — the *same* deterministic tie-break as ``top_k_from_counts``, so
+    mono, sharded and cluster top-k orderings agree.  Groups with zero
+    rows (``counts == 0``) never appear, even when their value is 0."""
+    values = np.asarray(values)
+    counts = np.asarray(counts)
+    nz = np.flatnonzero(counts)
+    order = nz[np.lexsort((nz, -values[nz]))][:max(int(k), 0)]
+    if values.dtype.kind == "f":
+        return [(int(v), float(values[v])) for v in order]
+    return [(int(v), int(values[v])) for v in order]
+
+
 class Dataset:
     """A queryable fact table: index + names + (optionally) the sorted rows.
 
@@ -140,7 +156,8 @@ class Dataset:
                   sort_stats: Optional[SortStats] = None,
                   container: Optional[str] = None,
                   remap: bool = False,
-                  layout: Optional[LayoutDecision] = None) -> "Dataset":
+                  layout: Optional[LayoutDecision] = None,
+                  measures: Optional[Dict] = None) -> "Dataset":
         """Sort + index a fact table of integer value ranks in one call.
 
         ``sort`` is ``"lex"`` (lexicographic with the paper's §4.3
@@ -158,6 +175,14 @@ class Dataset:
         where the cost model says they pay off), or ``None`` to pick by
         sort: sorted builds stay pure run-list (their bitmaps are runs
         already), unsorted ``sort="none"`` builds use ``"auto"``.
+
+        ``measures`` declares numeric *measure columns* (``{name: 1-D
+        int/float array}``, one value per input row): they are permuted by
+        the same sort as the rows, sliced along the same shard cuts, and
+        persisted as the store's zero-copy sidecar — the data behind
+        ``query().sum("sales")`` and friends.  Integer measures become
+        int64, floating ones float64.  Spilled builds (``spill_dir``) do
+        not support measures (the row permutation never materializes).
 
         ``remap=True`` additionally applies histogram-aware value
         remapping (``repro.core.layout``): a streaming pass collects
@@ -197,6 +222,14 @@ class Dataset:
         names = list(columns) if columns is not None else None
         if container is None:
             container = "run" if order is not None else "auto"
+        if measures is not None:
+            from .measures import normalize_measures
+            if spill_dir is not None:
+                raise ValueError(
+                    "measures are not supported with spill_dir builds: the "
+                    "sort permutation never materializes out-of-core, so "
+                    "the sidecar could not be reordered to match the rows")
+            measures = normalize_measures(measures, n)
 
         if order is not None and spill_dir is not None:
             # out-of-core: sorted chunks stream off merged on-disk runs and
@@ -221,10 +254,13 @@ class Dataset:
             table = rows[perm]
         else:
             perm, table = None, rows
+        if measures is not None and perm is not None:
+            # the sidecar rides the same permutation as the fact rows
+            measures = {name: arr[perm] for name, arr in measures.items()}
         index = _build_from_chunks(
             (table[s:s + chunk_rows] for s in range(0, max(n, 1), chunk_rows)),
             n, cards, k, allocation, shards, partition_rows, names,
-            container=container, remaps=remaps)
+            container=container, remaps=remaps, measures=measures)
         return cls(index, names, table=table, row_perm=perm,
                    sort_order=order, cards=cards, k=k,
                    allocation=allocation, partition_rows=partition_rows,
@@ -259,6 +295,9 @@ class Dataset:
                 raise ValueError("from_chunks got no rows")
             table = np.concatenate(buf, axis=0)
             return cls.from_rows(table, columns, cards=cards, **kwargs)
+        if kwargs.get("measures") is not None:
+            raise ValueError(
+                "measures are not supported with spill_dir builds")
         os.makedirs(spill_dir, exist_ok=True)
         path = os.path.join(spill_dir, "input-rows.i64")
         n = d = 0
@@ -449,7 +488,8 @@ class Dataset:
                 len(self.table), self._cards or _table_cards(self.table),
                 self._k, self._allocation, int(n_shards),
                 self._partition_rows, self.column_names,
-                container=self._container, remaps=self.remaps)
+                container=self._container, remaps=self.remaps,
+                measures=_index_measures(idx))
             return Dataset(index, self.column_names, table=self.table,
                            row_perm=self.row_perm, sort_order=self.sort_order,
                            cards=self._cards, k=self._k,
@@ -500,6 +540,12 @@ class Dataset:
             old_live, idx = idx, idx.base
         if not idx.n_rows:
             raise ValueError("optimize() on an empty dataset")
+        measures = _index_measures(idx)
+        if measures and spill_dir is not None:
+            raise ValueError(
+                "optimize(spill_dir=...) is not supported on a "
+                "measure-bearing dataset: the re-sort permutation never "
+                "materializes out-of-core, so the sidecar could not follow")
         size_before = idx.size_words
         n_shards = int(shards) if shards is not None \
             else getattr(idx, "n_shards", 1)
@@ -522,6 +568,14 @@ class Dataset:
             shards=n_shards if n_shards > 1 else 0,
             partition_rows=self._partition_rows, chunk_rows=chunk_rows,
             sort_stats=sort_stats)
+        if measures:
+            # the reconstructed chunks streamed in the old row order; the
+            # rebuild's sort permutation maps it onto the new order, and
+            # the sidecar follows it just like a fresh from_rows build
+            perm = new.row_perm
+            _attach_measures(new.index,
+                             {name: (arr[perm] if perm is not None else arr)
+                              for name, arr in measures.items()})
         # adopt the rebuilt layout in place
         self.sort_order = new.sort_order
         self._cards = new._cards
@@ -596,6 +650,11 @@ class Dataset:
     def card(self, col) -> int:
         return self.index.card(self.index.resolve_column(col))
 
+    @property
+    def measure_names(self) -> List[str]:
+        """Declared measure columns, in declaration order."""
+        return list(getattr(self.index, "measure_names", []) or [])
+
     # -- querying -----------------------------------------------------------
     def query(self, backend: str = "auto") -> "Query":
         """Start a statement: ``.where(expr)`` narrows it, a terminal
@@ -632,14 +691,45 @@ class Dataset:
         return QueryService(self.index, **service_kwargs)
 
 
+def _attach_measures(index: AnyIndex,
+                     measures: Optional[Dict[str, np.ndarray]]) -> None:
+    """Attach flat (already row-ordered) measure arrays to an index,
+    slicing along the shard cuts when sharded."""
+    if not measures:
+        return
+    if isinstance(index, ShardedIndex):
+        off = 0
+        for sh in index.shards:
+            sh.measures = {name: arr[off:off + sh.n_rows]
+                           for name, arr in measures.items()}
+            off += sh.n_rows
+    else:
+        index.measures = dict(measures)
+
+
+def _index_measures(index: AnyIndex) -> Optional[Dict[str, np.ndarray]]:
+    """The index's measure sidecar as flat arrays in global row order
+    (concatenating shard slices), or ``None`` when it carries none."""
+    if isinstance(index, ShardedIndex):
+        if not index.shards[0].measures:
+            return None
+        return {name: np.concatenate([np.asarray(sh.measures[name])
+                                      for sh in index.shards])
+                for name in index.shards[0].measures}
+    return dict(index.measures) if index.measures else None
+
+
 def _build_from_chunks(chunks: Iterable[np.ndarray], n_rows: int,
                        cards: Sequence[int], k: int, allocation: str,
                        shards: int, partition_rows: Optional[int],
                        names: Optional[Sequence[str]],
                        container: str = "run",
-                       remaps: Optional[Sequence] = None) -> AnyIndex:
+                       remaps: Optional[Sequence] = None,
+                       measures: Optional[Dict] = None) -> AnyIndex:
     """Stream row chunks into one index — monolithic, or cut into
-    ``shards`` word-aligned row shards built by independent builders."""
+    ``shards`` word-aligned row shards built by independent builders.
+    ``measures`` (flat arrays in the chunks' row order) attach to the
+    result, sliced along the same shard cuts."""
     def builder():
         return IndexBuilder(cards, k=k, allocation=allocation,
                             partition_rows=partition_rows,
@@ -664,11 +754,14 @@ def _build_from_chunks(chunks: Iterable[np.ndarray], n_rows: int,
             done.append(cur.finish())
         else:
             cur.abort()
-        return ShardedIndex(done, column_names=names)
-    b = builder()
-    for chunk in chunks:
-        b.append(chunk)
-    return b.finish()
+        index: AnyIndex = ShardedIndex(done, column_names=names)
+    else:
+        b = builder()
+        for chunk in chunks:
+            b.append(chunk)
+        index = b.finish()
+    _attach_measures(index, measures)
+    return index
 
 
 class Query:
@@ -712,14 +805,58 @@ class Query:
         return execute_count(self._index, self._where,
                              backend=self._backend, pool=self._pool)
 
-    def group_by(self, col) -> "GroupedQuery":
-        return GroupedQuery(self, col)
+    def group_by(self, col, *more) -> "GroupedQuery":
+        """GROUP BY one or two columns; two-column grouping aggregates
+        into a ``(card_a, card_b)`` matrix, still entirely in the
+        compressed domain (pairwise interval intersection)."""
+        return GroupedQuery(self, col, *more)
 
-    def top_k(self, col, k: int) -> List[Tuple[int, int]]:
-        """The ``k`` most frequent value ranks of ``col`` under the filter,
-        as ``[(value_rank, count), ...]`` sorted by descending count (ties
-        by ascending rank); zero-count values never appear."""
-        return top_k_from_counts(self.group_by(col).count(), k)
+    # -- measure aggregates --------------------------------------------------
+    def agg(self, measure) -> Tuple:
+        """Raw ``(sum, count, min, max)`` of ``measure`` under the filter,
+        computed by slicing the measure sidecar with the filter's run
+        intervals — no row ids, no row reconstruction.  ``min``/``max``
+        are ``None`` when no row matches."""
+        from .executor import execute_agg
+        return execute_agg(self._index, measure, self._where,
+                           backend=self._backend, pool=self._pool)
+
+    def sum(self, measure):
+        from .measures import finalize_scalar
+        return finalize_scalar("sum", self.agg(measure))
+
+    def avg(self, measure):
+        """Mean of ``measure`` over matching rows (``None`` if none match).
+        The division happens here, at the very top — shards and workers
+        only ever merge exact (sum, count) partials."""
+        from .measures import finalize_scalar
+        return finalize_scalar("avg", self.agg(measure))
+
+    def min(self, measure):
+        from .measures import finalize_scalar
+        return finalize_scalar("min", self.agg(measure))
+
+    def max(self, measure):
+        from .measures import finalize_scalar
+        return finalize_scalar("max", self.agg(measure))
+
+    def top_k(self, col, k: int, measure=None) -> List[Tuple]:
+        """The ``k`` heaviest value ranks of ``col`` under the filter —
+        by row count (default) or by ``sum(measure)`` — as ``[(value_rank,
+        weight), ...]`` sorted by descending weight, ties by ascending
+        rank; values with no matching rows never appear.  On a sharded
+        index this runs the shard-pruned (TPUT-style) two-phase protocol;
+        ordering is identical to the monolithic path by construction."""
+        from .executor import execute_group_agg
+        idx = self._index
+        if isinstance(idx, ShardedIndex):
+            return idx.top_k(col, k, self._where, measure=measure,
+                             backend=self._backend, pool=self._pool)
+        if measure is None:
+            return top_k_from_counts(self.group_by(col).count(), k)
+        agg = execute_group_agg(idx, measure, [col], self._where,
+                                backend=self._backend, pool=self._pool)
+        return top_k_from_values(agg["sums"], agg["counts"], k)
 
     def rows(self, limit: Optional[int] = None) -> np.ndarray:
         """Matching row ids (sorted); the one terminal that decompresses.
@@ -769,24 +906,79 @@ class Query:
 
 
 class GroupedQuery:
-    """``query().group_by(col)`` — terminal ``count()`` only, by design."""
+    """``query().group_by(a[, b])`` — aggregate terminals over one or two
+    grouping columns.
 
-    __slots__ = ("_query", "_col")
+    One column keeps the historical shapes (``count()`` is the
+    ``np.bincount``-shaped vector); two columns return ``(card_a,
+    card_b)`` matrices.  All terminals stay in the compressed domain: the
+    shared filter evaluates once, each grouping column's value bitmaps
+    intersect it by run-interval arithmetic, and measure statistics come
+    from slicing the measure sidecar over the filtered coordinates.
+    """
 
-    def __init__(self, query: Query, col):
+    __slots__ = ("_query", "_cols")
+
+    def __init__(self, query: Query, col, *more):
+        if len(more) > 1:
+            raise ValueError(
+                f"group_by supports at most two columns, got {1 + len(more)}")
         self._query = query
-        self._col = col
+        self._cols = (col,) + more
+
+    @property
+    def _col(self):  # backward-compatible single-column accessor
+        return self._cols[0]
+
+    def _shape(self, agg: Dict) -> Tuple[int, ...]:
+        return tuple(int(s) for s in agg["shape"])
 
     def count(self) -> np.ndarray:
-        """Per-value counts of the grouped column under the query's filter:
-        an int64 vector of length ``card(col)``, bit-identical to
-        ``np.bincount`` over the matching rows — computed from the bitmaps
-        alone (interval intersection), with per-shard partial vectors
-        summed at the coordinator."""
-        from .executor import execute_group_count
+        """Per-group row counts under the query's filter: an int64 vector
+        of length ``card(col)`` (one column, bit-identical to
+        ``np.bincount`` over the matching rows) or a ``(card_a, card_b)``
+        matrix (two columns) — computed from the bitmaps alone, with
+        per-shard partial vectors summed at the coordinator."""
         q = self._query
-        return execute_group_count(q._index, self._col, q._where,
-                                   backend=q._backend, pool=q._pool)
+        if len(self._cols) == 1:
+            from .executor import execute_group_count
+            return execute_group_count(q._index, self._cols[0], q._where,
+                                       backend=q._backend, pool=q._pool)
+        agg = self.agg(None)
+        return agg["counts"].reshape(self._shape(agg))
 
-    def top(self, k: int) -> List[Tuple[int, int]]:
-        return self._query.top_k(self._col, k)
+    def agg(self, measure) -> Dict:
+        """The raw mergeable partial: ``{"cols", "shape", "counts", and —
+        with a measure — "sums", "mins", "maxs"}`` (flat arrays; reshape
+        by ``shape``).  The building block behind the named terminals."""
+        from .executor import execute_group_agg
+        q = self._query
+        return execute_group_agg(q._index, measure, list(self._cols),
+                                 q._where, backend=q._backend, pool=q._pool)
+
+    def _finalized(self, op: str, measure) -> np.ndarray:
+        from .measures import finalize_group
+        agg = self.agg(measure)
+        return finalize_group(op, agg).reshape(self._shape(agg))
+
+    def sum(self, measure) -> np.ndarray:
+        """Per-group sums of ``measure`` (measure-dtype array; empty
+        groups are 0)."""
+        return self._finalized("sum", measure)
+
+    def avg(self, measure) -> np.ndarray:
+        """Per-group means (float64; empty groups are NaN)."""
+        return self._finalized("avg", measure)
+
+    def min(self, measure) -> np.ndarray:
+        """Per-group minima (float64; empty groups are NaN)."""
+        return self._finalized("min", measure)
+
+    def max(self, measure) -> np.ndarray:
+        """Per-group maxima (float64; empty groups are NaN)."""
+        return self._finalized("max", measure)
+
+    def top(self, k: int, measure=None) -> List[Tuple]:
+        if len(self._cols) != 1:
+            raise ValueError("top(k) needs a single grouping column")
+        return self._query.top_k(self._cols[0], k, measure=measure)

@@ -32,11 +32,13 @@ from typing import Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from . import cost_model as _cm
+from . import measures as _ms
 from .ewah import EWAH, and_many, or_many
 from .expr import Expr
 from .index import BitmapIndex
-from .planner import (PAnd, PBitmap, PConst, PCount, PDiff, PGroupCount,
-                      PNot, POr, PPinned, PlanNode, Planner, plan)
+from .planner import (PAgg, PAnd, PBitmap, PConst, PCount, PDiff,
+                      PGroupAgg, PGroupCount, PNot, POr, PPinned, PlanNode,
+                      Planner, plan)
 
 # the historical static threshold, kept as the uncalibrated fallback; the
 # live value comes from ``repro.core.cost_model`` (measured crossover when a
@@ -280,6 +282,106 @@ class Executor:
                            minlength=len(node.groups)).astype(np.int64)
         return out
 
+    def _filter_intervals(self, filt: Optional[PlanNode]):
+        """A filter node's set-bit intervals, ``None`` filters covering all
+        rows; returns empty arrays for an all-false filter."""
+        if isinstance(filt, PConst):
+            if not filt.value:
+                return (np.empty(0, dtype=np.int64),
+                        np.empty(0, dtype=np.int64))
+            filt = None
+        if filt is None:
+            n = self.index.n_rows
+            if not n:
+                return (np.empty(0, dtype=np.int64),
+                        np.empty(0, dtype=np.int64))
+            return (np.asarray([0], dtype=np.int64),
+                    np.asarray([n], dtype=np.int64))
+        return self._run(filt).set_intervals()
+
+    def run_agg(self, node: PAgg):
+        """Scalar ``(sum, count, min, max)`` of a measure under the node's
+        filter: the filter's run intervals slice the mmap'd measure array
+        directly (one gather, three reductions) — no row ids, no result
+        bitmap, no row reconstruction."""
+        values = self.index.measure(node.measure)
+        fs, fe = self._filter_intervals(node.filter)
+        return _ms.reduce_intervals(values, fs, fe)
+
+    def run_group_agg(self, node: PGroupAgg) -> Dict:
+        """Grouped aggregates over one or two columns in the filtered
+        domain.
+
+        The filter's intervals define a dense coordinate space of
+        ``count(filter)`` positions; the measure is gathered into it once
+        and prefix-summed, so every group's sum is two subtractions and its
+        min/max one segmented ``reduceat``.  Each grouping column's rank
+        bitmaps *partition* the rows (every row holds exactly one value),
+        so their interval images partition the filtered domain: one column
+        accumulates per-rank segments directly; two columns sweep the
+        *elementary segments* induced by both columns' boundaries, binning
+        each into its ``(rank_a, rank_b)`` cell — cost O(selected rows +
+        intervals), never O(card_a * card_b * rows).
+        """
+        cards = tuple(len(g) for g in node.groups)
+        name = node.measure
+        values = self.index.measure(name) if name is not None else None
+        dt = _ms.measure_dtype_str(values) if values is not None else None
+        out = _ms.empty_group_agg(node.cols, cards, name, dt)
+        fs, fe = self._filter_intervals(node.filter)
+        if not len(fs):
+            return out
+        F = int((fe - fs).sum())
+        fvals = _ms.gather(values, fs, fe) if values is not None else None
+        pref = _ms.prefix_sums(fvals) if fvals is not None else None
+        # per-column segment catalogs in filtered coordinates, sorted by
+        # start (segments of one column are disjoint and cover [0, F))
+        catalogs = []
+        for groups in node.groups:
+            ss, es, rs = [], [], []
+            for g, gn in enumerate(groups):
+                s, e = self._run(gn).set_intervals()
+                if not len(s):
+                    continue
+                cs = _ms.interval_coverage(fs, fe, s)
+                ce = _ms.interval_coverage(fs, fe, e)
+                keep = ce > cs
+                if not keep.any():
+                    continue
+                ss.append(cs[keep])
+                es.append(ce[keep])
+                rs.append(np.full(int(keep.sum()), g, dtype=np.int64))
+            if not ss:
+                return out  # a partition with no coverage means F == 0
+            S = np.concatenate(ss)
+            E = np.concatenate(es)
+            R = np.concatenate(rs)
+            order = np.argsort(S, kind="stable")
+            catalogs.append((S[order], E[order], R[order]))
+        if len(catalogs) == 1:
+            S, E, R = catalogs[0]
+            cell = R
+            size = cards[0]
+        else:
+            # elementary segments: boundaries wherever either column
+            # changes rank; each segment is homogeneous in both columns
+            (sa, _, ra), (sb, _, rb) = catalogs
+            S = np.unique(np.concatenate([sa, sb]))
+            E = np.concatenate([S[1:], [F]]).astype(np.int64)
+            ia = np.searchsorted(sa, S, side="right") - 1
+            ib = np.searchsorted(sb, S, side="right") - 1
+            cell = ra[ia] * cards[1] + rb[ib]
+            size = cards[0] * cards[1]
+        out["counts"] += np.bincount(cell, weights=(E - S),
+                                     minlength=size).astype(np.int64)
+        if values is not None:
+            # np.add.at (not bincount) keeps int64 sums exact past 2^53
+            np.add.at(out["sums"], cell, pref[E] - pref[S])
+            mins, maxs = _ms.segmented_min_max(fvals, S, E)
+            np.minimum.at(out["mins"], cell, mins)
+            np.maximum.at(out["maxs"], cell, maxs)
+        return out
+
     def _run_diff(self, node: PDiff) -> EWAH:
         """AND(pos) \\ OR(neg) via EWAH's native andnot — negated operands
         never materialize their complements."""
@@ -410,6 +512,49 @@ def execute_group_count(index, col, e: Optional[Expr] = None,
     node = Planner(index, optimize=optimize).plan_group_count(col, e)
     return Executor(index, backend=backend,
                     cache=cache).run_group_count(node)
+
+
+def execute_agg(index, measure: str, e: Optional[Expr] = None,
+                backend: Backend = "auto", optimize: bool = True,
+                cache: Optional[Dict] = None, pool=None):
+    """Scalar ``(sum, count, min, max)`` of ``measure`` under filter ``e``
+    (``e=None`` aggregates all rows), computed by interval-slicing the
+    measure sidecar — sharded indexes merge per-shard partial tuples at
+    the coordinator (``repro.core.measures.merge_scalar_aggs``)."""
+    from .shard import ShardedIndex
+    from .ingest import LiveIndex
+    if isinstance(index, LiveIndex):
+        return index.agg(measure, e, backend=backend, optimize=optimize,
+                         pool=pool)
+    if isinstance(index, ShardedIndex):
+        return index.agg(measure, e, backend=backend, optimize=optimize,
+                         caches=_shard_caches(index, cache), pool=pool)
+    node = Planner(index, optimize=optimize).plan_agg(measure, e)
+    return Executor(index, backend=backend, cache=cache).run_agg(node)
+
+
+def execute_group_agg(index, measure: Optional[str], cols,
+                      e: Optional[Expr] = None,
+                      backend: Backend = "auto", optimize: bool = True,
+                      cache: Optional[Dict] = None, pool=None) -> Dict:
+    """GROUP BY one or two columns, aggregating ``measure`` (or counting
+    rows when ``measure`` is ``None``) under filter ``e``.  Returns the
+    partial-aggregate dict of ``Executor.run_group_agg``; project it onto
+    one op with ``repro.core.measures.finalize_group``.  Sharded indexes
+    merge per-shard partials elementwise."""
+    from .shard import ShardedIndex
+    from .ingest import LiveIndex
+    if isinstance(index, LiveIndex):
+        return index.group_agg(measure, cols, e, backend=backend,
+                               optimize=optimize, pool=pool)
+    if isinstance(index, ShardedIndex):
+        return index.group_agg(measure, cols, e, backend=backend,
+                               optimize=optimize,
+                               caches=_shard_caches(index, cache),
+                               pool=pool)
+    node = Planner(index, optimize=optimize).plan_group_agg(measure, cols, e)
+    return Executor(index, backend=backend,
+                    cache=cache).run_group_agg(node)
 
 
 class QueryBatch:

@@ -286,6 +286,10 @@ class BitmapIndex:
     columns: List[ColumnIndex]
     partition_bounds: np.ndarray  # (n_parts + 1,)
     column_names: Optional[List[str]] = None
+    # numeric measure sidecar: {name: 1-D int64/float64 array of n_rows
+    # values, aligned with the indexed row order} — possibly zero-copy
+    # memmap views when the index was opened from a store file
+    measures: Optional[Dict[str, np.ndarray]] = None
 
     @classmethod
     def build(
@@ -335,6 +339,19 @@ class BitmapIndex:
 
     def card(self, col: int) -> int:
         return self.columns[col].encoder.card
+
+    @property
+    def measure_names(self) -> List[str]:
+        return list(self.measures) if self.measures else []
+
+    def measure(self, name: str) -> np.ndarray:
+        """The flat measure array for ``name`` (raises ``KeyError`` for an
+        undeclared measure — measures are declared at build time)."""
+        if not self.measures or name not in self.measures:
+            raise KeyError(
+                f"unknown measure {name!r}; this index declares "
+                f"{self.measure_names}")
+        return self.measures[name]
 
     def resolve_column(self, key) -> int:
         """Map a column name (if the index carries names) or position to an

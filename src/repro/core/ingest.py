@@ -41,12 +41,13 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from . import measures as _ms
 from . import wal as walmod
 from .ewah import EWAH, _empty_ewah
 from .expr import Expr, canonical_key
 from .index import (BitmapIndex, ColumnIndex, IndexBuilder, WORD_ROWS,
                     concat_bitmaps)
-from .planner import PGroupCount, Planner, PPinned
+from .planner import PAgg, PGroupAgg, PGroupCount, Planner, PPinned
 from .shard import ShardedIndex
 
 DELTA_PARTITION_ROWS = 4096
@@ -91,17 +92,22 @@ class DeltaIndex:
                                      column_names=self.column_names,
                                      container="auto")
         self._chunks: List[np.ndarray] = []
+        self._mchunks: Dict[str, List[np.ndarray]] = {}
         self.n_rows = 0
         self._version = 0
         self._compiled = None  # (version, BitmapIndex)
 
-    def append(self, rows: np.ndarray) -> int:
+    def append(self, rows: np.ndarray, measures=None) -> int:
         rows = np.ascontiguousarray(np.asarray(rows), dtype=np.int64)
         if rows.ndim != 2 or rows.shape[1] != len(self.cards):
             raise ValueError(f"rows shape {rows.shape} does not match "
                              f"{len(self.cards)} columns")
         if not len(rows):
             return 0
+        if measures:
+            for name, arr in measures.items():
+                self._mchunks.setdefault(name, []) \
+                    .append(np.ascontiguousarray(arr))
         self._chunks.append(rows)
         self._builder.append(rows)  # seals any completed partitions
         self.n_rows += len(rows)
@@ -114,6 +120,15 @@ class DeltaIndex:
             return np.empty((0, len(self.cards)), dtype=np.int64)
         return self._chunks[0] if len(self._chunks) == 1 \
             else np.concatenate(self._chunks, axis=0)
+
+    def measure_rows(self) -> Optional[Dict[str, np.ndarray]]:
+        """Appended measure tails, concatenated in arrival order (aligned
+        row-for-row with ``rows()``), or None when measure-free."""
+        if not self._mchunks:
+            return None
+        return {name: (chunks[0] if len(chunks) == 1
+                       else np.concatenate(chunks))
+                for name, chunks in self._mchunks.items()}
 
     def index(self) -> BitmapIndex:
         """The delta as a queryable ``BitmapIndex`` (memoized per version).
@@ -143,7 +158,8 @@ class DeltaIndex:
             columns.append(ColumnIndex(encoder=col.encoder, bitmaps=bitmaps))
         idx = BitmapIndex(n_rows=self.n_rows, columns=columns,
                           partition_bounds=np.asarray(bounds, dtype=np.int64),
-                          column_names=self.column_names)
+                          column_names=self.column_names,
+                          measures=self.measure_rows())
         self._compiled = (self._version, idx)
         return idx
 
@@ -186,6 +202,14 @@ class LiveIndex:
         self.sync = bool(fsync if sync is None else sync)
         self.cards = [base.card(c) for c in range(base.n_columns)]
         self.column_names = base.column_names
+        # the measure contract appended batches must honor (all-or-nothing:
+        # a live dataset either carries every declared measure on every
+        # append, or none at all — a sidecar with holes cannot aggregate)
+        base_measures = getattr(base.shards[0], "measures", None) \
+            if base.n_shards else None
+        self.measure_spec: Dict[str, str] = {
+            name: _ms.measure_dtype_str(np.asarray(arr))
+            for name, arr in (base_measures or {}).items()}
         meta: Dict = {}
         if dir_path is not None:
             from . import store
@@ -245,6 +269,8 @@ class LiveIndex:
                         f"misplaced log")
             elif k == "append":
                 self.delta.append(val)
+            elif k == "appendm":
+                self.delta.append(val[0], measures=val[1])
             else:
                 self._apply_delete(val)
 
@@ -292,6 +318,10 @@ class LiveIndex:
             words += self._dtomb.size_words
         return words
 
+    @property
+    def measure_names(self) -> List[str]:
+        return sorted(self.measure_spec)
+
     def card(self, col: int) -> int:
         return self.base.card(col)
 
@@ -331,15 +361,41 @@ class LiveIndex:
                     f"column {c} has value rank outside [0, {card})")
         return rows
 
-    def append(self, rows) -> int:
-        """Durably append a batch of rows (WAL frame first, then delta)."""
+    def _check_measures(self, measures, n_rows: int):
+        """Enforce the all-or-nothing measure contract *before* logging."""
+        if not self.measure_spec:
+            if measures:
+                raise ValueError(
+                    f"append() got measures {sorted(measures)} but this "
+                    f"live index declares none")
+            return None
+        if measures is None or set(measures) != set(self.measure_spec):
+            raise ValueError(
+                f"this live index carries measures "
+                f"{sorted(self.measure_spec)}; append() must supply exactly "
+                f"those (got {sorted(measures or {})})")
+        measures = _ms.normalize_measures(measures, n_rows)
+        # coerce to the declared dtype: an int batch for a float measure is
+        # fine, the sidecar's dtype is the contract
+        return {name: np.ascontiguousarray(
+                    arr, dtype=np.dtype(self.measure_spec[name]))
+                for name, arr in measures.items()}
+
+    def append(self, rows, measures=None) -> int:
+        """Durably append a batch of rows (WAL frame first, then delta).
+
+        When the base carries a measure sidecar, ``measures`` must supply a
+        value for *every* declared measure (``{name: 1-D array}``, aligned
+        with ``rows``); the batch is framed as a ``KIND_APPENDM`` WAL
+        record so replay reconstructs the values bit-exactly."""
         rows = self._check_rows(rows)
+        measures = self._check_measures(measures, len(rows))
         if not len(rows):
             return 0
         with self._lock:
             if self.wal is not None:
-                self.wal.log_append(rows)
-            self.delta.append(rows)
+                self.wal.log_append(rows, measures)
+            self.delta.append(rows, measures)
             self.generation += 1
         return len(rows)
 
@@ -520,6 +576,113 @@ class LiveIndex:
                 out += Executor(didx, backend=backend).run_group_count(node)
         return out
 
+    def agg(self, measure, e: Optional[Expr] = None, backend: str = "auto",
+            optimize: bool = True, pool=None):
+        """Scalar ``(sum, count, min, max)`` of ``measure`` under ``e``,
+        compressed-domain across the base+delta merge: each layer slices
+        its own measure sidecar with its effective filter (tombstones
+        pinned into the plan as already-evaluated bitmaps) and the partial
+        tuples merge — no row reconstruction anywhere."""
+        from .executor import Executor
+        name = str(measure)
+        if name not in self.measure_spec:
+            raise KeyError(f"unknown measure {name!r}; this live index "
+                           f"declares {sorted(self.measure_spec)}")
+        base, tombs, dsnap, dn, dt = self._snapshot()
+        didx = dsnap[0]
+        parts = []
+        if base.n_rows:
+            if all(t is None for t in tombs):
+                parts.append(base.agg(name, e, backend=backend,
+                                      optimize=optimize, pool=pool))
+            else:
+                fparts = base.execute_per_shard(
+                    e, backend=backend, optimize=optimize, pool=pool) \
+                    if e is not None else [None] * len(tombs)
+                for sh, t, fp in zip(base.shards, tombs, fparts):
+                    if not sh.n_rows:
+                        continue
+                    planner = Planner(sh, optimize=optimize)
+                    if t is None and fp is None:
+                        node = planner.plan_agg(name, None)
+                    else:
+                        eff = fp if t is None else \
+                            (~t if fp is None else fp.andnot(t))
+                        planner._measure_check(name)
+                        node = PAgg(name, PPinned(eff))
+                    parts.append(Executor(sh, backend=backend).run_agg(node))
+        if didx is not None:
+            planner = Planner(didx, optimize=optimize)
+            if dt is None and e is None:
+                node = planner.plan_agg(name, None)
+            else:
+                if e is not None:
+                    eff = self._delta_result(dsnap, e, backend, optimize)
+                    if dt is not None:
+                        eff = eff.andnot(dt)
+                else:
+                    eff = ~dt
+                planner._measure_check(name)
+                node = PAgg(name, PPinned(eff))
+            parts.append(Executor(didx, backend=backend).run_agg(node))
+        return _ms.merge_scalar_aggs(parts)
+
+    def group_agg(self, measure, cols, e: Optional[Expr] = None,
+                  backend: str = "auto", optimize: bool = True, pool=None):
+        """Grouped aggregates over one or two columns across the base+delta
+        merge (``measure=None`` computes counts only) — same per-layer
+        partial shape as ``Executor.run_group_agg``, merged elementwise,
+        tombstones pinned exactly as in ``group_count``."""
+        from .executor import Executor
+        name = None if measure is None else str(measure)
+        if name is not None and name not in self.measure_spec:
+            raise KeyError(f"unknown measure {name!r}; this live index "
+                           f"declares {sorted(self.measure_spec)}")
+        base, tombs, dsnap, dn, dt = self._snapshot()
+        didx = dsnap[0]
+        if isinstance(cols, (int, np.integer, str)):
+            cols = [cols]
+        cs = tuple(base.resolve_column(c) for c in cols)
+        parts = []
+        if base.n_rows:
+            if all(t is None for t in tombs):
+                parts.append(base.group_agg(name, list(cs), e,
+                                            backend=backend,
+                                            optimize=optimize, pool=pool))
+            else:
+                fparts = base.execute_per_shard(
+                    e, backend=backend, optimize=optimize, pool=pool) \
+                    if e is not None else [None] * len(tombs)
+                for sh, t, fp in zip(base.shards, tombs, fparts):
+                    if not sh.n_rows:
+                        continue
+                    planner = Planner(sh, optimize=optimize)
+                    node = planner.plan_group_agg(name, list(cs), None)
+                    if not (t is None and fp is None):
+                        eff = fp if t is None else \
+                            (~t if fp is None else fp.andnot(t))
+                        node = PGroupAgg(name, node.cols, node.groups,
+                                         PPinned(eff))
+                    parts.append(
+                        Executor(sh, backend=backend).run_group_agg(node))
+        if didx is not None:
+            planner = Planner(didx, optimize=optimize)
+            if dt is None:
+                node = planner.plan_group_agg(name, list(cs), e)
+            else:
+                eff = self._delta_result(dsnap, e, backend,
+                                         optimize).andnot(dt) \
+                    if e is not None else ~dt
+                plain = planner.plan_group_agg(name, list(cs), None)
+                node = PGroupAgg(name, plain.cols, plain.groups, PPinned(eff))
+            parts.append(Executor(didx, backend=backend).run_group_agg(node))
+        if not parts:
+            shape = tuple(base.card(c) for c in cs)
+            return _ms.empty_group_agg(cs, shape, name,
+                                       self.measure_spec.get(name)
+                                       if name else None)
+        return _ms.merge_group_aggs(parts)
+
     # -- compaction ----------------------------------------------------------
     def compact(self, relayout: bool = False) -> Dict:
         """Fold delta + tombstones into a freshly sorted, compacted base.
@@ -552,6 +715,7 @@ class LiveIndex:
         try:
             base, tombs = self.base, list(self._tombs)
             drows = self.delta.rows()
+            dmeas = self.delta.measure_rows()
             dn = self.delta.n_rows
             dt = self._dtomb.pad_to(dn) \
                 if (self._dtomb is not None and dn) else None
@@ -561,8 +725,8 @@ class LiveIndex:
                 # replays onto the new base at swap time
                 self._lock.release()
                 lock_held = False
-            table = self._reconstruct(base, tombs, drows, dt)
-            new_base = self._rebuild(table, relayout=relayout)
+            table, msr = self._reconstruct(base, tombs, drows, dt, dmeas)
+            new_base = self._rebuild(table, measures=msr, relayout=relayout)
             if not lock_held:
                 self._lock.acquire()
                 lock_held = True
@@ -627,6 +791,8 @@ class LiveIndex:
                 k, val = walmod.decode_frame(kind, payload)
                 if k == "append":
                     self.delta.append(val)
+                elif k == "appendm":
+                    self.delta.append(val[0], measures=val[1])
                 elif k == "delete":
                     self._apply_delete(val)
             self.compactions += 1
@@ -664,25 +830,50 @@ class LiveIndex:
                 "reapplied_frames": len(tail)}
 
     def _reconstruct(self, base: ShardedIndex, tombs, drows: np.ndarray,
-                     dt: Optional[EWAH]) -> np.ndarray:
+                     dt: Optional[EWAH], dmeas=None):
+        """-> ``(table, measures|None)``: the live rows, plus the aligned
+        measure sidecar values of exactly those rows (base values masked by
+        tombstones, delta tails masked by the delta tombstone)."""
         parts: List[np.ndarray] = []
+        mparts: Dict[str, List[np.ndarray]] = \
+            {name: [] for name in self.measure_spec}
         for sh, t in zip(base.shards, tombs):
             if not sh.n_rows:
                 continue
             keep = ~t if t is not None else None
             parts.append(sh.reconstruct_rows(keep))
+            for name in mparts:
+                vals = np.asarray(sh.measures[name])
+                if t is not None:
+                    mask = np.ones(sh.n_rows, dtype=bool)
+                    mask[t.set_bits()] = False
+                    vals = vals[mask]
+                mparts[name].append(vals)
         if len(drows):
+            alive = None
             if dt is not None:
                 alive = np.ones(len(drows), dtype=bool)
                 alive[dt.set_bits()] = False
                 drows = drows[alive]
             if len(drows):
                 parts.append(drows)
+                for name in mparts:
+                    vals = np.asarray((dmeas or {})[name])
+                    mparts[name].append(vals[alive] if alive is not None
+                                        else vals)
+        measures = None
+        if mparts:
+            measures = {
+                name: (np.concatenate(chunks) if chunks else
+                       np.empty(0, dtype=np.dtype(self.measure_spec[name])))
+                for name, chunks in mparts.items()}
         if not parts:
-            return np.empty((0, len(self.cards)), dtype=np.int64)
-        return parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
+            return np.empty((0, len(self.cards)), dtype=np.int64), measures
+        table = parts[0] if len(parts) == 1 \
+            else np.concatenate(parts, axis=0)
+        return table, measures
 
-    def _rebuild(self, table: np.ndarray,
+    def _rebuild(self, table: np.ndarray, measures=None,
                  relayout: bool = False) -> ShardedIndex:
         from .dataset import DEFAULT_CHUNK_ROWS, _build_from_chunks
         from .layout import LayoutDecision, LayoutStats
@@ -704,14 +895,18 @@ class LiveIndex:
         remaps = layout.remaps if layout is not None else None
         if order is not None and n > 1:
             from .sorting import external_merge_sort_perm
-            table = table[external_merge_sort_perm(table, chunk, order,
-                                                   remaps=remaps)]
+            perm = external_merge_sort_perm(table, chunk, order,
+                                            remaps=remaps)
+            table = table[perm]
+            if measures:
+                measures = {name: np.asarray(vals)[perm]
+                            for name, vals in measures.items()}
         idx = _build_from_chunks(
             (table[s:s + chunk] for s in range(0, max(n, 1), chunk)),
             n, self.cards, self.recipe.get("k", 1),
             self.recipe.get("allocation", "alpha"), self.base.n_shards,
             self.recipe.get("partition_rows"), self.column_names,
-            remaps=remaps)
+            remaps=remaps, measures=measures)
         if not isinstance(idx, ShardedIndex):
             idx = ShardedIndex([idx], column_names=self.column_names)
         return idx

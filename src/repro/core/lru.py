@@ -24,9 +24,20 @@ def payload_nbytes(v) -> int:
     ``size_bytes`` on a container-backed bitmap is its exact serialized
     container size (chunk directory + payloads), *not* the cost of the
     EWAH words it would lazily emit — so the byte budget tracks what the
-    cache actually holds in memory."""
+    cache actually holds in memory.
+
+    Aggregate results are *composite*: a scalar aggregate is a ``(sum,
+    count, min, max)`` tuple, a grouped aggregate a dict of count/sum/
+    min/max arrays (possibly card_a x card_b cells), and shard-pruned
+    top-k reports nest arrays inside dicts.  Without the recursive tuple/
+    dict branches below, every such entry would size as 0 and a result
+    cache full of group-by matrices would evade its byte budget entirely."""
     size = getattr(v, "size_bytes", None)
     if size is None:
+        if isinstance(v, (tuple, list)):
+            return sum(payload_nbytes(x) for x in v)
+        if isinstance(v, dict):
+            return sum(payload_nbytes(x) for x in v.values())
         size = getattr(v, "nbytes", 0)
     return int(size)
 
@@ -39,6 +50,10 @@ def payload_kind(v) -> str:
     summary = getattr(v, "container_summary", None)
     if summary is not None:
         return summary()
+    if isinstance(v, dict):
+        return "agg"  # grouped-aggregate / pruned top-k partials
+    if isinstance(v, tuple):
+        return "agg" if any(hasattr(x, "nbytes") for x in v) else "scalar"
     if hasattr(v, "nbytes"):
         return "vector"
     return "scalar"

@@ -172,6 +172,44 @@ class PGroupCount(PlanNode):
                 f"where={self.filter!r})")
 
 
+@dataclass
+class PAgg(PlanNode):
+    """Scalar sum/count/min/max of one measure under a filter.
+
+    Evaluated by slicing the measure sidecar with the filter's
+    ``set_intervals()`` — a vectorized gather + reduction over the selected
+    rows, no row reconstruction.  The executor always returns the full
+    ``(sum, count, min, max)`` partial so one evaluation (and one cache
+    entry, coordinator-side) serves every projection including ``avg``."""
+    measure: str
+    filter: Optional[PlanNode]
+
+    def __repr__(self):
+        return f"AGG({self.measure!r}, where={self.filter!r})"
+
+
+@dataclass
+class PGroupAgg(PlanNode):
+    """Grouped aggregates over one or two grouping columns.
+
+    ``groups[j][v]`` is the lowered value node of rank ``v`` of grouping
+    column ``cols[j]``.  With one column the executor maps each rank's
+    intervals into the filter's dense coordinate space and reads sums off a
+    prefix array; with two it intersects the *pairwise* segment catalogs of
+    both columns (an elementary-segment sweep over their combined interval
+    boundaries) so the (card_a x card_b) matrix costs one pass, not
+    card_a*card_b bitmap ANDs.  ``measure=None`` computes counts only."""
+    measure: Optional[str]
+    cols: Tuple[int, ...]
+    groups: Tuple[List[PlanNode], ...]
+    filter: Optional[PlanNode]
+
+    def __repr__(self):
+        dims = "x".join(f"c{c}" for c in self.cols)
+        return (f"GROUP_AGG({self.measure!r} by {dims}, "
+                f"where={self.filter!r})")
+
+
 # ---------------------------------------------------------------------------
 # Logical rewrites (index-free).
 # ---------------------------------------------------------------------------
@@ -289,6 +327,65 @@ class Planner:
             self.index.n_rows
         node.ckey = ("gcount", c,
                      None if filt is None else filt.ckey)
+        return node
+
+    def _measure_check(self, name: str) -> None:
+        measures = getattr(self.index, "measures", None) or {}
+        if name not in measures:
+            raise KeyError(
+                f"unknown measure {name!r}; this index declares "
+                f"{sorted(measures)}")
+
+    def plan_agg(self, measure: str, e: Optional[Expr] = None) -> PAgg:
+        """Lower a scalar measure aggregate (sum/avg/min/max/count of a
+        measure) under an optional filter."""
+        self._measure_check(measure)
+        filt = self.plan(e) if e is not None else None
+        node = PAgg(measure, filt)
+        node.est_words = 0
+        node.est_rows = filt.est_rows if filt is not None else \
+            self.index.n_rows
+        if filt is not None and filt.ckey is None:
+            node.ckey = None  # pinned filter: no stable structural identity
+        else:
+            node.ckey = ("agg", measure,
+                         None if filt is None else filt.ckey)
+        return node
+
+    def plan_group_agg(self, measure: Optional[str], cols,
+                       e: Optional[Expr] = None) -> PGroupAgg:
+        """Lower a grouped aggregate over one or two grouping columns.
+
+        ``measure=None`` lowers a multi-column COUNT(*) group-by (the
+        two-column analogue of ``plan_group_count``)."""
+        if measure is not None:
+            self._measure_check(measure)
+        cols = [cols] if isinstance(cols, (int, np.integer, str)) else \
+            list(cols)
+        if not (1 <= len(cols) <= 2):
+            raise ValueError(
+                f"group_agg takes 1 or 2 grouping columns, got {len(cols)}")
+        resolved = []
+        groups = []
+        for col in cols:
+            c = self.index.resolve_column(col)
+            if c in resolved:
+                raise ValueError(
+                    f"duplicate grouping column {col!r}")
+            resolved.append(c)
+            enc = self.index.columns[c].encoder
+            codes = enc.codes(np.arange(self.index.card(c), dtype=np.int64))
+            groups.append([self._value_node(c, code) for code in codes])
+        filt = self.plan(e) if e is not None else None
+        node = PGroupAgg(measure, tuple(resolved), tuple(groups), filt)
+        node.est_words = 0
+        node.est_rows = filt.est_rows if filt is not None else \
+            self.index.n_rows
+        if filt is not None and filt.ckey is None:
+            node.ckey = None
+        else:
+            node.ckey = ("gagg", measure, tuple(resolved),
+                         None if filt is None else filt.ckey)
         return node
 
     def _lower(self, e: Expr) -> PlanNode:
@@ -614,6 +711,21 @@ def explain(node: PlanNode, depth: int = 0) -> str:
     if isinstance(node, PGroupCount):
         lines = [f"{pad}GROUP-COUNT c{node.col} x{len(node.groups)} groups "
                  f"(compressed-domain interval intersection)"]
+        if node.filter is not None:
+            lines += [f"{pad}  where:", explain(node.filter, depth + 2)]
+        return "\n".join(lines)
+    if isinstance(node, PAgg):
+        lines = [f"{pad}AGG {node.measure} (interval-sliced measure "
+                 f"reduction) {_est(node)}"]
+        if node.filter is not None:
+            lines += [f"{pad}  where:", explain(node.filter, depth + 2)]
+        return "\n".join(lines)
+    if isinstance(node, PGroupAgg):
+        dims = " x ".join(f"c{c}({len(g)} groups)"
+                          for c, g in zip(node.cols, node.groups))
+        what = node.measure if node.measure is not None else "count(*)"
+        lines = [f"{pad}GROUP-AGG {what} by {dims} "
+                 f"(filtered-domain segment sweep)"]
         if node.filter is not None:
             lines += [f"{pad}  where:", explain(node.filter, depth + 2)]
         return "\n".join(lines)

@@ -100,6 +100,24 @@ class ShardedIndex:
                     f"shard {i} column {c} value remap differs from shard "
                     f"0's; shards must share the frequency remap or query "
                     f"results would disagree across shard boundaries")
+        ma = sh.measures or {}
+        mb = ref.measures or {}
+        if sorted(ma) != sorted(mb):
+            raise ValueError(
+                f"shard {i} declares measures {sorted(ma)}, expected "
+                f"{sorted(mb)}; shards must carry identical measure "
+                f"sidecars or aggregates would silently drop rows")
+        for name in ma:
+            da = np.asarray(ma[name]).dtype
+            db = np.asarray(mb[name]).dtype
+            if da != db:
+                raise ValueError(
+                    f"shard {i} measure {name!r} dtype {da} differs from "
+                    f"shard 0's {db}")
+            if len(ma[name]) != sh.n_rows:
+                raise ValueError(
+                    f"shard {i} measure {name!r} has {len(ma[name])} "
+                    f"values for {sh.n_rows} rows")
         if interior and sh.n_rows % WORD_ROWS:
             raise ValueError(
                 f"interior shard {i} has {sh.n_rows} rows, not a "
@@ -119,12 +137,15 @@ class ShardedIndex:
         column_names: Optional[Sequence[str]] = None,
         cache_entries: int = SHARD_CACHE_ENTRIES,
         cache_bytes: Optional[int] = SHARD_CACHE_BYTES,
+        measures: Optional[Dict] = None,
     ) -> "ShardedIndex":
         """Cut ``table`` into row shards of ``shard_rows`` and index each.
 
         Cardinalities are computed globally (unless given) so every shard
         uses identical encoders — a value absent from one shard still owns
         its bitmap there, keeping per-shard plans and results composable.
+        ``measures`` (``{name: numeric array}`` aligned with ``table``'s
+        rows) is sliced along the same shard cuts.
         """
         table = np.asarray(table)
         n, d = table.shape
@@ -132,13 +153,20 @@ class ShardedIndex:
         validate_partition_rows(partition_rows)
         if cards is None:
             cards = [int(table[:, c].max()) + 1 if n else 1 for c in range(d)]
+        if measures is not None:
+            from .measures import normalize_measures
+            measures = normalize_measures(measures, n)
         shards = []
         for s in range(0, n, shard_rows) or [0]:
             builder = IndexBuilder(cards, k=k, allocation=allocation,
                                    partition_rows=partition_rows,
                                    apply_heuristic=apply_heuristic,
                                    column_names=column_names)
-            shards.append(builder.append(table[s:s + shard_rows]).finish())
+            sh = builder.append(table[s:s + shard_rows]).finish()
+            if measures is not None:
+                sh.measures = {name: arr[s:s + shard_rows]
+                               for name, arr in measures.items()}
+            shards.append(sh)
         return cls(shards, column_names=column_names,
                    cache_entries=cache_entries, cache_bytes=cache_bytes)
 
@@ -284,10 +312,27 @@ class ShardedIndex:
                         [bm.slice_bits(lo - gs, hi - gs)
                          for bm in src.columns[c].bitmaps[p]])
                 bounds.append(bounds[-1] + (hi - lo))
-            new_shards.append(BitmapIndex(
+            ns = BitmapIndex(
                 n_rows=e - s, columns=cols,
                 partition_bounds=np.asarray(bounds, dtype=np.int64),
-                column_names=self.column_names))
+                column_names=self.column_names)
+            if self.shards[0].measures:
+                # the sidecar re-cuts by plain slicing along the same
+                # shard bounds the bitmaps were sliced at
+                m: Dict[str, np.ndarray] = {}
+                for name in self.shards[0].measures:
+                    segs = []
+                    for si, src in enumerate(self.shards):
+                        o = int(self.offsets[si])
+                        lo, hi = max(s, o), min(e, o + src.n_rows)
+                        if lo < hi:
+                            segs.append(np.asarray(
+                                src.measures[name][lo - o:hi - o]))
+                    dt = np.asarray(self.shards[0].measures[name]).dtype
+                    m[name] = (np.concatenate(segs) if segs
+                               else np.empty(0, dtype=dt))
+                ns.measures = m
+            new_shards.append(ns)
         return ShardedIndex(new_shards, column_names=self.column_names,
                             cache_entries=self._cache_entries,
                             cache_bytes=self._cache_bytes)
@@ -457,6 +502,144 @@ class ShardedIndex:
             out += p
         return out
 
+    # -- measure aggregates (compressed-domain OLAP) ------------------------
+    @property
+    def measure_names(self) -> List[str]:
+        return self.shards[0].measure_names
+
+    def agg(self, measure, e=None, backend: str = "auto",
+            optimize: bool = True, caches: Optional[List[Dict]] = None,
+            pool=None):
+        """Scalar ``(sum, count, min, max)`` of ``measure`` under filter
+        ``e``: each shard slices its own measure sidecar by its filter
+        intervals, the coordinator merges the four-number partials —
+        bitmaps and measure values never leave their shard."""
+        from .executor import Executor
+        from .planner import Planner
+        from .measures import merge_scalar_aggs
+        if e is not None and not isinstance(e, Expr):
+            raise TypeError(f"agg() takes an Expr or None, got {e!r}")
+        name = str(measure)
+        key = ("agg", name, backend, bool(optimize),
+               canonical_key(e) if e is not None else None)
+
+        def run_shard(i: int, sh: BitmapIndex):
+            node = Planner(sh, optimize=optimize).plan_agg(name, e)
+            cache = caches[i] if caches is not None else None
+            return Executor(sh, backend=backend, cache=cache).run_agg(node)
+
+        parts = self._fan_out(key, run_shard, ("agg", name, e), pool,
+                              backend, optimize)
+        return merge_scalar_aggs(parts)
+
+    def group_agg(self, measure, cols, e=None, backend: str = "auto",
+                  optimize: bool = True,
+                  caches: Optional[List[Dict]] = None, pool=None) -> Dict:
+        """GROUP BY one or two columns aggregating ``measure`` (or
+        counting rows when ``None``); per-shard partial dicts merge
+        elementwise (sums/counts add, mins/maxs combine against their
+        identities)."""
+        from .executor import Executor
+        from .planner import Planner
+        from .measures import merge_group_aggs
+        if e is not None and not isinstance(e, Expr):
+            raise TypeError(f"group_agg() takes an Expr or None, got {e!r}")
+        name = None if measure is None else str(measure)
+        if not isinstance(cols, (list, tuple)):
+            cols = [cols]
+        cs = tuple(self.resolve_column(c) for c in cols)
+        key = ("gagg", name, cs, backend, bool(optimize),
+               canonical_key(e) if e is not None else None)
+
+        def run_shard(i: int, sh: BitmapIndex) -> Dict:
+            node = Planner(sh, optimize=optimize).plan_group_agg(
+                name, list(cs), e)
+            cache = caches[i] if caches is not None else None
+            return Executor(sh, backend=backend,
+                            cache=cache).run_group_agg(node)
+
+        parts = self._fan_out(key, run_shard, ("gagg", name, cs, e), pool,
+                              backend, optimize)
+        return merge_group_aggs(parts)
+
+    def top_k(self, col, k: int, e=None, measure=None,
+              backend: str = "auto", optimize: bool = True,
+              caches: Optional[List[Dict]] = None, pool=None) -> List:
+        """Top-``k`` values of ``col`` by row count (or by ``sum(measure)``)
+        under filter ``e``, with *shard pruning* (TPUT-style).
+
+        Phase 1 asks every shard for its local top-``k`` (ids, partial
+        values, and its threshold ``tau`` — an upper bound on anything it
+        did not report).  The coordinator forms per-group lower bounds
+        (reported partials summed) and upper bounds (unreported shards
+        contribute ``tau``); groups whose upper bound falls below the
+        k-th best lower bound are *provably* outside the top-k and are
+        never touched again.  Phase 2 fetches exact partials for the
+        surviving candidates only.  Sum-pruning is only sound for
+        non-negative measures — any shard observing a negative partial
+        flags itself unprunable and the coordinator falls back to a full
+        vector merge.  Ties break by (value desc, rank asc) — identical to
+        the monolithic ``top_k_from_counts`` path.
+        """
+        from .dataset import top_k_from_counts, top_k_from_values
+        c = self.resolve_column(col)
+        k = int(k)
+        if k <= 0:
+            return []
+        name = None if measure is None else str(measure)
+        card = self.card(c)
+
+        def full_merge() -> List:
+            agg = self.group_agg(name, [c], e, backend=backend,
+                                 optimize=optimize, caches=caches, pool=pool)
+            if name is None:
+                return top_k_from_counts(agg["counts"], k)
+            return top_k_from_values(agg["sums"], agg["counts"], k)
+
+        if card <= k or self.n_shards == 1:
+            return full_merge()
+        key = ("gtop", c, name, k, backend, bool(optimize),
+               canonical_key(e) if e is not None else None)
+
+        def run_gtop(i: int, sh: BitmapIndex) -> Dict:
+            cache = caches[i] if caches is not None else None
+            return run_shard_task(sh, ("gtop", c, e, k, name),
+                                  backend=backend, optimize=optimize,
+                                  cache=cache)
+
+        parts = self._fan_out(key, run_gtop, ("gtop", c, e, k, name), pool,
+                              backend, optimize)
+        if not all(p["prunable"] for p in parts):
+            return full_merge()
+        vdt = parts[0]["vals"].dtype
+        tau_total = sum(p["tau"] for p in parts)
+        lb = np.zeros(card, dtype=vdt)
+        ub = np.full(card, tau_total, dtype=vdt)
+        for p in parts:
+            lb[p["ids"]] += p["vals"]
+            ub[p["ids"]] += p["vals"] - p["tau"]
+        kth_lb = np.partition(lb, card - k)[card - k]
+        candidates = np.flatnonzero(ub >= kth_lb)
+        ids = tuple(int(g) for g in candidates)
+
+        def run_gvals(i: int, sh: BitmapIndex) -> Dict:
+            cache = caches[i] if caches is not None else None
+            return run_shard_task(sh, ("gvals", c, e, ids, name),
+                                  backend=backend, optimize=optimize,
+                                  cache=cache)
+
+        # candidate sets are query-dependent; phase 2 skips the result LRU
+        parts2 = self._fan_out(None, run_gvals, ("gvals", c, e, ids, name),
+                               pool, backend, optimize)
+        vals = np.zeros(card, dtype=vdt)
+        counts = np.zeros(card, dtype=np.int64)
+        for p in parts2:
+            vals[candidates] += p["vals"]
+            counts[candidates] += p["counts"]
+        if name is None:
+            return top_k_from_counts(counts, k)
+        return top_k_from_values(vals, counts, k)
+
 
 # ---------------------------------------------------------------------------
 # Fork-based shard execution: CPU-bound EWAH work beyond the GIL.
@@ -540,8 +723,14 @@ def run_shard_task(sh: BitmapIndex, task, backend: str = "auto",
     returns the shard's EWAH result, ``("count", e)`` its partial count and
     ``("gcount", col, e)`` its partial per-value count vector — aggregates
     ship a few integers across a process or network boundary instead of a
-    bitmap.  This is the single shard-side execution path shared by the
-    fork-based ``ShardProcessPool`` and the RPC worker tier
+    bitmap.  Measure statements follow the same shape: ``("agg", measure,
+    e)`` returns the shard's ``(sum, count, min, max)`` partial,
+    ``("gagg", measure, cols, e)`` its grouped partial dict, ``("gtop",
+    col, e, m, measure)`` its pruned top-m report (ids/vals/counts plus the
+    ``tau`` threshold and a ``prunable`` flag) and ``("gvals", col, e, ids,
+    measure)`` exact partials at the given candidate ids.  This is the
+    single shard-side execution path shared by the fork-based
+    ``ShardProcessPool`` and the RPC worker tier
     (``repro.serve.worker_api``), so a remote worker computes exactly what
     the single-process ``ShardedIndex`` fan-out would.
     """
@@ -558,6 +747,40 @@ def run_shard_task(sh: BitmapIndex, task, backend: str = "auto",
     if kind == "gcount":
         return ex.run_group_count(
             Planner(sh, optimize=optimize).plan_group_count(task[1], task[2]))
+    if kind == "agg":
+        return ex.run_agg(
+            Planner(sh, optimize=optimize).plan_agg(task[1], task[2]))
+    if kind == "gagg":
+        return ex.run_group_agg(
+            Planner(sh, optimize=optimize).plan_group_agg(
+                task[1], list(task[2]), task[3]))
+    if kind == "gtop":
+        col, e, m, measure = task[1], task[2], int(task[3]), task[4]
+        agg = ex.run_group_agg(
+            Planner(sh, optimize=optimize).plan_group_agg(measure, [col], e))
+        counts = agg["counts"]
+        vals = counts if measure is None else agg["sums"]
+        nz = np.flatnonzero(counts)
+        # sum-pruning needs non-negative partials everywhere: one negative
+        # value and "unreported <= tau" no longer bounds anything
+        prunable = (measure is None or not len(nz)
+                    or not bool(vals[nz].min() < 0))
+        order = nz[np.lexsort((nz, -vals[nz]))][:m]
+        if len(nz) > m:
+            tau = vals[order[-1]]
+            tau = float(tau) if vals.dtype.kind == "f" else int(tau)
+        else:
+            tau = 0.0 if vals.dtype.kind == "f" else 0
+        return {"ids": order, "vals": vals[order], "counts": counts[order],
+                "tau": tau, "prunable": prunable}
+    if kind == "gvals":
+        col, e, ids, measure = task[1], task[2], task[3], task[4]
+        ids = np.asarray(ids, dtype=np.int64)
+        agg = ex.run_group_agg(
+            Planner(sh, optimize=optimize).plan_group_agg(measure, [col], e))
+        counts = agg["counts"]
+        vals = counts if measure is None else agg["sums"]
+        return {"vals": vals[ids], "counts": counts[ids]}
     raise ValueError(f"unknown shard task {kind!r}")
 
 
@@ -640,11 +863,14 @@ class ShardProcessPool:
         """Run one statement task over the given shards in the workers.
 
         ``task`` is a ``("expr", e)`` / ``("count", e)`` / ``("gcount",
-        col, e)`` tuple (see ``_forked_run``); a bare expression/plan is
+        col, e)`` / ``("agg", measure, e)`` / ``("gagg", measure, cols,
+        e)`` / ``("gtop", col, e, m, measure)`` / ``("gvals", col, e, ids,
+        measure)`` tuple (see ``_forked_run``); a bare expression/plan is
         accepted for backward compatibility and treated as ``("expr", e)``.
         """
         if not (isinstance(task, tuple) and task
-                and task[0] in ("expr", "count", "gcount", "probe")):
+                and task[0] in ("expr", "count", "gcount", "agg", "gagg",
+                                "gtop", "gvals", "probe")):
             task = ("expr", task)
         args = [(self._key, i, task, backend, optimize) for i in shard_ids]
         # a concurrent generation bump can shut this executor down between

@@ -60,9 +60,15 @@ VERSION_REMAP = 3      # v3: column metadata may carry a "remap" permutation
                        # (frequency-remapped value encoding).  Only written
                        # when a remap is present — an old build must refuse
                        # the file rather than silently decode wrong values.
-COMPAT_VERSIONS = (1, 2, 3)
+VERSION_MEASURES = 4   # v4: a columnar numeric measure sidecar rides after
+                       # the bitmap payload (header key "measures", segment
+                       # kind SEG_MEASURES).  Only written when measures are
+                       # present, so measure-free builds stay byte-identical
+                       # v2/v3 files.
+COMPAT_VERSIONS = (1, 2, 3, 4)
 SEG_EWAH = 0
 SEG_CONTAINERS = 1
+SEG_MEASURES = 2
 _PREAMBLE = struct.Struct("<8sIIQQI")  # magic, version, flags, off, len, crc
 PAYLOAD_START = 64  # 64-byte aligned payload keeps every segment word-aligned
 
@@ -113,7 +119,8 @@ class StoreWriter:
     """
 
     def __init__(self, path: str, encoders: Sequence[ColumnEncoder],
-                 column_names: Optional[Sequence[str]] = None):
+                 column_names: Optional[Sequence[str]] = None,
+                 measures: Optional[Dict[str, str]] = None):
         self.path = str(path)
         self._tmp = f"{self.path}.tmp.{os.getpid()}"
         self._encoders = list(encoders)
@@ -124,15 +131,40 @@ class StoreWriter:
         # toc[col][partition][bitmap] = [offset, n_words, crc32]
         self._toc: List[List[List[List[int]]]] = [[] for _ in self._encoders]
         self._bounds: List[int] = [0]
+        # measure sidecar: per-partition arrays are buffered and written
+        # contiguously per measure at close, so each measure mmap-opens as
+        # one zero-copy view spanning every partition
+        self._measures: Dict[str, Dict] = {}
+        if measures:
+            from .measures import MEASURE_DTYPES
+            for name, dt in measures.items():
+                if dt not in MEASURE_DTYPES:
+                    raise ValueError(
+                        f"measure {name!r} dtype {dt!r} not in "
+                        f"{MEASURE_DTYPES}")
+                self._measures[name] = {"dtype": dt, "parts": []}
         self._closed = False
 
     def add_partition(self, bitmaps_per_column: Sequence[Sequence[EWAH]],
-                      rows_part: int) -> None:
+                      rows_part: int,
+                      measures_part: Optional[Dict] = None) -> None:
         assert not self._closed
         if len(bitmaps_per_column) != len(self._encoders):
             raise ValueError(
                 f"partition has {len(bitmaps_per_column)} columns, writer "
                 f"expects {len(self._encoders)}")
+        if set(measures_part or {}) != set(self._measures):
+            raise ValueError(
+                f"partition carries measures {sorted(measures_part or {})}, "
+                f"writer declared {sorted(self._measures)}")
+        for name, spec in self._measures.items():
+            arr = np.ascontiguousarray(measures_part[name],
+                                       dtype=spec["dtype"])
+            if arr.ndim != 1 or len(arr) != rows_part:
+                raise ValueError(
+                    f"measure {name!r} partition has shape {arr.shape} for "
+                    f"{rows_part} rows")
+            spec["parts"].append(arr)
         for c, (enc, bms) in enumerate(zip(self._encoders,
                                            bitmaps_per_column)):
             if len(bms) != enc.L:
@@ -168,18 +200,46 @@ class StoreWriter:
 
     def close(self) -> str:
         assert not self._closed
-        header = json.dumps({
+        meta = {
             "n_rows": self._bounds[-1],
             "partition_bounds": self._bounds,
             "column_names": self._names,
             "columns": [_encoder_meta(e) for e in self._encoders],
             "toc": self._toc,
-        }, separators=(",", ":")).encode()
+        }
+        if self._measures:
+            # 8-byte-align the sidecar (bitmap segments are only 4-aligned)
+            # so every measure element view is naturally aligned; segments
+            # of one measure are adjacent, so the whole column is one view
+            pad = (-self._pos) % 8
+            if pad:
+                self._f.write(b"\0" * pad)
+                self._pos += pad
+            msec: Dict[str, Dict] = {}
+            for name, spec in self._measures.items():
+                rows = []
+                for arr in spec["parts"]:
+                    data = arr.tobytes()
+                    rows.append([self._pos, len(arr),
+                                 zlib.crc32(data) & 0xFFFFFFFF])
+                    self._f.write(data)
+                    self._pos += len(data)
+                if len(rows) != len(self._bounds) - 1:
+                    raise ValueError(
+                        f"measure {name!r} covers {len(rows)} partitions, "
+                        f"bitmaps cover {len(self._bounds) - 1}")
+                msec[name] = {"dtype": spec["dtype"], "toc": rows}
+            meta["measures"] = msec
+        header = json.dumps(meta, separators=(",", ":")).encode()
         hdr_off = self._pos
         self._f.write(header)
         self._f.seek(0)
-        version = VERSION_REMAP if any(
-            e.remap is not None for e in self._encoders) else VERSION
+        if self._measures:
+            version = VERSION_MEASURES
+        elif any(e.remap is not None for e in self._encoders):
+            version = VERSION_REMAP
+        else:
+            version = VERSION
         self._f.write(_PREAMBLE.pack(MAGIC, version, 0, hdr_off,
                                      len(header), zlib.crc32(header)))
         self._f.flush()
@@ -211,13 +271,20 @@ class StoreWriter:
 
 def save(index: BitmapIndex, path: str) -> str:
     """Write a finished in-memory index as one store file (atomic)."""
+    from .measures import measure_dtype_str
+    idx_measures = getattr(index, "measures", None) or {}
+    spec = {name: measure_dtype_str(np.asarray(arr))
+            for name, arr in idx_measures.items()}
     writer = StoreWriter(path, [c.encoder for c in index.columns],
-                         index.column_names)
+                         index.column_names, measures=spec or None)
     try:
         bounds = index.partition_bounds
         for p in range(index.n_partitions):
+            s, e = int(bounds[p]), int(bounds[p + 1])
+            mpart = {name: np.asarray(arr)[s:e]
+                     for name, arr in idx_measures.items()} or None
             writer.add_partition([col.bitmaps[p] for col in index.columns],
-                                 int(bounds[p + 1] - bounds[p]))
+                                 e - s, measures_part=mpart)
         return writer.close()
     except BaseException:
         writer.abort()
@@ -338,10 +405,80 @@ def load(path: str, mmap: bool = True,
                         f"carries unknown container tag {tag}")
             parts.append(bms)
         columns.append(ColumnIndex(encoder=enc, bitmaps=parts))
+    measures = _load_measures(data, meta, path, verify=verify)
     names = meta["column_names"]
     return BitmapIndex(n_rows=int(meta["n_rows"]), columns=columns,
                        partition_bounds=bounds,
-                       column_names=list(names) if names else None)
+                       column_names=list(names) if names else None,
+                       measures=measures)
+
+
+def _load_measures(data: np.ndarray, meta: Dict, path: str,
+                   verify: bool) -> Optional[Dict[str, np.ndarray]]:
+    """Open the v4 measure sidecar as zero-copy views into ``data``.
+
+    The measure TOC is cross-checked against the *bitmap* geometry: every
+    partition's element count must equal that partition's row count and the
+    total must equal ``n_rows`` — a sidecar that disagrees with the bitmaps
+    would silently misalign every aggregate, so it is rejected outright.
+    """
+    msec = meta.get("measures")
+    if not msec:
+        return None
+    from .measures import MEASURE_DTYPES
+    bounds = meta["partition_bounds"]
+    payload_end = meta["_header_off"]
+    n_rows = int(meta["n_rows"])
+    out: Dict[str, np.ndarray] = {}
+    for name, spec in msec.items():
+        dt = spec.get("dtype")
+        if dt not in MEASURE_DTYPES:
+            raise StoreVersionError(
+                f"{path}: measure {name!r} carries unknown dtype {dt!r}")
+        rows = spec.get("toc") or []
+        if len(rows) != len(bounds) - 1:
+            raise StoreCorruptError(
+                f"{path}: measure {name!r} TOC has {len(rows)} partitions, "
+                f"bitmaps have {len(bounds) - 1}")
+        total = 0
+        views = []
+        for p, (off, n_elems, crc) in enumerate(rows):
+            rows_part = int(bounds[p + 1]) - int(bounds[p])
+            if n_elems != rows_part:
+                raise StoreCorruptError(
+                    f"{path}: measure {name!r} partition {p} holds "
+                    f"{n_elems} values for {rows_part} bitmap rows — "
+                    f"sidecar disagrees with the index")
+            end = off + 8 * n_elems
+            if off < PAYLOAD_START or end > payload_end or off % 8:
+                raise StoreCorruptError(
+                    f"{path}: measure {name!r} partition {p} spans "
+                    f"[{off}, {end}), outside the aligned payload")
+            seg = data[off:end]
+            if verify and (zlib.crc32(seg.tobytes()) & 0xFFFFFFFF) != crc:
+                raise StoreCorruptError(
+                    f"{path}: checksum mismatch in measure {name!r} "
+                    f"partition {p}")
+            views.append(seg.view(dt))
+            total += int(n_elems)
+        if total != n_rows:
+            raise StoreCorruptError(
+                f"{path}: measure {name!r} holds {total} values for "
+                f"{n_rows} rows — sidecar disagrees with the index")
+        if not views:
+            out[name] = np.empty(0, dtype=dt)
+        elif len(views) == 1:
+            out[name] = views[0]
+        elif all(rows[p + 1][0] == rows[p][0] + 8 * rows[p][1]
+                 for p in range(len(rows) - 1)):
+            # the writer lays one measure's partitions adjacently, so the
+            # whole column stays a single zero-copy view into the map
+            first = rows[0][0]
+            out[name] = data[first:first + 8 * n_rows].view(dt)
+        else:
+            out[name] = np.concatenate(views) if views \
+                else np.empty(0, dtype=dt)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -503,6 +640,21 @@ def scrub(path: str) -> Dict:
                         {"col": c, "partition": p, "bitmap": b,
                          "offset": int(off), "n_words": int(n_words),
                          "reason": "checksum mismatch"})
+    for name, spec in (meta.get("measures") or {}).items():
+        for p, (off, n_elems, crc) in enumerate(spec.get("toc") or []):
+            out["n_segments"] += 1
+            end = off + 8 * n_elems
+            if off < PAYLOAD_START or end > payload_end or off % 8:
+                out["corrupt"].append(
+                    {"measure": name, "partition": p, "offset": int(off),
+                     "n_elems": int(n_elems),
+                     "reason": "measure segment outside the payload"})
+                continue
+            if (zlib.crc32(data[off:end].tobytes()) & 0xFFFFFFFF) != crc:
+                out["corrupt"].append(
+                    {"measure": name, "partition": p, "offset": int(off),
+                     "n_elems": int(n_elems),
+                     "reason": "measure checksum mismatch"})
     out["ok"] = not out["corrupt"]
     return out
 

@@ -28,6 +28,11 @@ Record kinds:
   the compacted base).
 * ``KIND_APPEND`` — a row batch: ``(n_rows, n_cols)`` header + raw
   little-endian int64 row-major cells.
+* ``KIND_APPENDM`` — a row batch *with measure tails*: a u32-length JSON
+  header naming ``n``/``d`` and the ordered measure ``(name, dtype)``
+  list, then the raw row cells, then each measure's raw array bytes in
+  header order.  Used when the live dataset carries a measure sidecar, so
+  replay reconstructs appended measure values bit-exactly.
 * ``KIND_DELETE`` — a delete predicate as a JSON wire expression
   (``repro.core.expr.to_wire``).  Deletes are *declarative* in the log:
   replay re-evaluates each predicate against the state reconstructed so
@@ -53,6 +58,9 @@ _APPEND_HDR = struct.Struct("<II")
 KIND_EPOCH = 1
 KIND_APPEND = 2
 KIND_DELETE = 3
+KIND_APPENDM = 4  # append with measure tails
+
+_APPENDM_HDR = struct.Struct("<I")  # u32 JSON header length
 
 
 class WALError(Exception):
@@ -86,6 +94,54 @@ def decode_append(payload: bytes) -> np.ndarray:
     return rows.reshape(n, d).astype(np.int64)
 
 
+def encode_append_m(rows: np.ndarray, measures) -> bytes:
+    """Row batch + aligned measure arrays (``{name: 1-D array}``)."""
+    rows = np.ascontiguousarray(rows, dtype="<i8")
+    if rows.ndim != 2:
+        raise WALError(f"append payload must be 2-D, got shape {rows.shape}")
+    spec = []
+    tails = []
+    for name, arr in dict(measures).items():
+        arr = np.ascontiguousarray(arr)
+        if arr.dtype == np.int64:
+            dt = "<i8"
+        elif arr.dtype == np.float64:
+            dt = "<f8"
+        else:
+            raise WALError(f"measure {name!r} dtype {arr.dtype} is not "
+                           f"int64/float64")
+        if arr.ndim != 1 or len(arr) != rows.shape[0]:
+            raise WALError(f"measure {name!r} has shape {arr.shape} for "
+                           f"{rows.shape[0]} rows")
+        spec.append([name, dt])
+        tails.append(arr.astype(dt, copy=False).tobytes())
+    hdr = json.dumps({"n": rows.shape[0], "d": rows.shape[1],
+                      "measures": spec}).encode()
+    return (_APPENDM_HDR.pack(len(hdr)) + hdr + rows.tobytes()
+            + b"".join(tails))
+
+
+def decode_append_m(payload: bytes):
+    """-> ``(rows, {name: array})``."""
+    (hlen,) = _APPENDM_HDR.unpack_from(payload)
+    off = _APPENDM_HDR.size
+    meta = json.loads(payload[off:off + hlen].decode())
+    off += hlen
+    n, d = int(meta["n"]), int(meta["d"])
+    cells = np.frombuffer(payload, dtype="<i8", offset=off, count=n * d)
+    off += 8 * n * d
+    rows = cells.reshape(n, d).astype(np.int64)
+    measures = {}
+    for name, dt in meta["measures"]:
+        arr = np.frombuffer(payload, dtype=dt, offset=off, count=n)
+        off += 8 * n
+        measures[name] = arr.astype(np.dtype(dt).newbyteorder("="))
+    if off != len(payload):
+        raise WALError(f"appendm payload has {len(payload) - off} "
+                       f"trailing bytes")
+    return rows, measures
+
+
 def encode_delete(e: Expr) -> bytes:
     return json.dumps(to_wire(e)).encode()
 
@@ -95,11 +151,14 @@ def decode_delete(payload: bytes) -> Expr:
 
 
 def decode_frame(kind: int, payload: bytes):
-    """(kind, payload) -> ('epoch', N) | ('append', rows) | ('delete', expr)."""
+    """(kind, payload) -> ('epoch', N) | ('append', rows) |
+    ('appendm', (rows, measures)) | ('delete', expr)."""
     if kind == KIND_EPOCH:
         return "epoch", decode_epoch(payload)
     if kind == KIND_APPEND:
         return "append", decode_append(payload)
+    if kind == KIND_APPENDM:
+        return "appendm", decode_append_m(payload)
     if kind == KIND_DELETE:
         return "delete", decode_delete(payload)
     raise WALError(f"unknown WAL record kind {kind}")
@@ -190,8 +249,11 @@ class WAL:
     def log_epoch(self, epoch: int) -> None:
         self.log(KIND_EPOCH, encode_epoch(epoch))
 
-    def log_append(self, rows: np.ndarray) -> None:
-        self.log(KIND_APPEND, encode_append(rows))
+    def log_append(self, rows: np.ndarray, measures=None) -> None:
+        if measures:
+            self.log(KIND_APPENDM, encode_append_m(rows, measures))
+        else:
+            self.log(KIND_APPEND, encode_append(rows))
 
     def log_delete(self, e: Expr) -> None:
         self.log(KIND_DELETE, encode_delete(e))

@@ -2,14 +2,16 @@
 
 ``ClusterService`` is the cluster-sized sibling of
 ``repro.serve.query_api.QueryService``: the same statements (count /
-group-by / top-k / row queries), the same wire expressions, the same HTTP
-front end (``make_server`` accepts either service) — but execution fans
-out over TCP to ``repro.serve.worker_api`` workers, each mmap-serving a
-subset of the shard store files.  Aggregates are the ideal first
-distributed workload: a shard's contribution is an integer or a small
-count vector (the per-shard partial count vectors ``ShardedIndex`` already
-merges in-process), so scatter/gather ships a few hundred bytes per shard,
-never a decompressed bitmap.
+group-by / top-k / sum/avg/min/max / grouped measure aggregates / row
+queries, plus the SQL-ish front door), the same wire expressions, the same
+HTTP front end (``make_server`` accepts either service) — but execution
+fans out over TCP to ``repro.serve.worker_api`` workers, each mmap-serving
+a subset of the shard store files.  Aggregates are the ideal first
+distributed workload: a shard's contribution is an integer, a small count
+vector, or a ``(sum, count, min, max)`` measure partial (the same
+per-shard partials ``ShardedIndex`` already merges in-process), so
+scatter/gather ships a few hundred bytes per shard, never a decompressed
+bitmap — grouped measure aggregates ship one flat matrix per shard.
 
 Every fan-out runs under a **robustness policy** (``Policy``):
 
@@ -507,7 +509,9 @@ class ClusterService:
         return None
 
     # -- scatter/gather ------------------------------------------------------
-    def _scatter(self, op: str, e: Optional[Expr], col: Optional[int] = None
+    def _scatter(self, op: str, e: Optional[Expr], col: Optional[int] = None,
+                 measure: Optional[str] = None,
+                 cols: Optional[Tuple[int, ...]] = None
                  ) -> Tuple[Dict[int, object], List[int]]:
         w = to_wire(e) if e is not None else None
 
@@ -517,6 +521,10 @@ class ClusterService:
                 obj["where"] = w
             if col is not None:
                 obj["col"] = col
+            if op in ("agg", "gagg"):
+                obj["measure"] = measure
+            if cols is not None:
+                obj["cols"] = list(cols)
             return obj
 
         def extract(sid: int) -> Callable:
@@ -525,6 +533,23 @@ class ClusterService:
             if op == "gcount":
                 return lambda out, arrs: np.asarray(arrs[f"g{sid}"],
                                                     dtype=np.int64)
+            if op == "agg":
+                # the scalar (sum, count, min, max) partial, JSON-shipped
+                return lambda out, arrs: tuple(out["aggs"][str(sid)])
+            if op == "gagg":
+                def ex(out, arrs):
+                    part = {"cols": tuple(out["cols"]),
+                            "shape": tuple(out["shapes"][str(sid)]),
+                            "measure": out["measure"],
+                            "dtype": out["dtype"],
+                            "counts": np.asarray(arrs[f"gc{sid}"],
+                                                 dtype=np.int64)}
+                    if out["measure"] is not None:
+                        part["sums"] = np.asarray(arrs[f"gs{sid}"])
+                        part["mins"] = np.asarray(arrs[f"gm{sid}"])
+                        part["maxs"] = np.asarray(arrs[f"gx{sid}"])
+                    return part
+                return ex
             return lambda out, arrs: (
                 np.asarray(arrs[f"w{sid}"]), int(out["n_bits"][str(sid)]))
 
@@ -585,15 +610,115 @@ class ClusterService:
                 "missing_shards": missing,
                 "covered_rows": self._coverage(missing), "cached": False}
 
-    def top_k(self, col, k: int, where=None) -> Dict:
-        from repro.core.dataset import top_k_from_counts
-        out = self.group_count(col, where)
-        top = top_k_from_counts(np.asarray(out["counts"]), int(k))
+    def top_k(self, col, k: int, where=None, measure=None) -> Dict:
+        from repro.core.dataset import top_k_from_counts, top_k_from_values
+        if measure is None:
+            out = self.group_count(col, where)
+            top = top_k_from_counts(np.asarray(out["counts"]), int(k))
+            return {"select": "top_k", "col": col, "k": int(k),
+                    "measure": None,
+                    "top": [[v, c] for v, c in top], "exact": out["exact"],
+                    "missing_shards": out["missing_shards"],
+                    "covered_rows": out["covered_rows"],
+                    "cached": out["cached"]}
+        # rank by SUM(measure): gather per-shard grouped-sum partials and
+        # merge — each partial is one card(col)-long vector, so the wire
+        # cost matches group_count, not a TPUT round trip per shard
+        from repro.core import measures as measures_mod
+        self._check_measure(measure)
+        e = self._as_expr(where)
+        c = self.meta.resolve_column(col)
+        agg, missing, cached = self._group_agg_raw(measure, (c,), e)
+        vals = measures_mod.finalize_group("sum", agg)
+        top = top_k_from_values(np.asarray(vals),
+                                np.asarray(agg["counts"]), int(k))
         return {"select": "top_k", "col": col, "k": int(k),
-                "top": [[v, c] for v, c in top], "exact": out["exact"],
-                "missing_shards": out["missing_shards"],
-                "covered_rows": out["covered_rows"],
-                "cached": out["cached"]}
+                "measure": measure,
+                "top": [[int(r), (int(v) if isinstance(v, (int, np.integer))
+                                  else float(v))] for r, v in top],
+                "exact": not missing, "missing_shards": missing,
+                "covered_rows": self._coverage(missing), "cached": cached}
+
+    # -- measure statements (compressed-domain OLAP) -------------------------
+    def _check_measure(self, name) -> None:
+        declared = list(getattr(self.meta, "measure_names", []) or [])
+        if not isinstance(name, str) or name not in declared:
+            raise KeyError(f"unknown measure {name!r}; this store declares "
+                           f"{declared}")
+
+    def agg(self, op: str, measure: str, where=None) -> Dict:
+        """Scalar sum/avg/min/max of a measure: each worker ships one
+        ``(sum, count, min, max)`` partial per shard, merged here."""
+        from repro.core import measures as measures_mod
+        self._check_measure(measure)
+        e = self._as_expr(where)
+        key = self._snapshot_key(f"agg:{measure}", None, e)
+        agg = self.cache.get(key)
+        missing: List[int] = []
+        cached = agg is not None
+        if agg is None:
+            results, missing = self._scatter("agg", e, measure=measure)
+            parts = [v for v in results.values() if v is not None]
+            agg = measures_mod.merge_scalar_aggs(parts)
+            if not missing:
+                self.cache.put(key, agg)
+        val = measures_mod.finalize_scalar(op, agg)
+        return {"select": op, "measure": measure, "value": val,
+                "count": int(agg[1]), "exact": not missing,
+                "missing_shards": missing,
+                "covered_rows": self._coverage(missing), "cached": cached}
+
+    def _group_agg_raw(self, measure: Optional[str],
+                       cs: Tuple[int, ...], e: Optional[Expr]):
+        """Scatter the grouped aggregate, merge the per-shard partial
+        matrices.  Returns ``(merged_partial, missing, cached)``; partial
+        results (missing shards skipped in the merge) are never cached."""
+        from repro.core import measures as measures_mod
+        key = self._snapshot_key(f"gagg:{measure}", cs, e)
+        hit = self.cache.get(key)
+        if hit is not None:
+            return hit, [], True
+        results, missing = self._scatter("gagg", e, measure=measure,
+                                         cols=cs)
+        parts = [v for v in results.values() if v is not None]
+        if parts:
+            agg = measures_mod.merge_group_aggs(parts)
+        else:
+            shape = tuple(self.meta.card(c) for c in cs)
+            dt = None
+            if measure is not None:
+                arr = self.meta.shards[0].measure(measure)
+                dt = measures_mod.measure_dtype_str(arr)
+            agg = measures_mod.empty_group_agg(cs, shape, measure, dt)
+        if not missing:
+            self.cache.put(key, agg)
+        return agg, missing, False
+
+    def group_agg(self, op: str, measure: Optional[str], by,
+                  where=None) -> Dict:
+        """Grouped sum/avg/min/max (or multi-column count when ``measure``
+        is None) over 1-2 columns."""
+        from repro.core import measures as measures_mod
+        if measure is not None:
+            self._check_measure(measure)
+        e = self._as_expr(where)
+        cs = tuple(self.meta.resolve_column(c) for c in by)
+        agg, missing, cached = self._group_agg_raw(measure, cs, e)
+        shape = list(agg["shape"])
+
+        def nest(flat):
+            return np.asarray(flat).reshape(shape).tolist()
+
+        out = {"select": "group_agg", "op": op, "measure": measure,
+               "by": list(by), "shape": shape,
+               "counts": nest(agg["counts"]), "exact": not missing,
+               "missing_shards": missing,
+               "covered_rows": self._coverage(missing), "cached": cached}
+        if op != "count":
+            from repro.serve.query_api import nan_to_none
+            out["values"] = nan_to_none(
+                nest(measures_mod.finalize_group(op, agg)))
+        return out
 
     def query(self, expr, explain_plan: bool = False) -> Dict:
         """Row query: per-shard EWAH results gathered and offset into
@@ -639,12 +764,22 @@ class ClusterService:
 
     def statement(self, obj: Dict) -> Dict:
         from repro.serve.query_api import parse_statement
-        kind, col, k, e = parse_statement(obj)
+        st = parse_statement(obj)
+        kind, e = st["kind"], st["where"]
         if kind == "count":
             return self.count(e)
         if kind == "group_count":
-            return self.group_count(col, e)
-        return self.top_k(col, k, e)
+            return self.group_count(st["col"], e)
+        if kind == "agg":
+            return self.agg(st["op"], st["measure"], e)
+        if kind == "group_agg":
+            return self.group_agg(st["op"], st["measure"], st["by"], e)
+        return self.top_k(st["col"], st["k"], e, measure=st["measure"])
+
+    def sql(self, text: str) -> Dict:
+        """Execute one SQL-ish statement (see ``query_api.parse_sql``)."""
+        from repro.serve.query_api import parse_sql
+        return self.statement(parse_sql(text))
 
     @staticmethod
     def _as_expr(where) -> Optional[Expr]:
@@ -747,6 +882,7 @@ class ClusterService:
             "n_shards": self.n_shards,
             "shard_rows": np.diff(self.meta.offsets).tolist(),
             "column_names": self.meta.column_names,
+            "measures": sorted(getattr(self.meta, "measure_names", []) or []),
             "replication": self.replication,
             "placement": [list(r) for r in self.placement],
             "workers": workers,

@@ -73,6 +73,19 @@ and for aggregate selects (the ``where`` clause is optional everywhere):
     {"select": {"group_count": "region"}, "where": <expr>}
     {"select": {"top_k": {"col": "region", "k": 5}}, "where": <expr>}
 
+Measure statements (OLAP over the columnar measure sidecar, evaluated in
+the compressed domain by slicing mmap'd measure arrays with the filter's
+``set_intervals()`` — no row reconstruction):
+    {"select": {"sum": "sales"}, "where": <expr>}            # also avg/min/max
+    {"select": {"sum": "sales", "by": ["day", "region"]}}    # 1-2 group cols
+    {"select": {"count": true, "by": ["day", "region"]}}     # multi-col counts
+    {"select": {"top_k": {"col": "region", "k": 5,
+                          "measure": "sales"}}}              # rank by SUM
+A top-level ``"limit": k`` turns a single-column count/sum group-by into
+the equivalent shard-pruned top-k.  ``{"sql": "SELECT sum(sales) FROM t
+WHERE day = 3 GROUP BY region LIMIT 5"}`` translates the SQL-ish form
+(``parse_sql``) into exactly these statements.
+
 Run standalone against a synthetic sorted table:
     PYTHONPATH=src python -m repro.serve.query_api --port 8321 --shards 4
 Build once, then warm-start serve:
@@ -94,11 +107,12 @@ import numpy as np
 
 from repro.core import BitmapIndex, ShardedIndex, lex_sort, synth
 from repro.core import cost_model
+from repro.core import measures as measures_mod
 from repro.core import store as index_store
-from repro.core.dataset import top_k_from_counts
+from repro.core.dataset import top_k_from_counts, top_k_from_values
 from repro.core.expr import Expr, canonical_key, from_wire, to_wire
-from repro.core.executor import (execute, execute_count,
-                                 execute_group_count)
+from repro.core.executor import (execute, execute_agg, execute_count,
+                                 execute_group_agg, execute_group_count)
 from repro.core.lru import LRUCache, payload_kind, payload_nbytes
 from repro.core.planner import explain, plan
 
@@ -118,35 +132,101 @@ def expr_to_json(e: Expr) -> Dict:
     return to_wire(e)
 
 
-def parse_statement(obj: Dict):
-    """``{"select": ..., "where": ...}`` -> (kind, col, k, where_expr).
+_AGG_OPS = ("sum", "avg", "min", "max")
 
-    ``kind`` is ``"count"`` / ``"group_count"`` / ``"top_k"``; ``col`` and
-    ``k`` are None where not applicable.  Raises ValueError on malformed
+
+def parse_statement(obj: Dict) -> Dict:
+    """``{"select": ..., "where": ..., "limit": ...}`` -> statement
+    descriptor.
+
+    Returns a dict with keys ``kind`` (``"count"`` / ``"group_count"`` /
+    ``"agg"`` / ``"group_agg"`` / ``"top_k"``), ``op`` (``sum`` / ``avg``
+    / ``min`` / ``max`` / ``count`` for measure statements), ``measure``,
+    ``col``, ``by`` (grouping column list), ``k`` and ``where`` (parsed
+    ``Expr``) — None where not applicable.  A top-level ``limit`` rewrites
+    a single-column count/sum group-by into the equivalent top-k (the
+    shard-prunable ranking ops).  Raises ValueError on malformed
     statements (mapped to HTTP 400).
     """
     sel = obj.get("select")
-    if not isinstance(sel, dict) or len(sel) != 1:
+    if not isinstance(sel, dict):
         raise ValueError(
-            f"'select' must be an object with exactly one of count / "
-            f"group_count / top_k: {sel!r}")
+            f"'select' must be an object naming one of count / group_count "
+            f"/ top_k / sum / avg / min / max: {sel!r}")
     where = obj.get("where")
     e = parse_expr(where) if where is not None else None
-    (kind, arg), = sel.items()
+    by = sel.get("by")
+    keys = [k for k in sel if k != "by"]
+    if len(keys) != 1:
+        raise ValueError(
+            f"'select' must name exactly one of count / group_count / "
+            f"top_k / sum / avg / min / max (plus an optional 'by'): "
+            f"{sel!r}")
+    kind, arg = keys[0], sel[keys[0]]
+    if by is not None:
+        if isinstance(by, (str, int)) and not isinstance(by, bool):
+            by = [by]
+        if (not isinstance(by, list) or not (1 <= len(by) <= 2)
+                or any(isinstance(c, bool) or not isinstance(c, (str, int))
+                       for c in by)):
+            raise ValueError(
+                f"'by' must list 1 or 2 grouping columns, got {by!r}")
+    out = {"kind": None, "op": None, "measure": None, "col": None,
+           "by": None, "k": None, "where": e}
     if kind == "count":
         if arg is not True:
             raise ValueError('use {"count": true}')
-        return "count", None, None, e
-    if kind == "group_count":
+        if by is None:
+            out["kind"] = "count"
+        else:
+            out.update(kind="group_agg", op="count", by=by)
+    elif kind in _AGG_OPS:
+        if not isinstance(arg, str) or not arg:
+            raise ValueError(f"{kind} needs a measure name, got {arg!r}")
+        out.update(op=kind, measure=arg)
+        if by is None:
+            out["kind"] = "agg"
+        else:
+            out.update(kind="group_agg", by=by)
+    elif by is not None:
+        raise ValueError(f"'by' does not combine with {kind!r}")
+    elif kind == "group_count":
         _check_col(arg, "group_count")
-        return "group_count", arg, None, e
-    if kind == "top_k":
+        out.update(kind="group_count", col=arg)
+    elif kind == "top_k":
         if not (isinstance(arg, dict) and "col" in arg and "k" in arg):
             raise ValueError(
                 f'top_k needs {{"col": ..., "k": ...}}, got {arg!r}')
         _check_col(arg["col"], "top_k")
-        return "top_k", arg["col"], int(arg["k"]), e
-    raise ValueError(f"unknown select {kind!r}")
+        m = arg.get("measure")
+        if m is not None and (not isinstance(m, str) or not m):
+            raise ValueError(f"top_k 'measure' must be a name, got {m!r}")
+        out.update(kind="top_k", col=arg["col"], k=int(arg["k"]), measure=m)
+    else:
+        raise ValueError(f"unknown select {kind!r}")
+    return _apply_limit(out, obj.get("limit"))
+
+
+def _apply_limit(st: Dict, limit) -> Dict:
+    """Rewrite ``limit`` on a single-column group statement into the
+    equivalent top-k (count and sum rankings — the ops shard pruning can
+    bound; an avg/min/max ranking has no monotone partial)."""
+    if limit is None:
+        return st
+    if isinstance(limit, bool) or not isinstance(limit, int) or limit < 1:
+        raise ValueError(f"'limit' must be a positive integer, got {limit!r}")
+    if st["kind"] == "group_count":
+        return {**st, "kind": "top_k", "k": int(limit), "measure": None}
+    if (st["kind"] == "group_agg" and st["by"] is not None
+            and len(st["by"]) == 1 and st["op"] in ("count", "sum")):
+        return {**st, "kind": "top_k", "col": st["by"][0], "by": None,
+                "k": int(limit), "measure": st["measure"]}
+    if st["kind"] == "top_k":
+        return {**st, "k": min(st["k"], int(limit))}
+    raise ValueError(
+        "'limit' ranks a single-column count or sum group-by (top-k); it "
+        "cannot truncate a scalar, a two-column matrix, or an avg/min/max "
+        "ranking")
 
 
 def _check_col(arg, kind: str) -> None:
@@ -155,6 +235,186 @@ def _check_col(arg, kind: str) -> None:
     if isinstance(arg, bool) or not isinstance(arg, (str, int)):
         raise ValueError(f"{kind} needs a column name or position, "
                          f"got {arg!r}")
+
+
+def nan_to_none(x):
+    """Recursively replace NaN (empty avg/min/max cells) with None so
+    grouped results serialize as strict JSON ``null``."""
+    if isinstance(x, list):
+        return [nan_to_none(v) for v in x]
+    if isinstance(x, float) and x != x:
+        return None
+    return x
+
+
+# -- SQL-ish front door ------------------------------------------------------
+
+def _sql_tokens(sql: str) -> List[tuple]:
+    import re
+    out: List[tuple] = []
+    i, n = 0, len(sql)
+    while i < n:
+        ch = sql[i]
+        if ch.isspace():
+            i += 1
+            continue
+        if ch in "(),=*":
+            out.append((ch, ch))
+            i += 1
+            continue
+        m = re.match(r"[A-Za-z_][A-Za-z0-9_]*", sql[i:])
+        if m:
+            out.append(("ident", m.group(0)))
+            i += len(m.group(0))
+            continue
+        m = re.match(r"-?\d+", sql[i:])
+        if m:
+            out.append(("int", int(m.group(0))))
+            i += len(m.group(0))
+            continue
+        raise ValueError(f"SQL: unexpected character {ch!r} at offset {i}")
+    out.append(("end", None))
+    return out
+
+
+class _SqlParser:
+    """Recursive-descent parser for the SQL-ish statement subset::
+
+        SELECT count(*) | sum(m) | avg(m) | min(m) | max(m)
+        FROM <table>                      -- single-table engine: name ignored
+        [WHERE <pred>]                    -- =, IN (...), BETWEEN a AND b,
+                                          --   AND / OR / NOT, parentheses
+        [GROUP BY a[, b]]
+        [LIMIT k]
+
+    Values are integer *ranks* (the dictionary-encoded domain the bitmap
+    index stores).  Produces the JSON statement object ``parse_statement``
+    accepts, so SQL and JSON front doors share one semantics."""
+
+    def __init__(self, sql: str):
+        self.toks = _sql_tokens(sql)
+        self.pos = 0
+
+    def peek(self) -> tuple:
+        return self.toks[self.pos]
+
+    def next(self) -> tuple:
+        t = self.toks[self.pos]
+        self.pos += 1
+        return t
+
+    def at_kw(self, word: str) -> bool:
+        t, v = self.peek()
+        return t == "ident" and v.upper() == word
+
+    def expect_kw(self, word: str) -> None:
+        if not self.at_kw(word):
+            raise ValueError(f"SQL: expected {word}, got {self.peek()[1]!r}")
+        self.next()
+
+    def expect(self, typ: str):
+        t, v = self.next()
+        if t != typ:
+            raise ValueError(f"SQL: expected {typ!r}, got {v!r}")
+        return v
+
+    # predicate grammar: OR < AND < NOT < primary
+    def pred_or(self) -> Dict:
+        args = [self.pred_and()]
+        while self.at_kw("OR"):
+            self.next()
+            args.append(self.pred_and())
+        return args[0] if len(args) == 1 else {"op": "or", "args": args}
+
+    def pred_and(self) -> Dict:
+        args = [self.pred_not()]
+        while self.at_kw("AND"):
+            self.next()
+            args.append(self.pred_not())
+        return args[0] if len(args) == 1 else {"op": "and", "args": args}
+
+    def pred_not(self) -> Dict:
+        if self.at_kw("NOT"):
+            self.next()
+            return {"op": "not", "arg": self.pred_not()}
+        return self.primary()
+
+    def primary(self) -> Dict:
+        t, v = self.peek()
+        if t == "(":
+            self.next()
+            e = self.pred_or()
+            self.expect(")")
+            return e
+        if t != "ident":
+            raise ValueError(f"SQL: expected a column name, got {v!r}")
+        self.next()
+        col = v
+        t2, v2 = self.next()
+        if t2 == "=":
+            return {"op": "eq", "col": col, "value": self.expect("int")}
+        if t2 == "ident" and v2.upper() == "IN":
+            self.expect("(")
+            vals = [self.expect("int")]
+            while self.peek()[0] == ",":
+                self.next()
+                vals.append(self.expect("int"))
+            self.expect(")")
+            return {"op": "in", "col": col, "values": vals}
+        if t2 == "ident" and v2.upper() == "BETWEEN":
+            lo = self.expect("int")
+            self.expect_kw("AND")
+            hi = self.expect("int")
+            return {"op": "range", "col": col, "lo": lo, "hi": hi}
+        raise ValueError(f"SQL: expected =, IN or BETWEEN after "
+                         f"{col!r}, got {v2!r}")
+
+    def parse(self) -> Dict:
+        self.expect_kw("SELECT")
+        t, fn = self.next()
+        if t != "ident" or fn.upper() not in ("COUNT", "SUM", "AVG",
+                                              "MIN", "MAX"):
+            raise ValueError(f"SQL: expected count(*)/sum(m)/avg(m)/min(m)"
+                             f"/max(m), got {fn!r}")
+        fn = fn.upper()
+        self.expect("(")
+        if fn == "COUNT":
+            self.expect("*")
+            sel: Dict = {"count": True}
+        else:
+            sel = {fn.lower(): self.expect("ident")}
+        self.expect(")")
+        self.expect_kw("FROM")
+        self.expect("ident")  # table name: single-table engine, ignored
+        out: Dict = {}
+        if self.at_kw("WHERE"):
+            self.next()
+            out["where"] = self.pred_or()
+        if self.at_kw("GROUP"):
+            self.next()
+            self.expect_kw("BY")
+            by = [self.expect("ident")]
+            while self.peek()[0] == ",":
+                self.next()
+                by.append(self.expect("ident"))
+            if len(by) > 2:
+                raise ValueError("SQL: GROUP BY takes at most two columns")
+            sel["by"] = by
+        if self.at_kw("LIMIT"):
+            self.next()
+            out["limit"] = self.expect("int")
+        if self.peek()[0] != "end":
+            raise ValueError(f"SQL: trailing input at {self.peek()[1]!r}")
+        out["select"] = sel
+        return out
+
+
+def parse_sql(sql: str) -> Dict:
+    """SQL-ish text -> the JSON statement object ``parse_statement``
+    accepts (and ``POST /query`` executes).  See ``_SqlParser``."""
+    if not isinstance(sql, str) or not sql.strip():
+        raise ValueError("'sql' must be a non-empty statement string")
+    return _SqlParser(sql).parse()
 
 
 class QueryService:
@@ -457,12 +717,18 @@ class QueryService:
         self._live_owned = True
         return self.index
 
-    def ingest(self, rows) -> Dict:
-        """Durably append rows; queries see them immediately (base ⊔ delta)."""
+    def ingest(self, rows, measures=None) -> Dict:
+        """Durably append rows (with optional aligned measure values);
+        queries see them immediately (base ⊔ delta)."""
         if rows is None:
             raise ValueError('ingest needs {"rows": [[...], ...]}')
         live = self.enable_live()
-        appended = live.append(np.asarray(rows))
+        ms = None
+        if measures:
+            if not isinstance(measures, dict):
+                raise ValueError('"measures" must map name -> value list')
+            ms = {str(k): np.asarray(v) for k, v in measures.items()}
+        appended = live.append(np.asarray(rows), measures=ms)
         return {"ok": True, "appended": appended, "n_rows": live.n_rows,
                 "delta_rows": live.delta.n_rows}
 
@@ -629,9 +895,13 @@ class QueryService:
 
         The column resolves against the *snapshotted* index — resolving
         against ``self.index`` outside the snapshot would let a concurrent
-        ``set_index`` cache another column's counts under a live key."""
+        ``set_index`` cache another column's counts under a live key.
+        ``col`` may also be a list of grouping columns (group_agg)."""
         gen, idx = self._snapshot()
-        c = idx.resolve_column(col) if col is not None else None
+        if isinstance(col, (list, tuple)):
+            c = tuple(idx.resolve_column(x) for x in col)
+        else:
+            c = idx.resolve_column(col) if col is not None else None
         key = (gen, getattr(idx, "generation", None), self.backend, kind, c,
                canonical_key(e) if e is not None else None)
         val = self.cache.get(key)
@@ -657,12 +927,70 @@ class QueryService:
         return {"select": "group_count", "col": col,
                 "counts": [int(x) for x in counts], "cached": cached}
 
-    def _top_k_one(self, col, k: int, e: Optional[Expr]) -> Dict:
-        out = self._group_count_one(col, e)
-        top = top_k_from_counts(np.asarray(out["counts"]), k)
+    def _agg_one(self, op: str, measure: str, e: Optional[Expr]) -> Dict:
+        """Scalar sum/avg/min/max over the measure sidecar, evaluated by
+        slicing mmap'd measure arrays with the filter's intervals."""
+        agg, cached = self._agg_cached(
+            f"agg:{measure}", None, e,
+            lambda idx, pool, _c: execute_agg(
+                idx, measure, e, backend=self.backend, pool=pool))
+        val = measures_mod.finalize_scalar(op, agg)
+        return {"select": op, "measure": measure, "value": val,
+                "count": int(agg[1]), "cached": cached}
+
+    def _group_agg_one(self, op: str, measure: Optional[str], by,
+                       e: Optional[Expr]) -> Dict:
+        """Grouped aggregate over 1-2 columns; ``measure=None`` is the
+        multi-column count.  The value matrix is row-major nested lists
+        (shape ``[card(a)]`` or ``[card(a), card(b)]``); empty avg/min/max
+        cells serialize as null."""
+        agg, cached = self._agg_cached(
+            f"gagg:{op}:{measure}", list(by), e,
+            lambda idx, pool, cs: execute_group_agg(
+                idx, measure, list(cs), e, backend=self.backend, pool=pool))
+        shape = list(agg["shape"])
+
+        def nest(flat):
+            a = np.asarray(flat).reshape(shape)
+            return a.tolist()
+
+        out = {"select": "group_agg", "op": op, "measure": measure,
+               "by": list(by), "shape": shape,
+               "counts": nest(agg["counts"]), "cached": cached}
+        if op != "count":
+            out["values"] = nan_to_none(
+                nest(measures_mod.finalize_group(op, agg)))
+        return out
+
+    def _top_k_one(self, col, k: int, e: Optional[Expr],
+                   measure: Optional[str] = None) -> Dict:
+        if measure is None:
+            out = self._group_count_one(col, e)
+            top = top_k_from_counts(np.asarray(out["counts"]), k)
+            return {"select": "top_k", "col": col, "k": int(k),
+                    "measure": None, "top": [[v, c] for v, c in top],
+                    "cached": out["cached"]}
+
+        # rank by SUM(measure): sharded indexes run the shard-pruned
+        # two-phase protocol; monolithic/live fall back to the full
+        # grouped sum (one vector — nothing to prune)
+        def compute(idx, pool, c):
+            if isinstance(idx, ShardedIndex):
+                return idx.top_k(c, k, e, measure=measure,
+                                 backend=self.backend, pool=pool)
+            agg = execute_group_agg(idx, measure, [c], e,
+                                    backend=self.backend, pool=pool)
+            vals = measures_mod.finalize_group("sum", agg)
+            return top_k_from_values(np.asarray(vals),
+                                     np.asarray(agg["counts"]), k)
+
+        top, cached = self._agg_cached(
+            f"topk:{measure}:{int(k)}", col, e, compute)
         return {"select": "top_k", "col": col, "k": int(k),
-                "top": [[v, c] for v, c in top],
-                "cached": out["cached"]}
+                "measure": measure,
+                "top": [[int(r), (int(v) if isinstance(v, (int, np.integer))
+                                  else float(v))] for r, v in top],
+                "cached": cached}
 
     def count(self, where=None) -> Dict:
         e = parse_expr(where) if isinstance(where, dict) else where
@@ -672,18 +1000,44 @@ class QueryService:
         e = parse_expr(where) if isinstance(where, dict) else where
         return self._pool.submit(self._group_count_one, col, e).result()
 
-    def top_k(self, col, k: int, where=None) -> Dict:
+    def top_k(self, col, k: int, where=None, measure=None) -> Dict:
         e = parse_expr(where) if isinstance(where, dict) else where
-        return self._pool.submit(self._top_k_one, col, k, e).result()
+        return self._pool.submit(self._top_k_one, col, k, e,
+                                 measure).result()
+
+    def agg(self, op: str, measure: str, where=None) -> Dict:
+        """Scalar sum/avg/min/max of a measure under an optional filter."""
+        e = parse_expr(where) if isinstance(where, dict) else where
+        return self._pool.submit(self._agg_one, op, measure, e).result()
+
+    def group_agg(self, op: str, measure: Optional[str], by,
+                  where=None) -> Dict:
+        """Grouped sum/avg/min/max/count over 1-2 columns."""
+        e = parse_expr(where) if isinstance(where, dict) else where
+        return self._pool.submit(self._group_agg_one, op, measure,
+                                 list(by), e).result()
+
+    def sql(self, text: str) -> Dict:
+        """Execute one SQL-ish statement (see ``parse_sql``)."""
+        return self.statement(parse_sql(text))
 
     def statement(self, obj: Dict) -> Dict:
         """Execute one ``{"select": ..., "where": ...}`` wire statement."""
-        kind, col, k, e = parse_statement(obj)
+        st = parse_statement(obj)
+        kind, e = st["kind"], st["where"]
         if kind == "count":
             return self._pool.submit(self._count_one, e).result()
         if kind == "group_count":
-            return self._pool.submit(self._group_count_one, col, e).result()
-        return self._pool.submit(self._top_k_one, col, k, e).result()
+            return self._pool.submit(self._group_count_one,
+                                     st["col"], e).result()
+        if kind == "agg":
+            return self._pool.submit(self._agg_one, st["op"],
+                                     st["measure"], e).result()
+        if kind == "group_agg":
+            return self._pool.submit(self._group_agg_one, st["op"],
+                                     st["measure"], st["by"], e).result()
+        return self._pool.submit(self._top_k_one, st["col"], st["k"], e,
+                                 st["measure"]).result()
 
     def stats(self) -> Dict:
         from repro.core.ingest import LiveIndex
@@ -700,6 +1054,7 @@ class QueryService:
             "cards": [idx.card(c) for c in range(n_cols)],
             "pool_workers": self.pool_workers,
             "cache": self.cache.stats(),
+            "measures": sorted(getattr(idx, "measure_names", []) or []),
         }
         sharded = idx
         if isinstance(idx, LiveIndex):
@@ -843,7 +1198,9 @@ class _Handler(BaseHTTPRequestHandler):
             self._send(200, self.service.scrub())
             return
         if self.path == "/ingest":
-            self._send(200, self.service.ingest(self._body().get("rows")))
+            req = self._body()
+            self._send(200, self.service.ingest(req.get("rows"),
+                                                req.get("measures")))
             return
         if self.path == "/delete":
             self._send(200, self.service.delete(self._body().get("where")))
@@ -862,7 +1219,9 @@ class _Handler(BaseHTTPRequestHandler):
         if self.path != "/query":
             raise _HTTPError(404, "not_found", f"unknown path {self.path}")
         req = self._body()
-        if "select" in req:
+        if "sql" in req:
+            self._send(200, self.service.statement(parse_sql(req["sql"])))
+        elif "select" in req:
             self._send(200, self.service.statement(req))
         elif "queries" in req:
             if not isinstance(req["queries"], list):

@@ -17,6 +17,14 @@ Operations (request ``{"op": ...}``, one response frame per request):
   per-shard row counts.
 * ``gcount``   — ``+ {"col": int}`` -> per-shard int64 count vectors
   (binary section).
+* ``agg``      — ``+ {"measure": str}`` -> per-shard ``[sum, count, min,
+  max]`` scalar measure partials (JSON; ``min``/``max`` null when the
+  shard's filtered slice is empty).
+* ``gagg``     — ``+ {"measure": str|null, "cols": [int, ...]}`` -> per-
+  shard grouped-aggregate partials: a ``gc<i>`` counts array per shard
+  (binary section) plus ``gs<i>``/``gm<i>``/``gx<i>`` sum/min/max arrays
+  when a measure is named, with the group ``shape`` in the JSON object.
+  ``measure=null`` computes multi-column counts only.
 * ``execute``  — per-shard EWAH result words (binary section) + bit widths.
 * ``health``   — liveness probe: pid, held shards, generation.
 * ``assign``   — mmap-open additional shards (coordinator re-placement
@@ -61,7 +69,7 @@ from repro.distributed import wire
 WORKER_CACHE_ENTRIES = 64
 WORKER_CACHE_BYTES = 16 << 20
 
-_DATA_OPS = ("count", "gcount", "execute")
+_DATA_OPS = ("count", "gcount", "agg", "gagg", "execute")
 
 
 class ShardWorker:
@@ -247,6 +255,52 @@ class ShardWorker:
                     missing.append(i)
                     continue
                 arrs[f"g{i}"] = np.asarray(vec, dtype=np.int64)
+        elif op == "agg":
+            name = obj.get("measure")
+            if not isinstance(name, str):
+                raise ValueError(f"agg needs a 'measure' name, got {name!r}")
+            aggs = {}
+            for i in sids:
+                try:
+                    part = self._run(i, ("agg", name, e),
+                                     ("agg", name, self.backend, ck))
+                except KeyError:
+                    missing.append(i)
+                    continue
+                s, cnt, mn, mx = part
+                aggs[str(i)] = [s, cnt, mn, mx]
+            out["aggs"] = aggs
+        elif op == "gagg":
+            name = obj.get("measure")
+            if name is not None and not isinstance(name, str):
+                raise ValueError(f"gagg 'measure' must be a name or null, "
+                                 f"got {name!r}")
+            cols = obj.get("cols")
+            if (not isinstance(cols, list) or not (1 <= len(cols) <= 2)
+                    or not all(isinstance(c, int) for c in cols)):
+                raise ValueError(f"gagg needs 'cols' as a list of 1-2 "
+                                 f"integer columns, got {cols!r}")
+            cols = tuple(cols)
+            shapes = {}
+            dtype = None
+            for i in sids:
+                try:
+                    g = self._run(i, ("gagg", name, cols, e),
+                                  ("gagg", name, cols, self.backend, ck))
+                except KeyError:
+                    missing.append(i)
+                    continue
+                shapes[str(i)] = list(g["shape"])
+                dtype = g["dtype"]
+                arrs[f"gc{i}"] = np.asarray(g["counts"], dtype=np.int64)
+                if name is not None:
+                    arrs[f"gs{i}"] = np.asarray(g["sums"])
+                    arrs[f"gm{i}"] = np.asarray(g["mins"])
+                    arrs[f"gx{i}"] = np.asarray(g["maxs"])
+            out["shapes"] = shapes
+            out["cols"] = list(cols)
+            out["measure"] = name
+            out["dtype"] = dtype
         else:  # execute
             n_bits = {}
             for i in sids:

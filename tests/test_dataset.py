@@ -294,12 +294,13 @@ def test_http_statement_roundtrip(tables):
 
 
 def test_parse_statement():
-    kind, c, k, e = parse_statement(
+    st = parse_statement(
         {"select": {"top_k": {"col": "day", "k": 7}},
          "where": {"op": "eq", "col": 0, "value": 1}})
-    assert (kind, c, k) == ("top_k", "day", 7)
-    assert e == (col(0) == 1)
-    assert parse_statement({"select": {"count": True}})[0] == "count"
+    assert (st["kind"], st["col"], st["k"]) == ("top_k", "day", 7)
+    assert st["measure"] is None
+    assert st["where"] == (col(0) == 1)
+    assert parse_statement({"select": {"count": True}})["kind"] == "count"
     for bad in ({}, {"select": []}, {"select": {"count": True, "x": 1}},
                 # bool is a subclass of int: a typo'd copy of the count
                 # shape must not resolve to column 1

@@ -647,3 +647,137 @@ def test_scrub_http_endpoint(sharded_dir):
     finally:
         srv.shutdown()
         svc.close()
+
+
+# ---------------------------------------------------------------------------
+# v4 measure sidecar: round trip, corruption rejection, version discipline.
+# ---------------------------------------------------------------------------
+
+def _measured_index(n=6000, seed=5):
+    from repro.core.dataset import _attach_measures
+    table, cards = make_table(n, seed)
+    rng = np.random.default_rng(seed)
+    sales = rng.integers(0, 10_000, len(table)).astype(np.int64)
+    price = rng.random(len(table)) * 9.5
+    idx = BitmapIndex.build(table, k=2, cards=cards, partition_rows=2048,
+                            column_names=NAMES)
+    _attach_measures(idx, {"sales": sales, "price": price})
+    return table, idx, sales, price
+
+
+def test_measure_sidecar_round_trip(tmp_path):
+    from repro.core.store import VERSION_MEASURES, _PREAMBLE as PRE
+    table, idx, sales, price = _measured_index()
+    path = str(tmp_path / "m.ridx")
+    save(idx, path)
+    with open(path, "rb") as f:
+        _, version, *_ = PRE.unpack(f.read(PRE.size))
+    assert version == VERSION_MEASURES
+    for mmap_mode in (True, False):
+        re = load(path, mmap=mmap_mode)
+        assert sorted(re.measure_names) == ["price", "sales"]
+        assert np.array_equal(np.asarray(re.measure("sales")), sales)
+        assert np.array_equal(np.asarray(re.measure("price")), price)
+    # mmap'd sidecar views are zero-copy and read-only
+    arr = load(path, mmap=True).measure("sales")
+    assert isinstance(arr, np.memmap) or not arr.flags.writeable
+
+
+def test_measure_free_build_stays_pre_v4(tmp_path):
+    from repro.core.store import VERSION_MEASURES, _PREAMBLE as PRE
+    table, cards = make_table(3000, 2)
+    idx = BitmapIndex.build(table, k=2, cards=cards, column_names=NAMES)
+    path = str(tmp_path / "plain.ridx")
+    save(idx, path)
+    with open(path, "rb") as f:
+        _, version, _, off, ln, _ = PRE.unpack(f.read(PRE.size))
+        f.seek(off)
+        meta = json.loads(f.read(ln).decode())
+    assert version < VERSION_MEASURES
+    assert "measures" not in meta
+    # and saving the same index twice is byte-identical (deterministic)
+    path2 = str(tmp_path / "plain2.ridx")
+    save(idx, path2)
+    with open(path, "rb") as a, open(path2, "rb") as b:
+        assert a.read() == b.read()
+
+
+def _rewrite_header(path, mutate):
+    """Re-JSON the header with ``mutate`` applied and a *valid* CRC, so the
+    corruption under test is the semantic cross-check, not the checksum."""
+    import zlib
+
+    from repro.core.store import _PREAMBLE as PRE
+    with open(path, "r+b") as f:
+        magic, version, flags, off, ln, _ = PRE.unpack(f.read(PRE.size))
+        f.seek(off)
+        meta = json.loads(f.read(ln).decode())
+        mutate(meta)
+        hdr = json.dumps(meta).encode()
+        f.seek(off)
+        f.write(hdr)
+        f.truncate(off + len(hdr))
+        f.seek(0)
+        f.write(PRE.pack(magic, version, flags, off, len(hdr),
+                         zlib.crc32(hdr) & 0xFFFFFFFF))
+
+
+def test_measure_row_count_mismatch_rejected(tmp_path):
+    """Satellite: a v4 file whose measure TOC row count disagrees with the
+    bitmap row count must be refused, not silently mis-sliced."""
+    _table, idx, _sales, _price = _measured_index()
+    path = str(tmp_path / "bad.ridx")
+    save(idx, path)
+
+    def shrink_partition(meta):
+        meta["measures"]["sales"]["toc"][0][1] -= 1
+
+    _rewrite_header(path, shrink_partition)
+    with pytest.raises(StoreCorruptError, match="sidecar disagrees"):
+        load(path, mmap=True)
+
+    save(idx, path)
+
+    def drop_partition(meta):
+        meta["measures"]["sales"]["toc"].pop()
+
+    _rewrite_header(path, drop_partition)
+    with pytest.raises(StoreCorruptError):
+        load(path, mmap=True)
+
+
+def test_measure_payload_corruption_detected(tmp_path):
+    _table, idx, _sales, _price = _measured_index()
+    path = str(tmp_path / "flip.ridx")
+    save(idx, path)
+    # flip a byte inside the sidecar (after every bitmap segment): the
+    # verifying load refuses it and scrub attributes it to the measure
+    size = os.path.getsize(path)
+    from repro.core.store import _PREAMBLE as PRE
+    with open(path, "r+b") as f:
+        _, _, _, hdr_off, _, _ = PRE.unpack(f.read(PRE.size))
+        f.seek(hdr_off - 16)  # sidecar is the tail of the payload
+        byte = f.read(1)
+        f.seek(hdr_off - 16)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    with pytest.raises(StoreCorruptError):
+        load(path, mmap=False)
+    rep = scrub(path)
+    assert rep["ok"] is False
+    assert any("measure" in c for c in rep["corrupt"])
+
+
+def test_sharded_measure_round_trip_and_scrub(tmp_path):
+    from repro.core.dataset import _attach_measures
+    table, cards = make_table(8000, 4)
+    rng = np.random.default_rng(4)
+    sales = rng.integers(0, 500, len(table)).astype(np.int64)
+    sh = ShardedIndex.build(table, shard_rows=2048, k=2, cards=cards,
+                            column_names=NAMES)
+    _attach_measures(sh, {"sales": sales})
+    d = str(tmp_path / "mshards")
+    sh.save(d)
+    re = load_sharded(d)
+    got = np.concatenate([np.asarray(s.measure("sales")) for s in re.shards])
+    assert np.array_equal(got, sales)
+    assert scrub_sharded(d)["ok"] is True
